@@ -1,0 +1,120 @@
+"""Shared benchmark utilities: timing, result records, synthetic references.
+
+Quality metrics on the synthetic corpora (offline stand-ins — DESIGN.md §7):
+ROUGE-2 against a reference built from the generator's own topic structure,
+and windowed F1 for video frame summaries.  Absolute values are not
+comparable to the paper's (different corpora); the *relationships* the paper
+claims (SS ≈ greedy ≫ sieve at a fraction of greedy's cost) are.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """Returns (result, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def bigrams(tokens) -> set:
+    t = list(tokens)
+    return set(zip(t[:-1], t[1:]))
+
+
+def rouge2(candidate_docs, reference_docs) -> float:
+    """ROUGE-2 recall: fraction of reference bigrams covered."""
+    ref = set()
+    for d in reference_docs:
+        ref |= bigrams(d)
+    if not ref:
+        return 0.0
+    cand = set()
+    for d in candidate_docs:
+        cand |= bigrams(d)
+    return len(ref & cand) / len(ref)
+
+
+def rouge2_f1(candidate_docs, reference_docs) -> float:
+    ref = set()
+    for d in reference_docs:
+        ref |= bigrams(d)
+    cand = set()
+    for d in candidate_docs:
+        cand |= bigrams(d)
+    if not ref or not cand:
+        return 0.0
+    inter = len(ref & cand)
+    p, r = inter / len(cand), inter / len(ref)
+    return 0.0 if p + r == 0 else 2 * p * r / (p + r)
+
+
+def frame_f1(selected, reference, n_frames: int, window: int = 16) -> float:
+    """Windowed F1 between two frame-index summaries (SumMe-style voting
+    tolerance: a selected frame matches a reference frame within ±window)."""
+    sel = np.asarray(sorted(set(int(i) for i in selected)))
+    ref = np.asarray(sorted(set(int(i) for i in reference)))
+    if len(sel) == 0 or len(ref) == 0:
+        return 0.0
+    hit_sel = np.zeros(len(sel), bool)
+    hit_ref = np.zeros(len(ref), bool)
+    j = 0
+    for i, s in enumerate(sel):
+        dists = np.abs(ref - s)
+        k = int(np.argmin(dists))
+        if dists[k] <= window:
+            hit_sel[i] = True
+            hit_ref[k] = True
+    p = hit_sel.mean()
+    r = hit_ref.mean()
+    return 0.0 if p + r == 0 else float(2 * p * r / (p + r))
+
+
+class TopicNews:
+    """Token-level synthetic news day with known topic structure, for
+    ROUGE-scored summarization benchmarks (fig. 3 analogue)."""
+
+    def __init__(self, seed: int, n_sentences: int, vocab: int = 2048,
+                 n_topics: int = 10, sent_len: int = 18):
+        rng = np.random.default_rng(seed)
+        self.topics = rng.dirichlet(np.full(vocab, 0.03), size=n_topics)
+        weights = rng.dirichlet(np.ones(n_topics) * 0.5)
+        self.assign = rng.choice(n_topics, size=n_sentences, p=weights)
+        self.docs = np.stack([
+            rng.choice(vocab, size=sent_len, p=self.topics[t])
+            for t in self.assign
+        ])
+        # reference summary: per major topic, the sentence with max topic prob
+        counts = np.bincount(self.assign, minlength=n_topics)
+        major = np.argsort(-counts)[: max(3, n_topics // 3)]
+        refs = []
+        for t in major:
+            idx = np.where(self.assign == t)[0]
+            scores = [self.topics[t][self.docs[i]].sum() for i in idx]
+            refs.append(self.docs[idx[int(np.argmax(scores))]])
+        self.reference = refs
+
+    def features(self, n_features: int = 1024):
+        from repro.data import hashed_features
+
+        return hashed_features(self.docs, n_features=n_features, ngram=2)

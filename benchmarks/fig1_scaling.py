@@ -1,0 +1,61 @@
+"""Paper Figure 1: utility f(S) and wall time vs ground-set size n, for
+lazy greedy, sieve-streaming, and SS(+greedy).  Synthetic NYT-like corpus.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, timed
+from repro.core import FeatureCoverage, greedy, lazy_greedy, sieve_streaming
+from repro.core.sparsify import ss_sparsify
+from repro.data import news_day
+
+K = 10
+R, C = 8, 8.0
+
+
+def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0) -> dict:
+    rows = []
+    key = jax.random.PRNGKey(seed)
+    for n in sizes:
+        W = jnp.asarray(news_day(seed + n, n, n_features))
+        fn = FeatureCoverage(W=W, phi="sqrt")
+
+        res_g, t_g = timed(lambda: jax.block_until_ready(greedy(fn, K)))
+        _, t_lazy = timed(lambda: lazy_greedy(fn, K))
+
+        def run_ss():
+            ss = ss_sparsify(fn, key, r=R, c=C)
+            out = greedy(fn, K, alive=ss.vprime)
+            return jax.block_until_ready(out), ss
+
+        (res_ss, ss), t_ss = timed(run_ss)
+        res_sv, t_sv = timed(
+            lambda: jax.block_until_ready(sieve_streaming(fn, K))
+        )
+
+        fg = float(res_g.value)
+        rows.append({
+            "n": int(n),
+            "f_greedy": fg,
+            "rel_ss": float(res_ss.value) / fg,
+            "rel_sieve": float(res_sv.value) / fg,
+            "vprime": int(jnp.sum(ss.vprime)),
+            "t_greedy_s": t_g,
+            "t_lazy_s": t_lazy,
+            "t_ss_s": t_ss,
+            "t_sieve_s": t_sv,
+        })
+        print(f"fig1 n={n:6d} rel_ss={rows[-1]['rel_ss']:.4f} "
+              f"rel_sieve={rows[-1]['rel_sieve']:.4f} |V'|={rows[-1]['vprime']:5d} "
+              f"t(greedy/lazy/ss/sieve)="
+              f"{t_g:.2f}/{t_lazy:.2f}/{t_ss:.2f}/{t_sv:.2f}s", flush=True)
+    save("fig1_scaling", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,123 @@
+"""Pallas kernel microbench: correctness (interpret mode vs jnp oracle) plus
+the roofline-derived TPU expectations for the two SS hot-spot kernels.
+
+On this CPU container the kernels cannot be *timed* on real hardware; we
+(1) verify interpret-mode output against the oracle on a shape sweep and
+(2) report each kernel's arithmetic intensity and the v5e-roofline time its
+BlockSpec tiling implies, next to the measured wall time of the jnp
+reference path (the thing the kernel replaces)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, timed
+from repro.kernels import ops
+from repro.kernels.ref import feature_gains_ref, ss_divergence_ref
+from repro.kernels.feature_gains import feature_gains_kernel
+from repro.kernels.ss_weights import ss_divergence_kernel
+from repro.launch.mesh import HW
+
+
+def run(seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for (n, F, r) in [(2048, 512, 64), (4096, 1024, 96), (8192, 512, 104)]:
+        W = jax.random.uniform(key, (n, F))
+        CU = jax.random.uniform(jax.random.fold_in(key, 1), (r, F))
+        phi_cu = jnp.sum(jnp.sqrt(CU), axis=-1)
+        resid = jax.random.uniform(jax.random.fold_in(key, 2), (r,))
+
+        ref, t_ref = timed(lambda: jax.block_until_ready(
+            ss_divergence_ref(W, CU, phi_cu, resid, None, "sqrt")))
+        out, t_int = timed(lambda: jax.block_until_ready(
+            ss_divergence_kernel(W, CU, phi_cu, resid, None,
+                                 phi="sqrt", interpret=True)))
+        err = float(jnp.max(jnp.abs(ref - out)))
+
+        # roofline for the kernel's HBM traffic: one read of W + CU + out
+        bytes_moved = (n * F + r * F + n) * 4
+        flops = 2.0 * r * n * F            # add + sqrt per (probe, cand, feat)
+        t_mem = bytes_moved / HW["hbm_bw"]
+        t_cmp = flops / HW["peak_flops_bf16"]
+        rows.append({
+            "kernel": "ss_divergence", "n": n, "F": F, "r": r,
+            "max_err": err, "t_jnp_cpu_s": t_ref, "t_interp_s": t_int,
+            "tpu_bytes": bytes_moved, "tpu_flops": flops,
+            "tpu_roofline_s": max(t_mem, t_cmp),
+            "arithmetic_intensity": flops / bytes_moved,
+        })
+        print(f"kernel ss_divergence n={n} F={F} r={r} err={err:.2e} "
+              f"cpu_ref={t_ref*1e3:.1f}ms tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs",
+              flush=True)
+
+    for (n, F) in [(4096, 512), (16384, 1024)]:
+        W = jax.random.uniform(key, (n, F))
+        c = jax.random.uniform(jax.random.fold_in(key, 3), (F,))
+        phic = jnp.sum(jnp.sqrt(c))
+        ref, t_ref = timed(lambda: jax.block_until_ready(
+            feature_gains_ref(W, c, phic, None, "sqrt")))
+        out, _ = timed(lambda: jax.block_until_ready(
+            feature_gains_kernel(W, c, phic, None, phi="sqrt", interpret=True)))
+        err = float(jnp.max(jnp.abs(ref - out)))
+        bytes_moved = (n * F + F + n) * 4
+        flops = 2.0 * n * F
+        rows.append({
+            "kernel": "feature_gains", "n": n, "F": F,
+            "max_err": err, "t_jnp_cpu_s": t_ref,
+            "tpu_bytes": bytes_moved, "tpu_flops": flops,
+            "tpu_roofline_s": max(bytes_moved / HW["hbm_bw"],
+                                  flops / HW["peak_flops_bf16"]),
+            "arithmetic_intensity": flops / bytes_moved,
+        })
+        print(f"kernel feature_gains n={n} F={F} err={err:.2e} "
+              f"cpu_ref={t_ref*1e3:.1f}ms", flush=True)
+    save("kernel_bench", rows)
+    return {"rows": rows}
+
+
+def run_flash(seed: int = 0) -> dict:
+    """flash_attention kernel: correctness + v5e roofline of its tiling vs
+    the XLA blockwise path's HBM-resident intermediates."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    rows = []
+    for (BH, S, hd) in [(8, 512, 128), (4, 1024, 128)]:
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (BH, S, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (BH, S, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (BH, S, hd), jnp.float32)
+        ref, t_ref = timed(lambda: jax.block_until_ready(
+            flash_attention_ref(q, k, v)))
+        out, _ = timed(lambda: jax.block_until_ready(
+            flash_attention(q, k, v, bq=256, bk=256, interpret=True)))
+        err = float(jnp.max(jnp.abs(out - ref)))
+        # kernel HBM traffic: q+k+v read + out write (causal ~half the flops)
+        io_bytes = 4 * BH * S * hd * 4
+        flops = 2 * 2 * BH * S * S * hd / 2
+        # XLA path additionally round-trips every (bq, bk) f32 score tile +
+        # softmax temps: >= 3 extra writes/reads of S*S scores per head
+        xla_extra = 3 * BH * S * S * 4
+        rows.append({
+            "kernel": "flash_attention", "BH": BH, "S": S, "hd": hd,
+            "max_err": err, "t_jnp_cpu_s": t_ref,
+            "tpu_bytes_kernel": io_bytes,
+            "tpu_bytes_xla_path": io_bytes + xla_extra,
+            "hbm_traffic_reduction": (io_bytes + xla_extra) / io_bytes,
+            "tpu_roofline_s": max(io_bytes / HW["hbm_bw"],
+                                  flops / HW["peak_flops_bf16"]),
+        })
+        print(f"kernel flash_attention BH={BH} S={S} hd={hd} err={err:.2e} "
+              f"hbm_reduction={rows[-1]['hbm_traffic_reduction']:.1f}x",
+              flush=True)
+    save("kernel_flash", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()
+    run_flash()

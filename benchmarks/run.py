@@ -1,0 +1,51 @@
+"""Benchmark aggregator: one entry per paper table/figure + the beyond-paper
+extras.  ``PYTHONPATH=src python -m benchmarks.run [--quick]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (data_selection, fig1_scaling, fig2_reduced_size,
+                            fig3_news, kernel_bench, table2_video)
+
+    jobs = {
+        "fig1": lambda: fig1_scaling.run(
+            sizes=(512, 1024, 2048) if args.quick
+            else (512, 1024, 2048, 4096, 8192)),
+        "fig2": lambda: fig2_reduced_size.run(
+            n=1024 if args.quick else 4096,
+            rs=tuple(range(2, 13, 4)) if args.quick else tuple(range(2, 21, 2))),
+        "fig3": lambda: fig3_news.run(days=4 if args.quick else 16),
+        "table2": lambda: table2_video.run(
+            scale=0.08 if args.quick else 0.25),
+        "kernels": kernel_bench.run,
+        "kernels_flash": kernel_bench.run_flash,
+        "data_selection": data_selection.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    t00 = time.time()
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} {'='*50}", flush=True)
+        t0 = time.time()
+        job()
+        print(f"=== {name} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"\nall benchmarks done in {time.time()-t00:.1f}s "
+          f"(results under results/bench/)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

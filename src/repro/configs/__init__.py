@@ -1,0 +1,107 @@
+"""Architecture registry: ``get(arch_id)`` / ``smoke(arch_id)`` /
+``input_specs(cfg, shape)``.
+
+Every assigned architecture is a module in this package exposing ``CONFIG``
+(the exact published dims) and ``SMOKE`` (a reduced same-family variant for
+CPU tests).  ``input_specs`` builds the ShapeDtypeStruct stand-ins that the
+multi-pod dry-run lowers against — weak-type-correct, shardable, and never
+allocated.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig, cell_supported
+
+_MODULES = {
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-780m": "mamba2_780m",
+    "musicgen-large": "musicgen_large",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-4b": "qwen3_4b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen2-7b": "qwen2_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def input_specs(cfg: ModelConfig, shp: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    train  -> {tokens, labels[, patches]}
+    prefill-> {tokens[, patches]}
+    decode -> {tokens}  (cache/cache_len specs come from models.abstract_cache)
+    """
+    B, S = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+    tok_shape = {
+        "tokens": (B, S) if cfg.num_codebooks == 1 else (B, S, cfg.num_codebooks),
+        "decode": (B, 1) if cfg.num_codebooks == 1 else (B, 1, cfg.num_codebooks),
+    }
+    sds = jax.ShapeDtypeStruct
+    if shp.kind == "train":
+        specs = {
+            "tokens": sds(tok_shape["tokens"], i32),
+            "labels": sds(tok_shape["tokens"], i32),
+        }
+        if cfg.input_mode == "tokens+patches":
+            specs["patches"] = sds(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shp.kind == "prefill":
+        specs = {"tokens": sds(tok_shape["tokens"], i32)}
+        if cfg.input_mode == "tokens+patches":
+            specs["patches"] = sds(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shp.kind == "decode":
+        return {"tokens": sds(tok_shape["decode"], i32)}
+    raise ValueError(shp.kind)
+
+
+def all_cells():
+    """Every (arch, shape) pair with its supported/skip status."""
+    for arch in ARCHS:
+        cfg = get(arch)
+        for sname, shp in SHAPES.items():
+            ok, why = cell_supported(cfg, shp)
+            yield arch, sname, ok, why
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "get",
+    "smoke",
+    "shape",
+    "input_specs",
+    "all_cells",
+]

@@ -1,0 +1,41 @@
+"""Core reproduction of "Scaling Submodular Maximization via Pruned
+Submodularity Graphs": objectives, the submodularity graph, SS (Algorithm 1),
+and the greedy / streaming baselines."""
+
+from repro.core.functions import FacilityLocation, FeatureCoverage
+from repro.core.graph import divergence, edge_weights, full_edge_matrix
+from repro.core.greedy import (
+    GreedyResult,
+    bidirectional_greedy,
+    greedy,
+    lazy_greedy,
+    stochastic_greedy,
+)
+from repro.core.sieve import SieveResult, sieve_streaming
+from repro.core.sparsify import (
+    SSResult,
+    preprune_mask,
+    probe_count,
+    ss_sparsify,
+    summarize,
+)
+
+__all__ = [
+    "FacilityLocation",
+    "FeatureCoverage",
+    "divergence",
+    "edge_weights",
+    "full_edge_matrix",
+    "GreedyResult",
+    "bidirectional_greedy",
+    "greedy",
+    "lazy_greedy",
+    "stochastic_greedy",
+    "SieveResult",
+    "sieve_streaming",
+    "SSResult",
+    "preprune_mask",
+    "probe_count",
+    "ss_sparsify",
+    "summarize",
+]

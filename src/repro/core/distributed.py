@@ -1,0 +1,228 @@
+"""Distributed Submodular Sparsification: shard_map over the data axis.
+
+This realizes the paper's "per-iteration computation ... is small and highly
+parallelizable" claim on a TPU mesh.  The ground set's feature rows are
+sharded over ``data``; each SS round is:
+
+  1. **distributed probe sampling** — every device draws Gumbel scores for its
+     live rows, proposes its local top-m, all-gathers the (m, F) candidate
+     rows + scores, and takes the global top-m.  (Gumbel top-k == uniform
+     sampling without replacement, so this is exactly Algorithm 1's sampler.)
+  2. **local divergence** — the (m, F) probe block is tiny and replicated;
+     each device computes w_{U,v} for its own rows only: the (m, n_local, F)
+     contraction is embarrassingly parallel, as the paper promises.
+  3. **distributed quantile prune** — instead of a global sort, a fixed-bin
+     histogram of live divergences is psum'd and the (1 - 1/sqrt(c))-quantile
+     threshold read off it.  We prune *at most* that fraction (the bin edge
+     rounds down), preserving Proposition 4's safety direction.
+  4. masks update locally; the loop is a ``lax.while_loop`` with fully static
+     shapes inside one ``shard_map``.
+
+**Hierarchical pod aggregation** (the composable-coreset pattern of paper
+§1.2, with SS in place of per-machine greedy): when the mesh has a ``pod``
+axis, every pod treats its own row range as a standalone ground set —
+collectives bind only the ``data`` axis — and the returned V' is the union of
+per-pod V' sets.  Cross-pod (DCN) traffic is zero during sparsification; only
+the final (tiny) reduced set crosses pods.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.functions import NEG, FeatureCoverage
+from repro.core.greedy import greedy
+from repro.core.sparsify import max_rounds, probe_count
+
+Array = jax.Array
+INF = -NEG
+
+
+def _phi(kind: str, c: Array) -> Array:
+    if kind == "sqrt":
+        return jnp.sqrt(jnp.maximum(c, 0.0))
+    if kind == "log1p":
+        return jnp.log1p(jnp.maximum(c, 0.0))
+    if kind == "linear":
+        return c
+    raise ValueError(kind)
+
+
+def ss_sparsify_sharded(
+    W: Array,                  # (n, F) nonnegative feature rows (sharded in)
+    key: Array,
+    mesh: Mesh,
+    *,
+    data_axis: str = "data",
+    pod_axis: str | None = None,
+    r: int = 8,
+    c: float = 8.0,
+    phi: str = "sqrt",
+    bins: int = 512,
+):
+    """Distributed Algorithm 1.  Returns (vprime (n,) bool, eps_hat scalar).
+
+    ``W`` may live on host or device; it is placed row-sharded over
+    (pod, data).  Each pod sparsifies its own row range independently
+    (collectives over ``data`` only); the result is the union mask.
+    """
+    n, F = W.shape
+    axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
+    nshards = 1
+    for a in axes:
+        nshards *= mesh.shape[a]
+    ndata = mesh.shape[data_axis]
+    npods = mesh.shape[pod_axis] if pod_axis else 1
+    assert n % nshards == 0, f"n={n} must divide {nshards} shards (pad rows)"
+    n_pod = n // npods                       # per-pod ground set size
+    m = min(probe_count(n_pod, r), n_pod)    # probes per round (per pod)
+    rounds_cap = max_rounds(n_pod, r, c)
+    shrink = 1.0 - 1.0 / math.sqrt(c)
+
+    in_spec = P(axes if len(axes) > 1 else axes[0], None)
+    W = jax.device_put(W, NamedSharding(mesh, in_spec))
+    keys = jax.random.split(key, npods)      # per-pod independent streams
+    keys_spec = P(pod_axis) if pod_axis else P()
+    if pod_axis:
+        keys = jax.device_put(keys, NamedSharding(mesh, keys_spec))
+    else:
+        keys = keys[0]
+
+    def kernel(W_loc: Array, key_loc: Array):
+        # W_loc: (n_local, F) — this device's rows.  All collectives bind
+        # data_axis only: pods run independently.
+        if pod_axis:
+            key_loc = key_loc[0]             # (1, 2) -> (2,)
+        n_loc = W_loc.shape[0]
+        didx = jax.lax.axis_index(data_axis)
+
+        # residual gains f(u | V\u) against the *pod* ground set
+        C = jax.lax.psum(jnp.sum(W_loc, axis=0), data_axis)       # (F,)
+        phiC = jnp.sum(_phi(phi, C))
+        residual = phiC - jnp.sum(_phi(phi, C[None, :] - W_loc), axis=-1)
+
+        def cond(carry):
+            alive, vprime, div, eps, k, rnd = carry
+            total = jax.lax.psum(jnp.sum(alive), data_axis)
+            return (total > m) & (rnd < rounds_cap)
+
+        def body(carry):
+            alive, vprime, div, eps, k, rnd = carry
+            k, k1 = jax.random.split(k)
+            # identical stream on every data shard; fold in the shard id for
+            # distinct local gumbel draws
+            g = (
+                jax.random.gumbel(jax.random.fold_in(k1, didx), (n_loc,))
+                + jnp.where(alive, 0.0, NEG)
+            )
+            loc_val, loc_idx = jax.lax.top_k(g, m)
+            loc_rows = W_loc[loc_idx]                         # (m, F)
+            all_val = jax.lax.all_gather(loc_val, data_axis).reshape(-1)
+            all_rows = jax.lax.all_gather(loc_rows, data_axis).reshape(-1, F)
+            top_val, top_pos = jax.lax.top_k(all_val, m)      # global top-m
+            probes = all_rows[top_pos]                        # (m, F)
+
+            # membership: my local row j became a probe iff its gumbel value
+            # is among the global top-m (values are a.s. distinct)
+            thresh_val = top_val[-1]
+            probe_hot = alive & (g >= thresh_val)
+            vprime = vprime | probe_hot
+            alive = alive & ~probe_hot
+
+            # local divergence w_{U, v} for my rows
+            CU = probes                                        # S=∅: state 0
+            phi_cu = jnp.sum(_phi(phi, CU), axis=-1)           # (m,)
+            both = CU[:, None, :] + W_loc[None, :, :]          # (m, n_loc, F)
+            pair = jnp.sum(_phi(phi, both), axis=-1) - phi_cu[:, None]
+            # residual of each probe: recompute from the gathered rows
+            resid_p = phiC - jnp.sum(_phi(phi, C[None, :] - CU), axis=-1)
+            w = pair - resid_p[:, None]                        # (m, n_loc)
+            div = jnp.minimum(div, jnp.min(w, axis=0))
+
+            # distributed quantile: histogram of live divergences
+            lo = jax.lax.pmin(
+                jnp.min(jnp.where(alive, div, INF)), data_axis
+            )
+            hi = jax.lax.pmax(
+                jnp.max(jnp.where(alive, div, -INF)), data_axis
+            )
+            width = jnp.maximum(hi - lo, 1e-9)
+            bidx = jnp.clip(
+                ((div - lo) / width * bins).astype(jnp.int32), 0, bins - 1
+            )
+            hist = jnp.zeros((bins,), jnp.int32).at[bidx].add(
+                alive.astype(jnp.int32)
+            )
+            hist = jax.lax.psum(hist, data_axis)
+            total = jnp.sum(hist)
+            target = jnp.floor(total * shrink).astype(jnp.int32)
+            cum = jnp.cumsum(hist)
+            # largest bin edge with cumulative count <= target (prune <= frac)
+            nbin = jnp.sum(cum <= target)                      # bins fully below
+            thresh = lo + width * nbin.astype(jnp.float32) / bins
+            removed = alive & (div < thresh)
+            eps = jnp.maximum(
+                eps, jax.lax.pmax(
+                    jnp.max(jnp.where(removed, div, NEG)), data_axis
+                )
+            )
+            alive = alive & ~removed
+            return (alive, vprime, div, eps, k, rnd + 1)
+
+        carry = (
+            jnp.ones((n_loc,), bool),
+            jnp.zeros((n_loc,), bool),
+            jnp.full((n_loc,), INF),
+            jnp.float32(NEG),
+            key_loc,
+            jnp.int32(0),
+        )
+        alive, vprime, div, eps, _, rnd = jax.lax.while_loop(cond, body, carry)
+        vprime = vprime | alive
+        eps = jnp.maximum(eps, 0.0)
+        return vprime, (eps[None] if pod_axis else eps)
+
+    out_mask_spec = P(axes if len(axes) > 1 else axes[0])
+    eps_spec = P(pod_axis) if pod_axis else P()
+    fn = jax.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(in_spec, keys_spec),
+        out_specs=(out_mask_spec, eps_spec),
+        axis_names=set(axes),
+        check_vma=False,
+    )
+    vprime, eps = fn(W, keys)
+    eps_hat = jnp.max(eps) if pod_axis else eps
+    return vprime, eps_hat
+
+
+def summarize_sharded(
+    W: Array,
+    k: int,
+    key: Array,
+    mesh: Mesh,
+    *,
+    data_axis: str = "data",
+    pod_axis: str | None = None,
+    r: int = 8,
+    c: float = 8.0,
+    phi: str = "sqrt",
+):
+    """End-to-end distributed pipeline: sharded SS -> greedy on the union V'.
+
+    The greedy stage sees only |V'| = O(log² n) rows — it runs on the full
+    (replicated) objective like the paper's final stage.  Returns
+    (selected (k,) indices into the original ground set, f(S), vprime mask).
+    """
+    vprime, eps = ss_sparsify_sharded(
+        W, key, mesh, data_axis=data_axis, pod_axis=pod_axis, r=r, c=c, phi=phi
+    )
+    fn = FeatureCoverage(W=jnp.asarray(W), phi=phi)
+    res = greedy(fn, k, alive=jnp.asarray(vprime))
+    return res.selected, res.value, vprime, eps

@@ -1,0 +1,99 @@
+"""The submodularity graph G(V, E, w) of Definition 1 and its divergences.
+
+Edge weight (paper Eq. 3):        w_{u->v}   = f(v|u)   - f(u | V \\ u)
+Conditional weight (paper Eq. 4): w_{u->v|S} = f(v|S+u) - f(u | V \\ u)
+Divergence (Definition 2):        w_{V',v}   = min_{x in V'} w_{x->v}
+
+Everything is computed in dense (r, n) blocks against a set of *probe* tail
+nodes — the full n(n-1) graph is never materialized (that is the whole point
+of the paper).  ``residual_gains`` ( = f(u|V\\u) for every u ) is computed once
+and reused, exactly as the paper notes it can be ("may be precomputed once in
+linear time").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import NEG, SubmodularFunction
+
+Array = jax.Array
+
+
+def edge_weights(
+    fn: SubmodularFunction,
+    probes: Array,
+    residual: Array | None = None,
+    state: Array | None = None,
+) -> Array:
+    """Weights w_{u->v|S} for all probe tails u (r,) x all heads v.  Shape (r, n).
+
+    ``residual`` is the precomputed f(u|V\\u) vector over the *full* ground set
+    (n,); pass it to avoid recomputation across SS rounds.
+    """
+    if residual is None:
+        residual = fn.residual_gains()
+    pair = fn.pairwise_gains(probes, state)          # (r, n):  f(v | S + u)
+    return pair - residual[probes][:, None]
+
+
+def divergence(
+    fn: SubmodularFunction,
+    probes: Array,
+    probe_mask: Array | None = None,
+    residual: Array | None = None,
+    state: Array | None = None,
+) -> Array:
+    """w_{U,v} = min_{u in U} w_{u->v|S} for all v.  Shape (n,).
+
+    ``probe_mask`` (r,) marks which probe slots are valid (static-shape
+    padding support); invalid probes are excluded from the min.
+    """
+    w = edge_weights(fn, probes, residual, state)    # (r, n)
+    if probe_mask is not None:
+        w = jnp.where(probe_mask[:, None], w, -NEG)  # +inf-ish: never the min
+    return jnp.min(w, axis=0)
+
+
+def divergence_update(
+    fn: SubmodularFunction,
+    current: Array,
+    probes: Array,
+    probe_mask: Array | None = None,
+    residual: Array | None = None,
+    state: Array | None = None,
+) -> Array:
+    """min(current, w_{U,v}) — incremental divergence as V' grows.
+
+    SS only ever needs the divergence against the *union* of all probe sets
+    sampled so far; maintaining a running min turns each round into one
+    (r, n) block instead of (|V'|, n).
+    """
+    return jnp.minimum(current, divergence(fn, probes, probe_mask, residual, state))
+
+
+def full_edge_matrix(fn: SubmodularFunction, state: Array | None = None) -> Array:
+    """All n x n edge weights (test/analysis only — O(n^2 F) memory/compute)."""
+    n = fn.n
+    return edge_weights(fn, jnp.arange(n), state=state)
+
+
+def check_triangle_inequality(W: Array, atol: float = 1e-4) -> Array:
+    """Max violation of Lemma 3:  w_vx <= w_vu + w_ux  over all *distinct*
+    (v, u, x).  (The lemma's proof needs u ∉ {v, x}: it uses (v+x) ⊆ V∖u.)
+
+    Returns max over valid triples of  w_vx - (w_vu + w_ux); should be
+    <= atol for any submodular f.  Test utility (O(n^3)).
+    """
+    n = W.shape[0]
+    # rhs[v, u, x] = W[v, u] + W[u, x]
+    rhs = W[:, :, None] + W[None, :, :]
+    lhs = W[:, None, :]
+    i = jnp.arange(n)
+    distinct = (
+        (i[:, None, None] != i[None, :, None])   # v != u
+        & (i[None, :, None] != i[None, None, :])  # u != x
+        & (i[:, None, None] != i[None, None, :])  # v != x
+    )
+    return jnp.max(jnp.where(distinct, lhs - rhs, NEG))

@@ -1,0 +1,97 @@
+"""Sieve-streaming [Badanidiyuru et al., KDD 2014] — the paper's streaming
+baseline (§4: "50 trials, leading to memory requirement of 50k").
+
+One pass over the stream; T parallel threshold "sieves" (OPT guesses
+v_j, log-spaced).  Element v is added to sieve j iff
+
+    |S_j| < k   and   f(v | S_j) >= (v_j / 2 - f(S_j)) / (k - |S_j|)
+
+Vectorized: sieve states are stacked (T, ...) and updated with one fused op
+per stream element inside a lax.scan — no per-sieve Python loops.
+
+Static-shape note: the original algorithm instantiates thresholds lazily from
+the running max singleton m_t and *discards* sieves with v_j < m_t (a memory
+optimization, not a quality one).  We keep a fixed log-spaced grid — sieves
+that the original would not yet have instantiated are simply inactive until
+m_t reaches them (same behaviour: earlier elements are never retroactively
+added), and we do not discard low sieves (only improves quality, costs
+k·T = the paper's quoted "50k" memory).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import SubmodularFunction
+
+Array = jax.Array
+
+
+class SieveResult(NamedTuple):
+    selected: Array    # (k,) indices of the best sieve's picks (pad = -1)
+    value: Array       # f(S) of the best sieve
+    best_sieve: Array  # index of winning threshold
+    thresholds: Array  # (T,) the OPT guesses used
+
+
+@partial(jax.jit, static_argnames=("k", "num_thresholds"))
+def sieve_streaming(
+    fn: SubmodularFunction,
+    k: int,
+    stream: Array | None = None,
+    num_thresholds: int = 50,
+    eps_grid: float | None = None,
+) -> SieveResult:
+    """Run sieve-streaming over ``stream`` (defaults to 0..n-1 order)."""
+    n = fn.n
+    stream = jnp.arange(n) if stream is None else stream
+    T = num_thresholds
+
+    # OPT in [m, k*m] with m = max singleton gain; guesses cover [m/2, 2*k*m].
+    # The grid is laid out in *relative* log-space and anchored to the running
+    # max m_t at scan time, which keeps the one-pass property.
+    if eps_grid is None:
+        ratios = jnp.logspace(jnp.log10(0.5), jnp.log10(2.0 * k), T)
+    else:
+        ratios = (1.0 + eps_grid) ** jnp.arange(T)
+
+    empty = fn.empty_state()
+    states0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (T,) + x.shape).copy(), empty)
+    sel0 = jnp.full((T, k), -1, jnp.int32)
+
+    def gain_one(state, v):
+        return fn.value(fn.add(state, v)) - fn.value(state)
+
+    def step(carry, v):
+        states, vals, counts, sel, m = carry
+        g1 = gain_one(empty, v)                    # singleton gain of v
+        m = jnp.maximum(m, g1)
+        thr = ratios * m                           # (T,) OPT guesses, anchored
+        g = jax.vmap(gain_one, in_axes=(0, None))(states, v)   # (T,)
+        need = (thr / 2.0 - vals) / jnp.maximum(k - counts, 1)
+        take = (counts < k) & (g >= need)
+        new_states = jax.vmap(fn.add, in_axes=(0, None))(states, v)
+        states = jax.tree.map(
+            lambda ns, s: jnp.where(
+                take.reshape((T,) + (1,) * (s.ndim - 1)), ns, s
+            ),
+            new_states,
+            states,
+        )
+        sel = jnp.where(
+            take[:, None] & (jnp.arange(k)[None, :] == counts[:, None]),
+            v,
+            sel,
+        )
+        vals = jnp.where(take, vals + g, vals)
+        counts = counts + take.astype(jnp.int32)
+        return (states, vals, counts, sel, m), None
+
+    init = (states0, jnp.zeros((T,)), jnp.zeros((T,), jnp.int32), sel0, jnp.float32(0.0))
+    (states, vals, counts, sel, m), _ = jax.lax.scan(step, init, stream)
+    best = jnp.argmax(vals)
+    return SieveResult(sel[best], vals[best], best, ratios * m)

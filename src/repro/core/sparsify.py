@@ -1,0 +1,221 @@
+"""Submodular Sparsification (SS) — Algorithm 1 of the paper, plus the §3.4
+improvements (pre-pruning, importance sampling, bidirectional post-reduction).
+
+TPU adaptation (DESIGN.md §3): the ground set never changes shape.  ``V`` is a
+static n-slot tensor with a boolean ``alive`` mask; each SS round
+  1. samples ``m = r·log2(n)`` probe indices from the live set (Gumbel top-k),
+  2. moves them from ``alive`` into the retained mask ``vprime``,
+  3. computes divergences w_{U,v} (paper Def. 2) for all live v in one fused
+     (m, n, F) block (Pallas kernel on TPU, jnp oracle elsewhere),
+  4. drops the (1 - 1/sqrt(c)) fraction of live elements with the smallest
+     *running* divergence (min over all probes sampled so far).
+The loop runs under ``jax.lax.while_loop`` with fully static shapes, so the
+whole sparsifier jit-compiles and can run inside the sharded data pipeline.
+
+Quality certificate: ``eps_hat`` is max_{v pruned} w_{U,v} at prune time — an
+upper bound on max_{v in V\\V'} w_{V',v} since the probe union only grows (the
+running min only decreases).  By the paper's Theorem 1 argument,
+f(greedy on V') >= (1 - 1/e)(f(S*) - k * eps_hat).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph
+from repro.core.functions import NEG, SubmodularFunction
+from repro.core.greedy import bidirectional_greedy, greedy
+
+Array = jax.Array
+INF = -NEG  # +1e30
+
+
+class SSResult(NamedTuple):
+    vprime: Array      # (n,) bool — retained set V'
+    divergence: Array  # (n,) running divergence w_{U,v} (INF where never probed)
+    eps_hat: Array     # scalar — certificate: max divergence among pruned items
+    rounds: Array      # scalar int32 — rounds executed
+    alive_trace: Array  # (max_rounds,) int32 live count after each round (-1 pad)
+
+
+def probe_count(n: int, r: int = 8) -> int:
+    """m = r * log2(n) (paper samples ``r log n`` per round, log base 2)."""
+    return max(1, int(r * math.log2(max(n, 2))))
+
+
+def max_rounds(n: int, r: int = 8, c: float = 8.0) -> int:
+    """log_{sqrt(c)}(n) rounds suffice (paper §3.2); +2 slack for rounding."""
+    return max(1, int(math.ceil(math.log(max(n, 2)) / math.log(math.sqrt(c)))) + 2)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("r", "c", "importance", "use_kernel"),
+)
+def ss_sparsify(
+    fn: SubmodularFunction,
+    key: Array,
+    r: int = 8,
+    c: float = 8.0,
+    alive: Array | None = None,
+    state: Array | None = None,
+    importance: bool = False,
+    use_kernel: bool = False,
+) -> SSResult:
+    """Algorithm 1 (Submodular Sparsification).
+
+    Args:
+      fn: submodular objective over n ground elements.
+      key: PRNG key for probe sampling.
+      r: probe multiplier (paper uses r = 8 = c).
+      c: accuracy/speed tradeoff; shrink rate is 1/sqrt(c) per round.
+      alive: optional (n,) bool — initial live mask (e.g. after pre-pruning).
+      state: optional summary state for *conditional* SS on G(V, E|S).
+      importance: §3.4 improvement 2 — sample probes with probability
+        proportional to f(u) + f(u|V\\u) instead of uniformly.
+      use_kernel: dispatch divergence to the Pallas TPU kernel.
+    """
+    n = fn.n
+    m = min(probe_count(n, r), n)  # tiny ground sets: everything is a probe
+    rounds_cap = max_rounds(n, r, c)
+    shrink = 1.0 - 1.0 / math.sqrt(c)
+
+    alive0 = jnp.ones((n,), bool) if alive is None else alive
+    residual = fn.residual_gains()
+
+    if importance:
+        score = fn.singleton_gains() + residual
+        logits = jnp.log(jnp.maximum(score, 1e-12))
+    else:
+        logits = jnp.zeros((n,))
+
+    if use_kernel:
+        from repro.kernels import ops as _kops
+
+        def _divergence(probes):
+            return _kops.ss_divergence(fn, probes, residual, state)
+    else:
+        def _divergence(probes):
+            return graph.divergence(fn, probes, residual=residual, state=state)
+
+    def cond(carry):
+        alive, vprime, div, eps_hat, key, rnd, trace = carry
+        return (jnp.sum(alive) > m) & (rnd < rounds_cap)
+
+    def body(carry):
+        alive, vprime, div, eps_hat, key, rnd, trace = carry
+        key, k1 = jax.random.split(key)
+
+        # (1) sample m probes from the live set (Gumbel top-k == uniform or
+        # importance-weighted sampling without replacement).
+        g = jax.random.gumbel(k1, (n,)) + logits + jnp.where(alive, 0.0, NEG)
+        probes = jax.lax.top_k(g, m)[1]
+        probe_hot = jnp.zeros((n,), bool).at[probes].set(True) & alive
+
+        # (2) U moves from V to V'.
+        vprime = vprime | probe_hot
+        alive = alive & ~probe_hot
+
+        # (3) running divergence against the union of all probes so far.
+        div = jnp.minimum(div, _divergence(probes))
+
+        # (4) drop the (1 - 1/sqrt(c)) fraction of live items with smallest
+        # divergence.  Rank via masked argsort (dead -> +INF sorts last).
+        live = jnp.sum(alive)
+        n_remove = jnp.floor(live * shrink).astype(jnp.int32)
+        keyed = jnp.where(alive, div, INF)
+        order = jnp.argsort(keyed)                       # ascending
+        pos = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+        removed = alive & (pos < n_remove)
+        eps_hat = jnp.maximum(
+            eps_hat, jnp.max(jnp.where(removed, div, NEG))
+        )
+        alive = alive & ~removed
+        trace = trace.at[rnd].set(jnp.sum(alive).astype(jnp.int32))
+        return (alive, vprime, div, eps_hat, key, rnd + 1, trace)
+
+    carry = (
+        alive0,
+        jnp.zeros((n,), bool),
+        jnp.full((n,), INF),
+        jnp.float32(NEG),
+        key,
+        jnp.int32(0),
+        jnp.full((rounds_cap,), -1, jnp.int32),
+    )
+    alive, vprime, div, eps_hat, _, rnd, trace = jax.lax.while_loop(cond, body, carry)
+    # Tail: remaining live elements all survive into V' (Algorithm 1, line 13).
+    vprime = vprime | alive
+    return SSResult(vprime, div, jnp.maximum(eps_hat, 0.0), rnd, trace)
+
+
+def preprune_mask(fn: SubmodularFunction, k: int) -> Array:
+    """Wei-et-al pre-pruning (§3.4 improvement 1): drop u whose singleton gain
+    f(u) is below the k-th largest residual f(v|V\\v) — provably safe."""
+    residual = fn.residual_gains()
+    kth = jax.lax.top_k(residual, k)[0][-1]
+    return fn.singleton_gains() >= kth
+
+
+def postreduce(
+    fn: SubmodularFunction, result: SSResult, eps: float, key: Array
+) -> Array:
+    """§3.4 improvement 3: shrink V' further by (approximately) solving Eq. 9
+    restricted to V' with bidirectional greedy.  Returns a new vprime mask.
+
+    h(V') = |{v in V \\ V' : w_{V'v} <= eps}|  -  computed against the edge
+    weights from V'-members to all pruned v.
+    """
+    vp_idx = jnp.where(result.vprime, size=fn.n, fill_value=-1)[0]
+    n_vp = int(jnp.sum(result.vprime))
+    members = [int(i) for i in vp_idx[:n_vp]]
+    residual = fn.residual_gains()
+    # Edge weights from every V' member to every ground element: (|V'|, n).
+    W = graph.edge_weights(fn, jnp.asarray(members), residual=residual)
+    pruned = ~result.vprime
+
+    def h_of(mask_members: Array) -> Array:
+        # mask_members: (|V'|,) bool over `members`
+        wmin = jnp.min(jnp.where(mask_members[:, None], W, INF), axis=0)
+        covered = pruned & (wmin <= eps)
+        return jnp.sum(covered) - 0.0  # |V'| term handled by caller's deltas
+
+    def gain_fn(lo, hi, v):
+        # marginal of adding v to lo, and of removing v from hi, under
+        # h(X) = covered(X) - |X|  (Eq. 9 as coverage minus cardinality).
+        a = h_of(lo.at[v].set(True)) - h_of(lo) - 1.0
+        b = (h_of(hi.at[v].set(False)) - h_of(hi)) + 1.0
+        return a, b
+
+    keep_local = bidirectional_greedy(gain_fn, len(members), key)
+    new_vprime = jnp.zeros((fn.n,), bool)
+    for i, mi in enumerate(members):
+        new_vprime = new_vprime.at[mi].set(bool(keep_local[i]))
+    return new_vprime
+
+
+def summarize(
+    fn: SubmodularFunction,
+    k: int,
+    key: Array,
+    r: int = 8,
+    c: float = 8.0,
+    preprune: bool = False,
+    importance: bool = False,
+    use_kernel: bool = False,
+):
+    """End-to-end paper pipeline: (optional pre-prune) -> SS -> greedy on V'.
+
+    Returns (GreedyResult, SSResult).
+    """
+    alive = preprune_mask(fn, k) if preprune else None
+    ss = ss_sparsify(
+        fn, key, r=r, c=c, alive=alive, importance=importance, use_kernel=use_kernel
+    )
+    res = greedy(fn, k, alive=ss.vprime)
+    return res, ss

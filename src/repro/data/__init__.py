@@ -1,0 +1,11 @@
+"""Data substrate: synthetic corpora (paper-matched), hashed featurizers, and
+the sharded pipeline with SS coreset selection."""
+
+from repro.data.pipeline import DataConfig, Pipeline, selection_quality
+from repro.data.synthetic import (
+    hashed_features,
+    lm_documents,
+    news_day,
+    video,
+    zipf_tokens,
+)

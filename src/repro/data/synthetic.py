@@ -1,0 +1,141 @@
+"""Synthetic corpora matched to the paper's datasets (offline container —
+DESIGN.md §7).  Three generators:
+
+* ``news_day``   — NYT-like: ``n`` sentences as hashed-TFIDF rows over ``F``
+  features with Zipfian token draws + per-day topical clusters (sentences
+  within a cluster share a topic distribution => real redundancy for SS to
+  find, like same-story sentences in a day of news).
+* ``video``      — SumMe-like: ``n`` frames whose descriptors follow a
+  smooth piecewise random walk through "scenes" => strong temporal
+  redundancy, occasional shot cuts.
+* ``lm_documents`` — token documents for the LM-training coreset stage:
+  a Zipfian unigram stream with planted near-duplicate documents, so
+  coreset selection has measurable headroom over uniform sampling.
+
+Everything is numpy (host-side data path); returns float32 / int32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def zipf_tokens(rng: np.random.Generator, size, vocab: int, a: float = 1.07):
+    """Zipf-distributed token ids in [0, vocab) (rejection-free truncation)."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = ranks ** (-a)
+    probs /= probs.sum()
+    return rng.choice(vocab, size=size, p=probs).astype(np.int32)
+
+
+def news_day(
+    seed: int,
+    n_sentences: int,
+    n_features: int = 1024,
+    n_topics: int = 12,
+    mean_len: int = 20,
+    zipf_a: float = 1.07,
+) -> np.ndarray:
+    """One day's sentences as a nonnegative (n, F) TFIDF-like matrix."""
+    rng = _rng(seed)
+    topics = rng.dirichlet(np.full(n_features, 0.05), size=n_topics)
+    # cluster sizes ~ broken-stick: few big stories, many small ones
+    weights = rng.dirichlet(np.ones(n_topics) * 0.6)
+    assign = rng.choice(n_topics, size=n_sentences, p=weights)
+    lengths = np.maximum(3, rng.poisson(mean_len, size=n_sentences))
+    W = np.zeros((n_sentences, n_features), np.float32)
+    zipf_boost = (np.arange(1, n_features + 1) ** (-zipf_a))
+    for t in range(n_topics):
+        idx = np.where(assign == t)[0]
+        if idx.size == 0:
+            continue
+        p = topics[t] * zipf_boost
+        p /= p.sum()
+        for i in idx:
+            toks = rng.choice(n_features, size=lengths[i], p=p)
+            np.add.at(W[i], toks, 1.0)
+    # tf * idf, l2-normalized rows (standard setup for coverage objectives)
+    df = np.maximum((W > 0).sum(axis=0), 1)
+    idf = np.log(1.0 + n_sentences / df).astype(np.float32)
+    W = W * idf[None, :]
+    W /= np.maximum(np.linalg.norm(W, axis=1, keepdims=True), 1e-9)
+    return W
+
+
+def video(
+    seed: int,
+    n_frames: int,
+    n_features: int = 512,
+    n_scenes: int | None = None,
+    walk_sigma: float = 0.02,
+) -> np.ndarray:
+    """SumMe-like frame descriptors (n, F), nonnegative, unit-norm rows."""
+    rng = _rng(seed)
+    if n_scenes is None:
+        n_scenes = max(3, n_frames // 400)
+    cuts = np.sort(rng.choice(np.arange(1, n_frames), n_scenes - 1, replace=False))
+    bounds = np.concatenate([[0], cuts, [n_frames]])
+    X = np.zeros((n_frames, n_features), np.float32)
+    for s in range(n_scenes):
+        lo, hi = bounds[s], bounds[s + 1]
+        center = np.abs(rng.normal(0, 1, n_features))
+        steps = rng.normal(0, walk_sigma, (hi - lo, n_features)).cumsum(axis=0)
+        X[lo:hi] = np.abs(center[None, :] + steps)
+    X /= np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-9)
+    return X.astype(np.float32)
+
+
+def lm_documents(
+    seed: int,
+    n_docs: int,
+    doc_len: int,
+    vocab: int,
+    dup_frac: float = 0.3,
+    zipf_a: float = 1.1,
+) -> np.ndarray:
+    """(n_docs, doc_len) int32 token matrix with planted near-duplicates.
+
+    ``dup_frac`` of documents are noisy copies of earlier ones (10% token
+    perturbation) — the redundancy the SS coreset stage should remove.
+    """
+    rng = _rng(seed)
+    n_unique = max(1, int(n_docs * (1.0 - dup_frac)))
+    docs = zipf_tokens(rng, (n_unique, doc_len), vocab, zipf_a)
+    out = np.zeros((n_docs, doc_len), np.int32)
+    out[:n_unique] = docs
+    for i in range(n_unique, n_docs):
+        src = rng.integers(0, n_unique)
+        copy = docs[src].copy()
+        flip = rng.random(doc_len) < 0.1
+        copy[flip] = zipf_tokens(rng, int(flip.sum()), vocab, zipf_a)
+        out[i] = copy
+    perm = rng.permutation(n_docs)
+    return out[perm]
+
+
+def hashed_features(
+    tokens: np.ndarray, n_features: int = 1024, ngram: int = 2
+) -> np.ndarray:
+    """Hashed n-gram count features for token documents.
+
+    tokens: (n, L) int32 -> (n, F) float32, l2-normalized.  This is the
+    arch-agnostic featurizer the SS data-selection stage runs on (the paper's
+    TFIDF analogue for token streams).
+    """
+    n, L = tokens.shape
+    W = np.zeros((n, n_features), np.float32)
+    t = tokens.astype(np.int64)
+    for g in range(1, ngram + 1):
+        h = np.zeros((n, L - g + 1), np.int64)
+        for j in range(g):
+            h = h * 1_000_003 + t[:, j : L - g + 1 + j]
+        h = (h ^ (h >> 13)) * 0x9E3779B1
+        h = np.abs(h) % n_features
+        for i in range(n):
+            np.add.at(W[i], h[i], 1.0)
+    W /= np.maximum(np.linalg.norm(W, axis=1, keepdims=True), 1e-9)
+    return W

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each with a pure-jnp
+oracle in ref.py and a jit'd dispatch wrapper in ops.py:
+
+- ss_weights.ss_divergence_kernel  — the paper's hot spot: fused
+  submodularity-graph edge weights + min-over-probes (one HBM pass over W).
+- feature_gains.feature_gains_kernel — greedy's per-step marginal gains.
+- flash_attention.flash_attention  — fused online-softmax attention for the
+  LM stack (the §Perf-dominant memory term of the 32k cells).
+"""
+
+from repro.kernels import ops

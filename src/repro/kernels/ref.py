@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.  These define the exact semantics
+the kernels must match (tests sweep shapes/dtypes and assert_allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+INF = 1e30
+
+
+def _phi(kind: str, c: Array, cap: Array | None) -> Array:
+    if kind == "sqrt":
+        return jnp.sqrt(jnp.maximum(c, 0.0))
+    if kind == "log1p":
+        return jnp.log1p(jnp.maximum(c, 0.0))
+    if kind == "setcover":
+        return jnp.minimum(c, 1.0)
+    if kind == "satcov":
+        assert cap is not None
+        return jnp.minimum(c, cap)
+    if kind == "linear":
+        return c
+    raise ValueError(kind)
+
+
+def ss_divergence_ref(
+    W: Array,        # (n, F) candidate feature rows
+    CU: Array,       # (r, F) probe coverage rows (state + W[probe])
+    phi_cu: Array,   # (r,)  precomputed sum_f phi(CU) ( = +INF for pad rows )
+    resid: Array,    # (r,)  residual gains f(u | V \\ u) ( = 0 for pad rows )
+    cap: Array | None,  # (F,) saturation caps for phi='satcov', else None
+    phi: str = "sqrt",
+) -> Array:
+    """w_{U,v} = min_u [ sum_f phi(CU_u + W_v) - phi_cu_u - resid_u ].  (n,).
+
+    Pad-row convention: padded probe rows carry phi_cu = -INF, so their weight
+    is +INF and they never win the min.
+    """
+    f32 = jnp.float32
+    Wf, CUf = W.astype(f32), CU.astype(f32)
+    both = CUf[:, None, :] + Wf[None, :, :]          # (r, n, F)
+    acc = jnp.sum(_phi(phi, both, cap), axis=-1)      # (r, n)
+    wmat = acc - phi_cu.astype(f32)[:, None] - resid.astype(f32)[:, None]
+    return jnp.min(wmat, axis=0)
+
+
+def feature_gains_ref(
+    W: Array,          # (n, F)
+    c: Array,          # (F,) current coverage state
+    phi_c_total: Array,  # scalar: sum_f phi(c)
+    cap: Array | None,
+    phi: str = "sqrt",
+) -> Array:
+    """g[v] = sum_f phi(c + W_v) - phi_c_total.  (n,)."""
+    f32 = jnp.float32
+    val = _phi(phi, c.astype(f32)[None, :] + W.astype(f32), cap)
+    return jnp.sum(val, axis=-1) - phi_c_total.astype(f32)
+
+
+def fl_divergence_ref(
+    sim: Array,      # (n, n) similarity; sim[i, v] = service of row i by v
+    MU: Array,       # (r, n) probe coverage rows: mu[u, i] = max(state_i, sim[i, u])
+    fl_cu: Array,    # (r,)  sum_i mu[u, i] ... baseline f(S + u); -INF pads
+    resid: Array,    # (r,)  residual gains of probes
+) -> Array:
+    """Facility-location divergence: min_u [ sum_i max(sim[i,v], mu[u,i]) - fl_cu_u - resid_u ]."""
+    f32 = jnp.float32
+    acc = jnp.sum(
+        jnp.maximum(sim.T.astype(f32)[None, :, :], MU.astype(f32)[:, None, :]),
+        axis=-1,
+    )  # (r, n)
+    wmat = acc - fl_cu.astype(f32)[:, None] - resid.astype(f32)[:, None]
+    return jnp.min(wmat, axis=0)
+
+
+def flash_attention_ref(
+    q, k, v, causal: bool = True, window: int = 0
+):
+    """Oracle for the flash-attention kernel: plain softmax attention over
+    (BH, S, hd) with optional causal/sliding-window masking.  f32 math."""
+    import math as _math
+
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / _math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = qpos >= kpos
+        if window > 0:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,122 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes`` parses the compiled (partitioned) HLO text and sums the
+**operand** sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, per the assignment's accounting.  Operand
+sizes are recovered from the result shape and the replica-group size
+(all-gather result = operand x group; reduce-scatter result = operand /
+group; the others move their operand size).
+
+``roofline`` turns (cost_analysis, collective bytes) into the three terms:
+
+    compute    = FLOPs / (chips x peak)        [s]
+    memory     = bytes / (chips x HBM bw)      [s]
+    collective = coll_bytes / (chips x link bw)  [s]
+
+Conventions: XLA's cost_analysis on the compiled SPMD executable reports the
+**per-partition** program; we report per-chip terms directly (dividing the
+per-chip quantity by one chip's peak), which equals the spec's
+whole-job/(chips x peak) under even sharding.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in partitioned HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_t, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":   # the -start already counted this op
+            continue
+        size = _shape_bytes(result_t)
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = gm.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if g is None or g < 1:
+            g = 1
+        if op == "all-gather":
+            operand = size // g
+        elif op == "reduce-scatter":
+            operand = size * g
+        else:  # all-reduce, all-to-all, collective-permute move operand-size
+            operand = size
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + operand
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+def roofline(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll_bytes_per_chip: float,
+    hw: dict,
+    *,
+    pod_fraction: float = 0.0,   # fraction of collective bytes on DCN links
+) -> dict:
+    compute_s = flops_per_chip / hw["peak_flops_bf16"]
+    memory_s = bytes_per_chip / hw["hbm_bw"]
+    ici = coll_bytes_per_chip * (1.0 - pod_fraction) / hw["ici_bw"]
+    dcn = coll_bytes_per_chip * pod_fraction / hw["dcn_bw"]
+    collective_s = ici + dcn
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return dict(
+        terms,
+        dominant=dominant.removesuffix("_s"),
+        step_time_lower_bound_s=bound,
+        # fraction of the bound spent doing useful math
+        roofline_fraction=(compute_s / bound) if bound > 0 else 0.0,
+    )

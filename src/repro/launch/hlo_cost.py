@@ -1,0 +1,399 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scan-over-layers / microbatch-scan / blockwise-attention program (i.e. all of
+ours) is underestimated by the trip count.  This module re-derives the
+roofline inputs directly from the partitioned HLO text:
+
+  * builds the computation call graph (entry -> while bodies, fusions, calls),
+  * extracts each while loop's trip count from its condition computation
+    (canonical scan form: ``compare(induction, constant(N)), direction=LT``),
+  * FLOPs: 2 * result_elems * contraction_size for every ``dot`` (+ rare
+    convs), counted wherever they appear (including inside fusions),
+  * bytes: operand + result sizes of top-level ops per computation —
+    post-fusion this approximates actual HBM traffic (a fusion kernel reads
+    its operands and writes its result once); bookkeeping ops (tuple, gte,
+    parameter, bitcast, constant) are free,
+  * collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute — trip-count multiplied
+    like everything else.
+
+All numbers are per-partition (the compiled module is the per-device
+program), matching the roofline convention in hlo_analysis.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_analysis import DTYPE_BYTES
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OP_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_AFTER_TYPE = re.compile(r"\s*([\w\-]+)\((.*)$")
+_SIMPLE_TYPE = re.compile(r"^[\w]+\[[^\]]*\](?:\{[^}]*\})?")
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE opcode(rest' with balanced-paren tuple types.
+
+    Returns (name, type_str, opcode, rest) or None."""
+    m = _OP_HEAD.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    s = line[m.end():]
+    if s.startswith("("):           # tuple type: find the balanced close
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, tail = s[: i + 1], s[i + 1:]
+    else:
+        mt = _SIMPLE_TYPE.match(s)
+        if not mt:
+            return None
+        type_str, tail = mt.group(0), s[mt.end():]
+    ma = _OP_AFTER_TYPE.match(tail)
+    if not ma:
+        return None
+    return name, type_str, ma.group(1), ma.group(2)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLED = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "custom-call",
+    "get-dimension-size", "opt-barrier",
+}
+
+# Ops that the TPU backend fuses into their producers/consumers: counting
+# their operand+result bytes would model every elementwise link in a chain
+# as an HBM round-trip, which the CPU-compiled HLO (weak fusion) is full of.
+# The memory term instead charges only "materializing" ops — matmuls,
+# explicit fusions, data movement, reshapes/copies, gathers/scatters — which
+# matches TPU executables, where elementwise chains live in VMEM/registers.
+_FUSABLE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "rsqrt", "sqrt", "tanh", "logistic", "sine", "cosine", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "power", "remainder",
+    "and", "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "compare", "select", "clamp", "convert",
+    "broadcast", "reshape", "reduce", "reduce-window", "map", "slice",
+    "concatenate", "pad", "reverse", "is-finite", "atan2", "expm1", "log1p",
+    "cbrt", "erf", "tan", "stochastic-convert", "dynamic-slice",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # operand list + attributes (raw tail of the line)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # op name -> type string
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if stripped == "}" or stripped.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            parsed = _parse_op_line(line)
+            if parsed:
+                op = Op(*parsed)
+                cur.ops.append(op)
+                cur.symbols[op.name] = op.type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names of the top-level operands in 'a, %b, f32[2]{0} %c), attr=...'."""
+    # cut at the matching close paren of the operand list
+    depth = 1
+    out = []
+    cur = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+    arglist = "".join(cur)
+    for piece in re.split(r",(?![^{]*\})", arglist):
+        names = re.findall(r"%([\w.\-]+)", piece)
+        if names:
+            out.append(names[-1])
+        else:
+            p = piece.strip().split(" ")[-1]
+            if p:
+                out.append(p.lstrip("%"))
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    result_elems = 1
+    for d in _shape_dims(op.type_str):
+        result_elems *= d
+    operands = _operand_names(op.rest)
+    lhs_t = comp.symbols.get(operands[0], "") if operands else ""
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contraction = 1
+    if mc and lhs_t:
+        dims = _shape_dims(lhs_t)
+        for i in mc.group(1).split(","):
+            if i and int(i) < len(dims):
+                contraction *= dims[int(i)]
+    return 2.0 * result_elems * contraction
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the condition computation (canonical scans:
+    ``compare(i, constant(N)), direction=LT``).  Falls back to 1."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*(\d+)\s*\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k, self.bytes * k, self.coll_bytes * k,
+            {o: b * k for o, b in self.coll_by_op.items()},
+            {o: c * k for o, c in self.coll_counts.items()},
+        )
+
+    def add(self, other: "Cost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.coll_bytes += other.coll_bytes
+        for o, b in other.coll_by_op.items():
+            self.coll_by_op[o] = self.coll_by_op.get(o, 0.0) + b
+        for o, c in other.coll_counts.items():
+            self.coll_counts[o] = self.coll_counts.get(o, 0.0) + c
+
+
+def _collective_operand_bytes(op: Op) -> float:
+    size = _shape_bytes(op.type_str)
+    g = 1
+    gm = _GROUPS_RE.search(op.rest)
+    if gm:
+        g = gm.group(1).count(",") + 1
+    else:
+        gi = _GROUPS_IOTA_RE.search(op.rest)
+        if gi:
+            g = int(gi.group(2))
+    g = max(g, 1)
+    base = op.opcode.removesuffix("-start")
+    if base == "all-gather":
+        return size / g
+    if base == "reduce-scatter":
+        return size * g
+    return float(size)
+
+
+def _analyze_comp(
+    name: str, comps: dict, memo: dict, fusion_flops: dict
+) -> Cost:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    cost = Cost()
+    if comp is None:
+        memo[name] = cost
+        return cost
+    for op in comp.ops:
+        if op.opcode == "while":
+            called = dict(
+                (k, v) for k, v in re.findall(
+                    r"(condition|body)=%?([\w.\-]+)", op.rest
+                )
+            )
+            body = called.get("body")
+            condn = called.get("condition")
+            mt = _TRIP_CFG.search(op.rest)
+            if mt:  # XLA's own loop analysis — authoritative when present
+                trips = int(mt.group(1))
+            else:
+                trips = _trip_count(comps[condn]) if condn in comps else 1
+            if body:
+                cost.add(_analyze_comp(body, comps, memo, fusion_flops)
+                         .scaled(trips))
+            continue
+        if op.opcode in ("fusion", "call", "conditional", "map", "reduce",
+                         "reduce-window", "sort", "scatter", "select-and-scatter"):
+            for sub in _CALLED.findall(op.rest):
+                # fusions/calls execute once per encounter; nested dots counted
+                cost.add(_analyze_comp(sub, comps, memo, fusion_flops))
+        if op.opcode == "dot":
+            cost.flops += _dot_flops(op, comp)
+        if op.opcode.endswith("-done"):
+            continue
+        if op.opcode in _COLLECTIVES:
+            b = _collective_operand_bytes(op)
+            base = op.opcode.removesuffix("-start")
+            cost.coll_bytes += b
+            cost.coll_by_op[base] = cost.coll_by_op.get(base, 0.0) + b
+            cost.coll_counts[base] = cost.coll_counts.get(base, 0.0) + 1
+        if (op.opcode not in _FREE_OPS and op.opcode not in _FUSABLE_OPS
+                and op.opcode != "while"):
+            rb = _shape_bytes(op.type_str)
+            ob = sum(
+                _shape_bytes(comp.symbols.get(o, ""))
+                for o in _operand_names(op.rest)
+            )
+            cost.bytes += rb + ob
+    memo[name] = cost
+    return cost
+
+
+def analyze(hlo_text: str) -> dict:
+    """Trip-count-aware per-partition cost of the compiled module."""
+    comps, entry = parse_hlo(hlo_text)
+    # cache: sub-computations reused under different multipliers are fine —
+    # memo stores the *unscaled* cost of each computation.
+    memo: dict[str, Cost] = {}
+    cost = _analyze_comp(entry, comps, memo, {})
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "coll_bytes": cost.coll_bytes,
+        "coll_by_op": cost.coll_by_op,
+        "coll_counts": cost.coll_counts,
+    }
+
+
+def top_contributors(hlo_text: str, n: int = 15) -> dict:
+    """Hillclimb profiler: the heaviest individual ops by (trip-scaled) bytes
+    and by collective traffic, with their metadata op_name when present."""
+    comps, entry = parse_hlo(hlo_text)
+
+    # walk the call graph accumulating a multiplier per computation
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            if op.opcode == "while":
+                called = dict(re.findall(r"(condition|body)=%?([\w.\-]+)",
+                                         op.rest))
+                mt = _TRIP_CFG.search(op.rest)
+                trips = int(mt.group(1)) if mt else (
+                    _trip_count(comps[called.get("condition", "")])
+                    if called.get("condition") in comps else 1)
+                body = called.get("body")
+                if body:
+                    mult[body] = mult.get(body, 0.0) + mult[cname] * trips
+                    if body not in seen:
+                        seen.add(body)
+                        order.append(body)
+            else:
+                for sub in _CALLED.findall(op.rest):
+                    mult[sub] = mult.get(sub, 0.0) + mult[cname]
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+
+    rows_bytes, rows_coll = [], []
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            meta = re.search(r'op_name="([^"]+)"', op.rest)
+            label = meta.group(1)[:90] if meta else op.name
+            if op.opcode in _COLLECTIVES and not op.opcode.endswith("-done"):
+                b = _collective_operand_bytes(op) * m
+                rows_coll.append((b, op.opcode, op.type_str[:40], label))
+            if (op.opcode not in _FREE_OPS and op.opcode not in _FUSABLE_OPS
+                    and op.opcode not in _COLLECTIVES
+                    and op.opcode != "while"):
+                rb = _shape_bytes(op.type_str)
+                ob = sum(_shape_bytes(comp.symbols.get(o, ""))
+                         for o in _operand_names(op.rest))
+                rows_bytes.append(((rb + ob) * m, op.opcode,
+                                   op.type_str[:40], label))
+    rows_bytes.sort(key=lambda r: -r[0])
+    rows_coll.sort(key=lambda r: -r[0])
+    return {"bytes": rows_bytes[:n], "collectives": rows_coll[:n]}

@@ -1,0 +1,95 @@
+"""Roofline report: read the dry-run JSON cache and print the per-cell
+three-term table (EXPERIMENTS.md §Roofline is generated from this).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh single_16x16]
+    PYTHONPATH=src python -m repro.launch.roofline --markdown
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.dryrun import RESULTS
+
+
+def load_records(mesh: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1.0:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def table(recs: list[dict], markdown: bool = False) -> str:
+    rows = []
+    hdr = ["arch", "shape", "compute", "memory", "collective", "dominant",
+           "roofline%", "useful%", "peakGB", "fits"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append([r["arch"], r["shape"], "—", "—", "—", "skip",
+                         "—", "—", "—", "—"])
+            continue
+        if r.get("status") != "ok":
+            rows.append([r["arch"], r["shape"], "ERR", "", "", "", "", "", "", ""])
+            continue
+        rl = r["roofline"]
+        mfrac = r["model_flops_per_chip"] / max(
+            rl["step_time_lower_bound_s"] * 197e12, 1e-30
+        )
+        rows.append([
+            r["arch"], r["shape"],
+            _fmt_s(rl["compute_s"]), _fmt_s(rl["memory_s"]),
+            _fmt_s(rl["collective_s"]), rl["dominant"],
+            f"{100*mfrac:.1f}",
+            f"{100*r['useful_flops_ratio']:.0f}",
+            f"{r['memory']['peak_bytes']/1e9:.2f}",
+            "y" if r["memory"]["fits_16gb"] else "N",
+        ])
+    widths = [max(len(str(row[i])) for row in [hdr] + rows)
+              for i in range(len(hdr))]
+    lines = []
+    sep = " | " if markdown else "  "
+    line = sep.join(h.ljust(w) for h, w in zip(hdr, widths))
+    lines.append(("| " + line + " |") if markdown else line)
+    if markdown:
+        lines.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    for row in rows:
+        line = sep.join(str(c).ljust(w) for c, w in zip(row, widths))
+        lines.append(("| " + line + " |") if markdown else line)
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    if not recs:
+        print(f"no dry-run results for mesh {args.mesh}; run "
+              f"`python -m repro.launch.dryrun` first")
+        return
+    print(f"# Roofline — mesh {args.mesh} "
+          f"({recs[0].get('chips', '?')} chips, TPU v5e terms)")
+    print(table(recs, markdown=args.markdown))
+    print(
+        "\nroofline% = MODEL_FLOPs / (chips × peak × bound)  — the score; "
+        "useful% = MODEL_FLOPs / HLO_FLOPs (remat/padding waste)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Builders for the lowerable step functions of every dry-run cell.
+
+One place defines, for each (arch, shape) cell:
+  * the step callable (train_step / prefill / decode_step),
+  * its abstract arguments (ShapeDtypeStructs — nothing allocated),
+  * the in/out shardings on a given mesh.
+
+Both the dry-run and the roofline tool consume these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import (
+    ModelConfig,
+    ShapeConfig,
+    abstract_cache,
+    abstract_params,
+    cache_spec_tree,
+    data_spec,
+    decode_step,
+    param_spec_tree,
+    prefill,
+)
+from repro.train.trainer import (
+    TrainConfig,
+    abstract_train_state,
+    make_train_step,
+    state_spec_tree,
+)
+
+Array = jax.Array
+
+
+def train_config_for(
+    cfg: ModelConfig, shp: ShapeConfig, batch_shards: int = 16
+) -> TrainConfig:
+    """Per-cell training hyperparameters: optimizer + microbatching chosen by
+    model scale (Adafactor above ~10B params; microbatches bound activation
+    memory on the 16 GB v5e).
+
+    ``batch_shards`` is the product of the mesh axes that shard the batch
+    (pod x data).  µ is capped at B/batch_shards: a microbatch smaller than
+    the shard count stops dividing evenly and GSPMD silently *replicates*
+    the whole remat stash (measured: 172 GB/device on internvl2 multipod)."""
+    big = cfg.param_count() > 10e9
+    # The remat stash per device is num_layers saved layer-inputs:
+    #   stash ≈ L * (B/µ/shards) * S * D * 2 bytes   (bf16 carries)
+    # Pick µ (a power of 2, ≤ B/shards) so stash fits in ~5 GB of the 16 GB
+    # HBM (params/grads/optimizer take the rest on the big configs).
+    per_dev_tokens = shp.global_batch * shp.seq_len / batch_shards
+    stash = cfg.num_layers * per_dev_tokens * cfg.d_model * 2
+    mu = 1
+    # stash target 1.5 GB: the per-µbatch *working set* (f32 mixer internals,
+    # MoE dispatch buffers) scales with B/µ too, and is what actually fills
+    # HBM on the small-d_model archs (mamba2 measured 21.8 GB at µ=1)
+    while mu < shp.global_batch // batch_shards and stash / mu > 1.5e9:
+        mu *= 2
+    # when µ is maxed out and the stash still doesn't fit, switch to
+    # two-level remat (stash sqrt(L) carries instead of L, ~+30% FLOPs)
+    remat = "nested" if stash / mu > 2.5e9 else "nothing"
+    return TrainConfig(
+        optimizer="adafactor" if big else "adamw",
+        num_microbatches=mu,
+        remat=remat,
+    )
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    fn: Callable           # the function handed to jax.jit
+    args: tuple            # abstract args
+    in_shardings: Any
+    out_shardings: Any
+    static_argnums: tuple = ()
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = configs.get(arch)
+    shp = configs.shape(shape_name)
+    specs = configs.input_specs(cfg, shp)
+
+    if shp.kind == "train":
+        from repro.models.sharding import batch_axes
+
+        shards = 1
+        for a in batch_axes(mesh):
+            shards *= mesh.shape[a]
+        tc = train_config_for(cfg, shp, batch_shards=shards)
+        state_shape = abstract_train_state(cfg, tc)
+        state_sh = named(mesh, state_spec_tree(cfg, tc, state_shape, mesh))
+        batch_sh = {
+            k: NamedSharding(mesh, data_spec(mesh, v.shape))
+            for k, v in specs.items()
+        }
+        step = make_train_step(cfg, tc)
+        return Cell(
+            arch, shape_name, step,
+            (state_shape, specs),
+            (state_sh, batch_sh),
+            (state_sh, None),
+            donate_argnums=(0,),
+            meta={"kind": "train", "microbatches": tc.num_microbatches,
+                  "optimizer": tc.optimizer,
+                  "tokens": shp.global_batch * shp.seq_len},
+        )
+
+    params_shape = abstract_params(cfg)
+    params_sh = named(mesh, param_spec_tree(cfg, params_shape, mesh))
+
+    if shp.kind == "prefill":
+        fn = lambda p, toks, patches=None: prefill(
+            cfg, p, toks, patches, max_len=shp.seq_len
+        )
+        batch_sh = {
+            k: NamedSharding(mesh, data_spec(mesh, v.shape))
+            for k, v in specs.items()
+        }
+        args = (params_shape, specs["tokens"])
+        in_sh = (params_sh, batch_sh["tokens"])
+        if "patches" in specs:
+            args = args + (specs["patches"],)
+            in_sh = in_sh + (batch_sh["patches"],)
+        cache_shape = abstract_cache(cfg, shp.global_batch, shp.seq_len)
+        cache_sh = named(mesh, cache_spec_tree(cfg, cache_shape, mesh))
+        logit_shape = (
+            (shp.global_batch, 1, cfg.vocab_size) if cfg.num_codebooks == 1
+            else (shp.global_batch, 1, cfg.num_codebooks, cfg.vocab_size)
+        )
+        return Cell(
+            arch, shape_name, fn, args, in_sh,
+            (NamedSharding(mesh, data_spec(mesh, logit_shape)), cache_sh),
+            meta={"kind": "prefill",
+                  "tokens": shp.global_batch * shp.seq_len},
+        )
+
+    # decode: one new token against a seq_len-deep cache
+    B = shp.global_batch
+    cache_shape = abstract_cache(cfg, B, shp.seq_len)
+    cache_sh = named(mesh, cache_spec_tree(cfg, cache_shape, mesh))
+    fn = lambda p, toks, cache, n: decode_step(cfg, p, toks, cache, n)
+    tok_spec = specs["tokens"]
+    args = (params_shape, tok_spec, cache_shape,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (params_sh, NamedSharding(mesh, data_spec(mesh, tok_spec.shape)),
+             cache_sh, NamedSharding(mesh, P()))
+    logits_shape = (B, 1, cfg.vocab_size) if cfg.num_codebooks == 1 else (
+        B, 1, cfg.num_codebooks, cfg.vocab_size)
+    out_sh = (NamedSharding(mesh, data_spec(mesh, logits_shape)), cache_sh)
+    return Cell(
+        arch, shape_name, fn, args, in_sh, out_sh,
+        donate_argnums=(2,),
+        meta={"kind": "decode", "tokens": B},
+    )
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference) — the
+    "useful" FLOPs yardstick for the roofline ratio."""
+    cfg = configs.get(arch)
+    shp = configs.shape(shape_name)
+    n_active = cfg.active_param_count()
+    if shp.kind == "train":
+        return 6.0 * n_active * shp.global_batch * shp.seq_len
+    if shp.kind == "prefill":
+        return 2.0 * n_active * shp.global_batch * shp.seq_len
+    return 2.0 * n_active * shp.global_batch  # decode: one token per row

@@ -1,0 +1,47 @@
+"""Model zoo: config-driven decoder-only LMs (dense GQA / MoE / Mamba2 SSD /
+RG-LRU hybrid) with scan-over-layers, remat, KV/SSM decode caches, and
+mesh-aware partition specs."""
+
+from repro.models.config import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_supported,
+    is_subquadratic,
+)
+from repro.models.decoder import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)
+from repro.models.sharding import (
+    cache_spec_tree,
+    data_spec,
+    named,
+    param_spec_tree,
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "cell_supported",
+    "is_subquadratic",
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "lm_loss",
+    "prefill",
+    "cache_spec_tree",
+    "data_spec",
+    "named",
+    "param_spec_tree",
+]

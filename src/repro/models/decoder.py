@@ -1,0 +1,429 @@
+"""Decoder-only LM assembly for every assigned architecture.
+
+Params layout (plain nested dicts):
+
+    {"embed":  {...},
+     "blocks": {"p0": <stacked over groups>, "p1": ..., ...},   # scanned
+     "rem":    {"r0": ..., ...},                                # unrolled tail
+     "final_norm": {...}}
+
+``blocks.p<i>`` holds the i-th entry of ``cfg.block_pattern`` stacked over the
+``cfg.num_groups`` pattern repetitions, so the forward pass is a
+``lax.scan`` over groups — HLO size is O(len(pattern)), not O(num_layers),
+which keeps 80-layer compiles cheap and is the right structure for 512-way
+SPMD anyway.  Each group body is wrapped in ``jax.checkpoint`` (remat) with a
+configurable policy.
+
+Three entry points:
+  - ``forward(cfg, params, tokens, ...)``        full-sequence (train/prefill)
+  - ``init_cache(cfg, params, batch, max_len)``  decode cache pytree
+  - ``decode_step(cfg, params, tokens, cache, cache_len)`` one-token decode
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.sharding import DATA, MODEL, POD, constrain
+from repro.models.layers import (
+    Params,
+    dtype_of,
+    embed_tokens,
+    embedding_init,
+    ffn,
+    ffn_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key: Array, cfg: ModelConfig, btype: str) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"ln1": rmsnorm_init(d, pdt)}
+    if btype in ("attn", "attn_moe", "local"):
+        p["attn"] = attn.attention_init(k1, cfg)
+        p["ln2"] = rmsnorm_init(d, pdt)
+        if btype == "attn_moe":
+            p["moe"] = moe_lib.moe_init(k2, cfg)
+        else:
+            p["ffn"] = ffn_init(k2, d, cfg.d_ff, pdt, gated=cfg.mlp_gated)
+    elif btype == "mamba2":
+        p["mixer"] = ssm_lib.mamba2_init(k1, cfg)
+    elif btype == "rglru":
+        p["mixer"] = rglru_lib.rglru_init(k1, cfg)
+        p["ln2"] = rmsnorm_init(d, pdt)
+        p["ffn"] = ffn_init(k2, d, cfg.d_ff, pdt, gated=cfg.mlp_gated)
+    else:
+        raise ValueError(btype)
+    return p
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    pdt = dtype_of(cfg.param_dtype)
+    k_embed, k_blocks, k_rem = jax.random.split(key, 3)
+    params: Params = {"embed": embedding_init(k_embed, cfg)}
+
+    blocks: Params = {}
+    G = cfg.num_groups
+    for i, btype in enumerate(cfg.block_pattern):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, i), G)
+        blocks[f"p{i}"] = jax.vmap(
+            lambda k, bt=btype: _block_init(k, cfg, bt)
+        )(keys)
+    params["blocks"] = blocks
+
+    rem: Params = {}
+    for i, btype in enumerate(cfg.remainder_blocks):
+        rem[f"r{i}"] = _block_init(jax.random.fold_in(k_rem, i), cfg, btype)
+    params["rem"] = rem
+
+    params["final_norm"] = rmsnorm_init(cfg.d_model, pdt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree of the params — no allocation (dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(
+    cfg: ModelConfig, btype: str, p: Params, x: Array, positions: Array
+) -> tuple[Array, Array]:
+    """One block.  Returns (x, aux_loss)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if btype in ("attn", "attn_moe", "local"):
+        window = cfg.local_window if btype == "local" else 0
+        x = x + attn.attention_forward(p["attn"], cfg, h, positions, window=window)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if btype == "attn_moe":
+            y, aux = moe_lib.moe_forward(p["moe"], cfg, h2)
+        else:
+            y = ffn(p["ffn"], h2, cdt, cfg.mlp_act)
+        x = x + y
+    elif btype == "mamba2":
+        x = x + ssm_lib.mamba2_forward(p["mixer"], cfg, h)
+    elif btype == "rglru":
+        x = x + rglru_lib.rglru_forward(p["mixer"], cfg, h)
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + ffn(p["ffn"], h2, cdt, cfg.mlp_act)
+    return x, aux
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Array,                 # (B, S) or (B, S, K) codebooks
+    patches: Array | None = None,  # (B, P, D) for tokens+patches mode
+    *,
+    remat: str = "nothing",
+    logits_slice: int = 0,         # >0: only last N positions get logits
+) -> tuple[Array, Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], cfg, tokens)
+    if cfg.input_mode == "tokens+patches":
+        assert patches is not None
+        P = patches.shape[1]
+        x = jnp.concatenate([patches.astype(cdt), x[:, P:]], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        x = constrain(x, (POD, DATA), None, None)
+        for i, btype in enumerate(cfg.block_pattern):
+            x, a = _block_apply(cfg, btype, group_params[f"p{i}"], x, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if remat == "nested" and cfg.num_groups >= 4:
+        # Two-level checkpointing: scan over ~sqrt(G) outer chunks, each an
+        # inner remat'd scan over G/chunks groups.  The residual stash drops
+        # from G layer-inputs to (chunks + G/chunks): internvl2's 80 saved
+        # carries (10.7 GB — XLA stores them f32) become 8 + 10.  Cost: one
+        # extra forward of the inner chunk during backward (~ +30% FLOPs).
+        G = cfg.num_groups
+        outer = max(2, int(math.sqrt(G)))
+        while G % outer != 0:
+            outer -= 1
+        inner = G // outer
+        nested_params = jax.tree.map(
+            lambda a: a.reshape((outer, inner) + a.shape[1:]),
+            params["blocks"],
+        )
+        inner_body = jax.checkpoint(
+            group_body, policy=_REMAT_POLICIES["nothing"]
+        )
+
+        def outer_body(carry, chunk_params):
+            out, _ = jax.lax.scan(inner_body, carry, chunk_params,
+                                  length=inner)
+            return out, None
+
+        outer_body = jax.checkpoint(
+            outer_body, policy=_REMAT_POLICIES["nothing"]
+        )
+        (x, aux), _ = jax.lax.scan(outer_body, carry0, nested_params,
+                                   length=outer)
+    else:
+        policy = _REMAT_POLICIES[remat if remat != "nested" else "nothing"]
+        if policy is not None:
+            group_body = jax.checkpoint(group_body, policy=policy)
+        elif remat != "none":
+            raise ValueError(remat)
+        (x, aux), _ = jax.lax.scan(
+            group_body, carry0, params["blocks"], length=cfg.num_groups
+        )
+    for i, btype in enumerate(cfg.remainder_blocks):
+        x, a = _block_apply(cfg, btype, params["rem"][f"r{i}"], x, positions)
+        aux = aux + a
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice > 0:
+        x = x[:, -logits_slice:]
+    logits = unembed(params["embed"], cfg, x)
+    return logits, aux
+
+
+def lm_loss(
+    cfg: ModelConfig,
+    logits: Array,       # (B, S, V) or (B, S, K, V)
+    labels: Array,       # (B, S) or (B, S, K) int32; negatives are masked
+) -> Array:
+    """Mean next-token cross entropy over unmasked positions (f32).
+
+    Written without gathers on the vocab axis (``take_along_axis`` forces
+    GSPMD to replicate the (B, S, V) logits across the model axis — a 30+ GB
+    regression on the 128k-vocab configs).  logsumexp and the one-hot
+    contraction are plain reductions over V, so vocab sharding survives."""
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = (
+        labels_safe[..., None] == jnp.arange(lf.shape[-1])[None, ...]
+    )
+    label_logit = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - label_logit
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ---------------------------------------------------------------------------
+# prefill (forward + populated decode cache)
+# ---------------------------------------------------------------------------
+
+def _block_prefill(
+    cfg: ModelConfig, btype: str, p: Params, x: Array, positions: Array,
+    max_len: int,
+):
+    cdt = dtype_of(cfg.compute_dtype)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if btype in ("attn", "attn_moe", "local"):
+        window = cfg.local_window if btype == "local" else 0
+        y, cache = attn.attention_prefill(
+            p["attn"], cfg, h, positions, max_len, window=window
+        )
+        x = x + y
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if btype == "attn_moe":
+            y2, _ = moe_lib.moe_forward(p["moe"], cfg, h2)
+        else:
+            y2 = ffn(p["ffn"], h2, cdt, cfg.mlp_act)
+        x = x + y2
+    elif btype == "mamba2":
+        y, cache = ssm_lib.mamba2_forward(p["mixer"], cfg, h, return_cache=True)
+        x = x + y
+    elif btype == "rglru":
+        y, cache = rglru_lib.rglru_forward(p["mixer"], cfg, h, return_cache=True)
+        x = x + y
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + ffn(p["ffn"], h2, cdt, cfg.mlp_act)
+    else:
+        raise ValueError(btype)
+    return x, cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Array,
+    patches: Array | None = None,
+    *,
+    max_len: int,
+) -> tuple[Array, Params]:
+    """Full-sequence forward that also populates the decode cache.
+
+    Returns (last-position logits (B, 1, V...), cache).  This is the step the
+    ``prefill_32k`` cells lower."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], cfg, tokens)
+    if cfg.input_mode == "tokens+patches":
+        assert patches is not None
+        P = patches.shape[1]
+        x = jnp.concatenate([patches.astype(cdt), x[:, P:]], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def group_body(x, group_params):
+        caches = {}
+        x = constrain(x, (POD, DATA), None, None)
+        for i, btype in enumerate(cfg.block_pattern):
+            x, c = _block_prefill(
+                cfg, btype, group_params[f"p{i}"], x, positions, max_len
+            )
+            caches[f"p{i}"] = c
+        return x, caches
+
+    x, block_caches = jax.lax.scan(
+        group_body, x, params["blocks"], length=cfg.num_groups
+    )
+    rem_caches = {}
+    for i, btype in enumerate(cfg.remainder_blocks):
+        x, c = _block_prefill(
+            cfg, btype, params["rem"][f"r{i}"], x, positions, max_len
+        )
+        rem_caches[f"r{i}"] = c
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x[:, -1:])
+    return logits, {"blocks": block_caches, "rem": rem_caches}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _block_cache_init(cfg: ModelConfig, btype: str, batch: int, max_len: int):
+    if btype in ("attn", "attn_moe"):
+        return attn.kv_cache_init(cfg, batch, max_len)
+    if btype == "local":
+        return attn.kv_cache_init(cfg, batch, max_len, window=cfg.local_window)
+    if btype == "mamba2":
+        return ssm_lib.mamba2_cache_init(cfg, batch)
+    if btype == "rglru":
+        return rglru_lib.rglru_cache_init(cfg, batch)
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Decode cache pytree, stacked over groups like the params."""
+    cache: Params = {"blocks": {}, "rem": {}}
+    G = cfg.num_groups
+    for i, btype in enumerate(cfg.block_pattern):
+        one = _block_cache_init(cfg, btype, batch, max_len)
+        cache["blocks"][f"p{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (G,) + a.shape).copy(), one
+        )
+    for i, btype in enumerate(cfg.remainder_blocks):
+        cache["rem"][f"r{i}"] = _block_cache_init(cfg, btype, batch, max_len)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _block_decode(
+    cfg: ModelConfig, btype: str, p: Params, x: Array, cache, cache_len: Array,
+    pos: Array | None = None,
+):
+    aux_window = cfg.local_window if btype == "local" else 0
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    cdt = dtype_of(cfg.compute_dtype)
+    if btype in ("attn", "attn_moe", "local"):
+        y, cache = attn.attention_decode(
+            p["attn"], cfg, h, cache, cache_len, window=aux_window, pos=pos
+        )
+        x = x + y
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if btype == "attn_moe":
+            y2, _ = moe_lib.moe_forward(p["moe"], cfg, h2)
+        else:
+            y2 = ffn(p["ffn"], h2, cdt, cfg.mlp_act)
+        x = x + y2
+    elif btype == "mamba2":
+        y, cache = ssm_lib.mamba2_decode(p["mixer"], cfg, h, cache)
+        x = x + y
+    elif btype == "rglru":
+        y, cache = rglru_lib.rglru_decode(p["mixer"], cfg, h, cache)
+        x = x + y
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + ffn(p["ffn"], h2, cdt, cfg.mlp_act)
+    return x, cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Array,      # (B, 1) or (B, 1, K)
+    cache: Params,
+    cache_len: Array,   # scalar int32
+    pos: Array | None = None,  # true sequence position (after KV pruning)
+) -> tuple[Array, Params]:
+    """One-token decode.  Returns (logits (B, 1, V...), updated cache)."""
+    x = embed_tokens(params["embed"], cfg, tokens)
+
+    def group_body(x, scanned):
+        group_params, group_cache = scanned
+        # barrier: stops the CPU backend hoisting the bf16->f32 dot-operand
+        # conversion of the *entire stacked* KV cache out of the layer loop
+        # (12.8 GB of f32 temps on musicgen decode_32k; TPU MXUs take bf16
+        # operands natively, so the conversion does not exist there at all)
+        group_cache = jax.lax.optimization_barrier(group_cache)
+        new_caches = {}
+        for i, btype in enumerate(cfg.block_pattern):
+            x, c = _block_decode(
+                cfg, btype, group_params[f"p{i}"], x,
+                group_cache[f"p{i}"], cache_len, pos,
+            )
+            new_caches[f"p{i}"] = c
+        return x, new_caches
+
+    x, new_block_cache = jax.lax.scan(
+        group_body, x, (params["blocks"], cache["blocks"]),
+        length=cfg.num_groups,
+    )
+    new_rem = {}
+    for i, btype in enumerate(cfg.remainder_blocks):
+        x, c = _block_decode(
+            cfg, btype, params["rem"][f"r{i}"], x, cache["rem"][f"r{i}"],
+            cache_len, pos,
+        )
+        new_rem[f"r{i}"] = c
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, {"blocks": new_block_cache, "rem": new_rem}

@@ -1,0 +1,164 @@
+"""Shared neural building blocks: init helpers, RMSNorm, RoPE, embeddings,
+SwiGLU FFN.  Pure functional JAX — params are plain nested dicts of arrays.
+
+Dtype policy: parameters are stored in ``cfg.param_dtype``; matmuls run in
+``cfg.compute_dtype`` (bf16 on TPU); normalization statistics, RoPE phases,
+softmax and the final logits are computed in float32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import DATA, MODEL, POD, constrain
+
+Array = jax.Array
+Params = dict
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype, scale: float | None = None) -> Array:
+    """Variance-scaling (fan-in) normal init, the LLaMA/ Gemma default."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 1.0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(dt) * p["scale"].astype(dt)
+
+
+def rmsnorm_headwise(scale: Array, x: Array, eps: float) -> Array:
+    """qk-norm: normalize the trailing head_dim of (..., H, hd)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(dt) * scale.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies, float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate (..., S, H, hd) by per-position phases.  ``positions`` is (S,)
+    or broadcastable (B, S).  Computed in f32, cast back."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                              # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # insert head axis: (..., S, 1, hd/2)
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(key: Array, d: int, f: int, dtype, gated: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype, scale=1.0 / math.sqrt(f)),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, d, f, dtype)
+    return p
+
+
+def ffn(p: Params, x: Array, compute_dtype, act: str = "silu") -> Array:
+    xc = x.astype(compute_dtype)
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    u = xc @ p["w_up"].astype(compute_dtype)
+    if "w_gate" in p:
+        g = xc @ p["w_gate"].astype(compute_dtype)
+        return (a(g) * u) @ p["w_down"].astype(compute_dtype)
+    return a(u) @ p["w_down"].astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: Array, cfg) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_codebooks + 1)
+    p: Params = {
+        "tok": jnp.stack(
+            [embed_init(keys[i], cfg.vocab_size, cfg.d_model, dtype)
+             for i in range(cfg.num_codebooks)]
+        )  # (K, V, D)
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = jnp.stack(
+            [dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dtype)
+             for _ in range(cfg.num_codebooks)]
+        )  # (K, D, V)
+    return p
+
+
+def embed_tokens(p: Params, cfg, tokens: Array) -> Array:
+    """tokens: (B, S) for K=1, (B, S, K) for codebooks.  Returns (B, S, D)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    tok = p["tok"].astype(cdt)                    # (K, V, D)
+    if cfg.num_codebooks == 1:
+        t = tokens if tokens.ndim == 2 else tokens[..., 0]
+        out = tok[0][t]
+    else:
+        # sum of codebook embeddings (musicgen-style parallel streams)
+        out = sum(tok[k][tokens[..., k]] for k in range(cfg.num_codebooks))
+    # activations: batch over pod x data, d_model replicated (TP happens
+    # inside the mixers/FFNs)
+    return constrain(out, (POD, DATA), None, None)
+
+
+def unembed(p: Params, cfg, x: Array) -> Array:
+    """x: (B, S, D) -> logits (B, S, V) or (B, S, K, V). float32."""
+    xf = x.astype(dtype_of(cfg.compute_dtype))
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(dtype_of(cfg.compute_dtype))       # (K, V, D)
+        logits = jnp.einsum("bsd,kvd->bskv", xf, w)
+    else:
+        w = p["unembed"].astype(dtype_of(cfg.compute_dtype))   # (K, D, V)
+        logits = jnp.einsum("bsd,kdv->bskv", xf, w)
+    # vocab stays sharded over model, batch over pod x data — without this
+    # pin GSPMD replicates the (B, S, V) logits (tens of GB at 128k vocab)
+    logits = constrain(logits, (POD, DATA), None, None, MODEL)
+    logits = logits.astype(jnp.float32)
+    if cfg.num_codebooks == 1:
+        return logits[..., 0, :]
+    return logits

@@ -1,0 +1,165 @@
+"""Mixture-of-Experts FFN with top-k routing, written the TPU way.
+
+Two paths, both fully static-shaped:
+
+* **train/prefill** — capacity-bounded *slot dispatch*: within each batch row
+  (the natural sharded group), every (token, k) pair gets a deterministic slot
+  ``expert * C + position-within-expert`` computed with a cumsum; tokens are
+  moved with one 1-D scatter + gather instead of the classic ``(T, E, C)``
+  one-hot einsum, so dispatch memory is O(T·D) not O(T·E·C).  The expert
+  matmuls are dense block-diagonal einsums over the (E, C, D) buffer — MXU
+  food, sharded expert-parallel over the ``model`` axis.
+* **decode** (S == 1) — tokens * experts is tiny but top-k is sparse, so the
+  roofline cost is *reading the chosen expert weights*: we gather the K
+  selected experts' matrices per token and apply them directly, which touches
+  exactly the active parameters instead of all E.
+
+Routing: top-1 with a sigmoid gate + always-on shared expert (llama4) or
+top-k softmax-renormalized gates (olmoe).  A Switch-style load-balancing aux
+loss is returned for training.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, dtype_of, ffn, ffn_init
+from repro.models.sharding import DATA, MODEL, POD, constrain
+
+Array = jax.Array
+
+
+def moe_init(key: Array, cfg) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+
+    def bank(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, dtype, scale=std),
+        "w_gate": bank(ks[1], (e, d, f), std),
+        "w_up": bank(ks[2], (e, d, f), std),
+        "w_down": bank(ks[3], (e, f, d), 1.0 / math.sqrt(f)),
+    }
+    if cfg.shared_expert:
+        p["shared"] = ffn_init(ks[4], d, f, dtype)
+    return p
+
+
+def _route(p: Params, cfg, xt: Array):
+    """xt (T, D) -> (top_idx (T, K) int32, gates (T, K) f32, aux scalar)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    E, K = cfg.num_experts, cfg.top_k
+    logits = (xt.astype(cdt) @ p["router"].astype(cdt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if K == 1:
+        gate_vals, top_idx = jax.lax.top_k(logits, 1)
+        gates = jax.nn.sigmoid(gate_vals)          # llama4 sigmoid gate
+    else:
+        gate_vals, top_idx = jax.lax.top_k(probs, K)
+        gates = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+    # Switch aux: E * sum_e mean(dispatch_e) * mean(prob_e)
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)
+    load = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    importance = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(load * importance)
+    return top_idx.astype(jnp.int32), gates, aux
+
+
+def _dispatch_group(xg: Array, eg: Array, E: int, K: int, C: int):
+    """One group's slot assignment.  xg (S, D); eg (S, K) expert choices.
+
+    Returns (buf (E*C, D) dispatch buffer, key (S*K,) slot index per (t, k),
+    with dropped pairs pointing at the trash slot E*C)."""
+    S, D = xg.shape
+    TK = S * K
+    flat_e = eg.reshape(-1)                                    # (S*K,)
+    eo = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (TK, E)
+    # position of each (t, k) within its expert, in (t, k) order
+    pos = jnp.take_along_axis(
+        jnp.cumsum(eo, axis=0) - eo, flat_e[:, None], axis=1
+    )[:, 0]
+    keep = pos < C
+    key = jnp.where(keep, flat_e * C + pos, E * C)             # trash = E*C
+    # slot -> source token (TK = "zero row" for unfilled slots)
+    slot_tok = jnp.full((E * C + 1,), TK, jnp.int32).at[key].set(
+        jnp.arange(TK, dtype=jnp.int32)
+    )
+    xflat = xg[jnp.arange(TK) // K]                            # (TK, D)
+    xpad = jnp.concatenate([xflat, jnp.zeros((1, D), xg.dtype)], axis=0)
+    buf = xpad[slot_tok[: E * C]]                              # (E*C, D)
+    return buf, key
+
+
+def moe_forward(
+    p: Params,
+    cfg,
+    x: Array,                 # (B, S, D)
+    *,
+    capacity_factor: float | None = None,
+) -> tuple[Array, Array]:
+    """Returns (output (B, S, D), aux load-balance loss scalar)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    if capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+
+    top_idx, gates, aux = _route(p, cfg, x.reshape(B * S, D))
+    top_idx = top_idx.reshape(B, S, K)
+    gates = gates.reshape(B, S, K)
+
+    if S == 1:
+        out = _decode_path(p, cfg, x, top_idx, gates)
+    else:
+        C = max(1, math.ceil(capacity_factor * K * S / E))
+        buf, key = jax.vmap(
+            lambda xg, eg: _dispatch_group(xg, eg, E, K, C)
+        )(x.astype(cdt), top_idx)                              # (B, E*C, D), (B, S*K)
+        buf = buf.reshape(B, E, C, D)
+        # expert parallelism: E over model; batch over pod x data — the
+        # reshard of buf is the all-to-all of the MoE dispatch
+        buf = constrain(buf, (POD, DATA), MODEL, None, None)
+
+        g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(cdt))
+        u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(cdt))
+        y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                       p["w_down"].astype(cdt))                # (B, E, C, D)
+        y = constrain(y, (POD, DATA), MODEL, None, None)
+
+        def combine_group(yg, keyg, gg):
+            ypad = jnp.concatenate(
+                [yg.reshape(E * C, D), jnp.zeros((1, D), yg.dtype)], axis=0
+            )
+            contrib = ypad[keyg] * gg.reshape(-1)[:, None].astype(yg.dtype)
+            return contrib.reshape(S, K, D).sum(axis=1)        # (S, D)
+
+        out = jax.vmap(combine_group)(y, key, gates)           # (B, S, D)
+
+    if cfg.shared_expert:
+        out = out + ffn(p["shared"], x, cdt, cfg.mlp_act)
+    return out.astype(x.dtype), aux
+
+
+def _decode_path(p: Params, cfg, x: Array, top_idx: Array, gates: Array) -> Array:
+    """Decode-step MoE: gather the chosen experts' weights per token."""
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape           # S == 1
+    xt = x.reshape(B, D).astype(cdt)
+    idx = top_idx.reshape(B, -1)                               # (B, K)
+    wg = p["w_gate"].astype(cdt)[idx]                          # (B, K, D, F)
+    wu = p["w_up"].astype(cdt)[idx]
+    wd = p["w_down"].astype(cdt)[idx]                          # (B, K, F, D)
+    g = jnp.einsum("bd,bkdf->bkf", xt, wg)
+    u = jnp.einsum("bd,bkdf->bkf", xt, wu)
+    y = jnp.einsum("bkf,bkfd->bkd", jax.nn.silu(g) * u, wd)    # (B, K, D)
+    out = jnp.sum(y * gates.reshape(B, -1, 1).astype(cdt), axis=1)
+    return out.reshape(B, S, D)

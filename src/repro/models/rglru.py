@@ -1,0 +1,139 @@
+"""RG-LRU recurrent mixer (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"):
+
+    x ──> W_y ──> GeLU ─────────────────────────┐
+    x ──> W_x ──> causal conv1d(4) ──> RG-LRU ──┤⊙──> W_out ──> out
+
+RG-LRU recurrence (per channel, diagonal):
+
+    r_t = sigmoid(w_a ⊙ u_t + b_a)        recurrence gate
+    i_t = sigmoid(w_i ⊙ u_t + b_i)        input gate
+    a_t = exp(-c * softplus(Λ) * r_t)     decay in (0, 1),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Training uses an associative scan over the (a_t, b_t) linear-recurrence pairs
+— O(log S) depth, fully parallel, which is what makes the 500k-token cell
+tractable.  Decode is the exact O(1) per-token recurrence.
+
+TPU adaptation note (DESIGN.md §3): the reference model computes the gates
+with block-diagonal linears of ``num_heads`` blocks; 10 heads does not divide
+a 16-way model axis, so we use *diagonal* (per-channel) gate projections —
+channel-separable, hence any sharding of d_rnn is legal.  Parameter-count
+delta is ~0.1% of the block.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, dtype_of
+from repro.models.sharding import DATA, MODEL, POD, constrain
+
+Array = jax.Array
+
+_C = 8.0  # Griffin's fixed decay sharpness
+
+
+def rglru_init(key: Array, cfg) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    d, dr = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(key, 4)
+    # Λ init so that a^c = exp(-c softplus(Λ)) is uniform in [0.9, 0.999]
+    u = jax.random.uniform(ks[3], (dr,), jnp.float32, minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_y": dense_init(ks[0], d, dr, dtype),
+        "w_x": dense_init(ks[1], d, dr, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "gate_a_w": jnp.zeros((dr,), jnp.float32),
+        "gate_a_b": jnp.zeros((dr,), jnp.float32),
+        "gate_i_w": jnp.zeros((dr,), jnp.float32),
+        "gate_i_b": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,                                   # (dr,) f32
+        "w_out": dense_init(jax.random.fold_in(ks[2], 7), dr, d, dtype,
+                            scale=1.0 / math.sqrt(dr)),
+    }
+
+
+def _gates(p: Params, u: Array):
+    """u (..., dr) f32 -> (a, b) of the linear recurrence h = a h + b."""
+    r = jax.nn.sigmoid(p["gate_a_w"] * u + p["gate_a_b"])
+    i = jax.nn.sigmoid(p["gate_i_w"] * u + p["gate_i_b"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (..., dr) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def _conv(x: Array, w: Array, b: Array, state: Array | None = None):
+    """Causal depthwise conv over (B, S, dr); optional carry-in state
+    (B, W-1, dr).  Returns (out, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :], xp[:, -(W - 1):, :]
+
+
+def rglru_forward(p: Params, cfg, x: Array, return_cache: bool = False):
+    """Full-sequence recurrent block.  x: (B, S, D) -> (B, S, D).
+
+    With ``return_cache`` also returns the decode cache (final hidden state +
+    conv tail) so prefill seeds O(1) decoding."""
+    cdt = dtype_of(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    y = jax.nn.gelu(constrain(xc @ p["w_y"].astype(cdt), (POD, DATA), None, MODEL))
+    x_in = constrain(xc @ p["w_x"].astype(cdt), (POD, DATA), None, MODEL)
+    u, _ = _conv(x_in, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+    uf = u.astype(jnp.float32)
+    a, b = _gates(p, uf)                                  # (B, S, dr)
+
+    # associative scan over the diagonal linear recurrence
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_s
+    out = ((h.astype(cdt) * y) @ p["w_out"].astype(cdt)).astype(x.dtype)
+    if not return_cache:
+        return out
+    W = cfg.conv_width
+    S = x.shape[1]
+    conv_tail = x_in[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        x_in, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    return out, {"conv": conv_tail, "h": h[:, -1].astype(jnp.float32)}
+
+
+def rglru_cache_init(cfg, batch: int) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn),
+                          dtype_of(cfg.compute_dtype)),
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+    }
+
+
+def rglru_decode(p: Params, cfg, x: Array, cache: dict) -> tuple[Array, dict]:
+    """One token.  x: (B, 1, D)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    y = jax.nn.gelu(xc @ p["w_y"].astype(cdt))            # (B, 1, dr)
+    u, new_conv = _conv(xc @ p["w_x"].astype(cdt),
+                        p["conv_w"].astype(cdt), p["conv_b"].astype(cdt),
+                        state=cache["conv"])
+    uf = u[:, 0].astype(jnp.float32)                      # (B, dr)
+    a, b = _gates(p, uf)
+    h = a * cache["h"] + b
+    out = (h[:, None, :].astype(cdt) * y) @ p["w_out"].astype(cdt)
+    return out.astype(x.dtype), {"conv": new_conv, "h": h}

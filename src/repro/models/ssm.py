@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) mixer block, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of length Q; within a chunk the output is a masked quadratic
+("attention-like") contraction, across chunks a single recurrent state of
+shape (H, P, N) is carried by a scan.  This is the paper's own TPU/GPU-
+friendly matmul formulation — O(S·Q) work with MXU-shaped einsums, O(S/Q)
+sequential steps.
+
+Decode keeps the (H, P, N) state and applies the exact recurrence
+``h = a h + dt·x ⊗ B;  y = h C + D x`` per token — O(1) in context length,
+which is what makes the ``long_500k`` cell runnable for this family.
+
+Layout: d_inner = expand * d_model, H = d_inner / headdim heads, G B/C groups
+(G=1 for mamba2-780m), state size N.  A short causal depthwise conv runs over
+the (x, B, C) channels, as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, dtype_of, rmsnorm
+from repro.models.sharding import DATA, MODEL, POD, constrain
+
+Array = jax.Array
+
+
+def mamba2_init(key: Array, cfg) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 6)
+    # A in [1, 16) as in the reference init; dt bias ~ softplus^-1(U[1e-3, 1e-1])
+    a_init = jnp.exp(
+        jax.random.uniform(ks[4], (h,), jnp.float32,
+                           minval=math.log(1.0), maxval=math.log(16.0))
+    )
+    dt = jnp.exp(
+        jax.random.uniform(ks[5], (h,), jnp.float32,
+                           minval=math.log(1e-3), maxval=math.log(1e-1))
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "w_in_zx": dense_init(ks[0], d, 2 * di, dtype),
+        "w_in_bc": dense_init(ks[1], d, 2 * g * n, dtype),
+        "w_in_dt": dense_init(ks[2], d, h, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, conv_dim),
+                                     jnp.float32) / math.sqrt(cfg.conv_width)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(a_init),                      # (H,) f32
+        "dt_bias": dt_bias,                            # (H,) f32
+        "D": jnp.ones((h,), jnp.float32),              # skip connection
+        "norm": jnp.ones((di,), dtype),                # gated RMSNorm scale
+        "w_out": dense_init(jax.random.fold_in(ks[3], 1), di, d, dtype,
+                            scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out + b[None, None, :]
+
+
+def _split_proj(p: Params, cfg, u: Array):
+    """u (B, S, D) -> z, xbc(conved) pieces, dt.  All in compute dtype."""
+    cdt = dtype_of(cfg.compute_dtype)
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    uc = u.astype(cdt)
+    zx = uc @ p["w_in_zx"].astype(cdt)                  # (B, S, 2*di)
+    z, x = jnp.split(zx, 2, axis=-1)
+    bc = uc @ p["w_in_bc"].astype(cdt)                  # (B, S, 2*g*n)
+    dt_raw = uc @ p["w_in_dt"].astype(cdt)              # (B, S, H)
+    return z, x, bc, dt_raw
+
+
+def _gated_out(p: Params, cfg, y: Array, z: Array) -> Array:
+    """y, z (B, S, di) -> (B, S, D): gated RMSNorm then out projection."""
+    cdt = dtype_of(cfg.compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm({"scale": p["norm"]}, y, 1e-6)
+    return y.astype(cdt) @ p["w_out"].astype(cdt)
+
+
+def mamba2_forward(p: Params, cfg, u: Array, return_cache: bool = False):
+    """Chunked SSD over the full sequence.  u: (B, S, D) -> (B, S, D).
+
+    With ``return_cache`` also returns the decode cache (final SSM state +
+    conv tail), so prefill seeds subsequent O(1) decoding."""
+    B, S, D = u.shape
+    g, n, h, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    di = cfg.d_inner
+    # largest chunk <= cfg.ssm_chunk that divides S (exactness over speed for
+    # odd test lengths; production shapes are powers of two)
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q != 0:
+        Q -= 1
+    nc = S // Q
+
+    z, x, bc, dt_raw = _split_proj(p, cfg, u)
+    x = constrain(x, (POD, DATA), None, MODEL)        # d_inner over model
+    dt_raw = constrain(dt_raw, (POD, DATA), None, MODEL)  # heads over model
+    xbc_raw = jnp.concatenate([x, bc], axis=-1)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc_raw, p["conv_w"].astype(xbc_raw.dtype),
+                     p["conv_b"].astype(xbc_raw.dtype)).astype(jnp.float32)
+    )
+    x = xbc[..., :di]
+    Bm = xbc[..., di : di + g * n].reshape(B, S, g, n)
+    Cm = xbc[..., di + g * n :].reshape(B, S, g, n)
+
+    # per-head decay: a_t = exp(-dt_t * A_h), dt = softplus(raw + bias)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = jnp.exp(p["A_log"])                                           # (H,)
+    log_a = -dt * A                                                   # (B,S,H) <= 0
+
+    # chunk views — scanned one chunk at a time so the quadratic intra-chunk
+    # tensors are O(B·Q²·H), not O(B·S·Q·H)  (the memory hot spot; the Pallas
+    # kernel target fuses this tile in VMEM, the XLA path scans it)
+    xh = x.astype(jnp.float32).reshape(B, nc, Q, h, pd)
+    Bc = Bm.astype(jnp.float32).reshape(B, nc, Q, g, n)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, Q, g, n)
+    dtc = dt.reshape(B, nc, Q, h)
+    lac = log_a.reshape(B, nc, Q, h)
+
+    rep = h // g  # heads per B/C group
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(h_prev, inp):
+        xh_c, B_c, C_c, dt_c, la_c = inp       # (B,Q,H,P) (B,Q,G,N) ...
+        cum = jnp.cumsum(la_c, axis=1)          # (B,Q,H)
+        total = cum[:, -1]                      # (B,H)
+        xdt = xh_c * dt_c[..., None]            # (B,Q,H,P)
+
+        # intra-chunk: decay-masked quadratic term
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bqgn,bsgn->bqsg", C_c, B_c)       # (B,Q,Q,G)
+        scores = jnp.repeat(scores, rep, axis=-1)              # -> H
+        y_c = jnp.einsum("bqsh,bshp->bqhp", scores * decay, xdt)
+
+        # inter-chunk: contribution of the carried state
+        Ch = jnp.repeat(C_c, rep, axis=2)                      # (B,Q,H,N)
+        y_c = y_c + jnp.einsum("bqhn,bhpn->bqhp", Ch, h_prev) \
+            * jnp.exp(cum)[..., None]
+
+        # carry update
+        Bh = jnp.repeat(B_c, rep, axis=2)                      # (B,Q,H,N)
+        decay_to_end = jnp.exp(total[:, None, :] - cum)        # (B,Q,H)
+        st = jnp.einsum("bqhn,bqhp->bhpn",
+                        Bh * decay_to_end[..., None], xdt)
+        h_new = h_prev * jnp.exp(total)[:, :, None, None] + st
+        return h_new, y_c
+
+    h0 = jnp.zeros((B, h, pd, n), jnp.float32)
+    to_scan = jax.tree.map(
+        lambda a: jnp.moveaxis(a, 1, 0), (xh, Bc, Cc, dtc, lac)
+    )
+    # remat the chunk body: backward recomputes the O(Q²·H) intra-chunk
+    # tensors per chunk instead of stashing them for all S/Q chunks
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, to_scan)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, h, pd)            # (B,S,H,P)
+    y = y + xh.reshape(B, S, h, pd) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(u.dtype)
+    out = _gated_out(p, cfg, y, z)
+    if not return_cache:
+        return out
+    W = cfg.conv_width
+    conv_tail = xbc_raw[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    return out, {"conv": conv_tail.astype(dtype_of(cfg.compute_dtype)),
+                 "ssm": h_last}
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+def mamba2_cache_init(cfg, batch: int) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                          dtype_of(cfg.compute_dtype)),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, cfg, u: Array, cache: dict) -> tuple[Array, dict]:
+    """One token.  u: (B, 1, D).  Exact recurrence, O(1) in context."""
+    B = u.shape[0]
+    g, n, h, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    di = cfg.d_inner
+
+    z, x, bc, dt_raw = _split_proj(p, cfg, u)
+    xbc = jnp.concatenate([x, bc], axis=-1)                    # (B, 1, conv_dim)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)     # (B, W, conv_dim)
+    conv_out = jnp.sum(
+        window * p["conv_w"].astype(window.dtype)[None], axis=1
+    ) + p["conv_b"].astype(window.dtype)                       # (B, conv_dim)
+    xbc1 = jax.nn.silu(conv_out.astype(jnp.float32))
+    new_conv = window[:, 1:, :]
+
+    xt = xbc1[:, :di].reshape(B, h, pd)
+    Bt = xbc1[:, di : di + g * n].reshape(B, g, n)
+    Ct = xbc1[:, di + g * n :].reshape(B, g, n)
+    rep = h // g
+    Bt = jnp.repeat(Bt, rep, axis=1)                           # (B, H, N)
+    Ct = jnp.repeat(Ct, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                     # (B, H)
+    hs = cache["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xt * dt[..., None], Bt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", hs, Ct) + xt * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    out = _gated_out(p, cfg, y, z)
+    return out, {"conv": new_conv, "ssm": hs}

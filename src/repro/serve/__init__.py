@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine and SS-based KV-cache
+pruning for long contexts."""
+
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kv_select import KVSelectConfig, prune_cache, select_positions

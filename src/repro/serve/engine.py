@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill + decode with a static KV/recurrent cache.
+
+The engine jit-compiles two functions per (batch, prompt_len, max_len)
+signature:
+
+  * ``prefill_fn``  — full-sequence forward that emits the first sampled
+    token and the populated cache (what the ``prefill_32k`` cells lower);
+  * ``decode_fn``   — one-token step against the cache (what ``decode_32k``
+    / ``long_500k`` lower).
+
+Sampling is greedy (argmax) or temperature/top-k via a PRNG key.  Requests
+are a fixed batch of equal-length prompts (static shapes; continuous
+batching would slot new requests into finished rows — the cache layout here
+is already slot-addressed to allow that, see ``reset_rows``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, init_cache, prefill
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0      # 0 => greedy argmax
+    top_k: int = 0                # 0 => no truncation
+
+
+def _sample(logits: Array, key: Array | None, sc: ServeConfig) -> Array:
+    """logits (B, 1, V) or (B, 1, K, V) -> next tokens (B, 1[, K])."""
+    if sc.temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / sc.temperature
+    if sc.top_k > 0:
+        kth = jax.lax.top_k(scaled, sc.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -1e30, scaled)
+    flat = scaled.reshape(-1, scaled.shape[-1])
+    toks = jax.random.categorical(key, flat, axis=-1)
+    return toks.reshape(scaled.shape[:-1]).astype(jnp.int32)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+
+        self._prefill = jax.jit(
+            lambda p, toks, patches: prefill(
+                cfg, p, toks, patches, max_len=sc.max_len
+            )
+        )
+        self._decode = jax.jit(
+            lambda p, toks, cache, n, pos: decode_step(cfg, p, toks, cache, n, pos)
+        )
+
+    def generate(
+        self,
+        tokens: Array,                  # (B, S[, K]) prompt
+        num_new: int,
+        patches: Array | None = None,
+        key: Array | None = None,
+    ) -> tuple[Array, dict]:
+        """Returns (generated tokens (B, num_new[, K]), final cache)."""
+        cfg, sc = self.cfg, self.sc
+        B, S = tokens.shape[0], tokens.shape[1]
+        assert S + num_new <= sc.max_len, "increase ServeConfig.max_len"
+
+        logits, cache = self._prefill(self.params, tokens, patches)
+        outs = []
+        tok = _sample(logits, key, sc)
+        outs.append(tok)
+        n = jnp.int32(S)
+        for i in range(num_new - 1):
+            if key is not None:
+                key, sub = jax.random.split(key)
+            else:
+                sub = None
+            logits, cache = self._decode(self.params, tok, cache, n, n)
+            tok = _sample(logits, sub, sc)
+            outs.append(tok)
+            n = n + 1
+        return jnp.concatenate(outs, axis=1), cache
+
+    def decode_with_cache(self, tok, cache, cache_len, pos=None):
+        """One raw decode step (used by the KV-pruning path)."""
+        return self._decode(
+            self.params, tok, cache, cache_len,
+            cache_len if pos is None else pos,
+        )

@@ -1,0 +1,115 @@
+"""SS-based KV-cache pruning (beyond-paper application of the technique).
+
+When a decode context outgrows its budget, we treat the cached positions as
+the *ground set* of a submodular summarization problem — exactly the paper's
+setting, with positions as "sentences" and key vectors as features — run
+Submodular Sparsification to shrink the candidate set, then greedy-select a
+``budget``-sized set of representative positions.  All attention layers are
+compacted to those positions; generation continues at the true sequence
+position (``decode_step(..., pos=true_pos)`` keeps RoPE honest).
+
+Objectives:
+  * ``coverage`` (default, scalable): FeatureCoverage over |key| features
+    pooled across layers and kv-heads — O(L·F) memory.
+  * ``fl``: FacilityLocation on cosine similarity of pooled keys — O(L²),
+    higher fidelity for short contexts.
+
+This is the serving-side twin of the training-data coreset stage: the same
+core algorithms (ss_sparsify + greedy) run inside the engine, unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FacilityLocation, FeatureCoverage, greedy
+from repro.core.sparsify import ss_sparsify
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSelectConfig:
+    budget: int = 256          # positions kept
+    objective: str = "coverage"  # coverage | fl
+    r: int = 8
+    c: float = 8.0
+    use_ss: bool = True        # False: greedy on the full ground set (ablation)
+
+
+def _pooled_keys(cache: dict, seq_len: int) -> Array:
+    """Mean |key| features over all attention layers & kv heads.
+
+    Returns (B, seq_len, head_dim)."""
+    ks = []
+    for name, grp in cache.get("blocks", {}).items():
+        if isinstance(grp, dict) and "k" in grp:
+            k = grp["k"]                      # (G, B, L, KV, hd)
+            ks.append(jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=(0, 3)))
+    for name, c in cache.get("rem", {}).items():
+        if isinstance(c, dict) and "k" in c:
+            ks.append(jnp.mean(jnp.abs(c["k"].astype(jnp.float32)), axis=2))
+    assert ks, "cache has no attention layers to prune"
+    pooled = sum(ks) / len(ks)                # (B, L, hd)
+    return pooled[:, :seq_len]
+
+
+def select_positions(
+    feats: Array,              # (L, F) nonnegative features for one row
+    kv: KVSelectConfig,
+    key: Array,
+) -> Array:
+    """SS + greedy position selection for one batch row.  Returns sorted
+    (budget,) int32 indices."""
+    if kv.objective == "coverage":
+        fn = FeatureCoverage(W=feats, phi="sqrt")
+    elif kv.objective == "fl":
+        fn = FacilityLocation.from_features(feats, kernel="cosine")
+    else:
+        raise ValueError(kv.objective)
+    alive = None
+    if kv.use_ss:
+        alive = ss_sparsify(fn, key, r=kv.r, c=kv.c).vprime
+    res = greedy(fn, kv.budget, alive=alive)
+    return jnp.sort(res.selected)
+
+
+def prune_cache(
+    cfg,
+    cache: dict,
+    seq_len: int,
+    kv: KVSelectConfig,
+    key: Array,
+) -> tuple[dict, Array, Array]:
+    """Compact every attention layer's cache to the SS-selected positions.
+
+    Returns (new_cache, new_cache_len (= budget), kept (B, budget) positions).
+    Non-attention state (SSM/RG-LRU) is untouched — it is already O(1).
+    """
+    feats = _pooled_keys(cache, seq_len)              # (B, L, hd)
+    B = feats.shape[0]
+    keys = jax.random.split(key, B)
+    kept = jax.vmap(lambda f, k: select_positions(f, kv, k))(feats, keys)
+
+    def compact(leaf_path, leaf):
+        names = [p.key for p in leaf_path if hasattr(p, "key")]
+        if names[-1] not in ("k", "v"):
+            return leaf
+        if leaf.ndim == 5:        # (G, B, L, KV, hd) stacked groups
+            def per_row(row, idx):   # row (L, KV, hd)
+                sel = row[idx]
+                return jnp.zeros_like(row).at[: idx.shape[0]].set(sel)
+            return jax.vmap(                 # over G
+                lambda grp: jax.vmap(per_row)(grp, kept)
+            )(leaf)
+        # (B, L, KV, hd) remainder layer
+        def per_row(row, idx):
+            sel = row[idx]
+            return jnp.zeros_like(row).at[: idx.shape[0]].set(sel)
+        return jax.vmap(per_row)(leaf, kept)
+
+    new_cache = jax.tree_util.tree_map_with_path(compact, cache)
+    return new_cache, jnp.int32(kv.budget), kept

@@ -1,0 +1,27 @@
+"""Training substrate: optimizers, sharded train step, checkpointing,
+fault-tolerance runtime, pod-axis gradient compression."""
+
+from repro.train.checkpoint import Checkpointer
+from repro.train.compress import (
+    CompressConfig,
+    init_error_state,
+    make_compressed_train_step,
+    topk_block_sparsify,
+)
+from repro.train.optimizer import Adafactor, AdamW, make_optimizer
+from repro.train.runtime import (
+    LoopReport,
+    PreemptionGuard,
+    StragglerGuard,
+    resume_or_init,
+    run,
+)
+from repro.train.trainer import (
+    TrainConfig,
+    abstract_train_state,
+    lr_schedule,
+    make_train_state,
+    make_train_step,
+    shard_train_step,
+    state_spec_tree,
+)

@@ -1,0 +1,165 @@
+"""Hand-rolled optimizers (no optax in this environment): AdamW and Adafactor.
+
+Both are functional: ``init(params) -> state`` and
+``update(grads, state, params, lr, step) -> (new_params, new_state)``.
+States are plain pytrees that shard exactly like their parameters
+(Adafactor's factored second moments drop one axis — their specs are derived
+in ``state_spec_tree``).
+
+Adafactor (Shazeer & Stern 2018) is the memory-sane choice for the 400B MoE
+config: second moments of any large rank>=2 leaf are stored as a row/col
+outer product (O(n+m) instead of O(nm)); no first moment; the update RMS is
+clipped at ``clip_threshold``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+def _map_zip(fn, *trees):
+    """tree.map over parallel trees where non-first trees may have dict
+    leaves: walks the first tree's structure."""
+    flat0, treedef = jax.tree.flatten(trees[0])
+    rest = [treedef.flatten_up_to(t) for t in trees[1:]]
+    out = [fn(*args) for args in zip(flat0, *rest)]
+    return treedef, out
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(self, grads, state, params, lr: Array, step: Array):
+        b1, b2 = self.b1, self.b2
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            delta = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + self.eps)
+            if p.ndim >= 2:  # no decay on norms/biases
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+        treedef, out = _map_zip(upd, grads, state["mu"], state["nu"], params)
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        return new_params, {"mu": new_mu, "nu": new_nu}
+
+    def state_spec_tree(self, param_specs, params_shape) -> dict:
+        return {"mu": param_specs, "nu": param_specs}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    decay: float = 0.8           # \hat{beta2}_t = 1 - t^{-decay}
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128  # only factor axes at least this large
+
+    def _factored(self, p) -> bool:
+        return (
+            p.ndim >= 2
+            and p.shape[-1] >= self.min_dim_factored
+            and p.shape[-2] >= self.min_dim_factored
+        )
+
+    def init(self, params) -> dict:
+        def leaf_state(p):
+            if self._factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree.map(leaf_state, params)}
+
+    def update(self, grads, state, params, lr: Array, step: Array):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-self.decay)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                u = gf * jax.lax.rsqrt(
+                    (vr / denom)[..., None] * vc[..., None, :] + self.eps
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = gf * jax.lax.rsqrt(v + self.eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            pf = p.astype(jnp.float32)
+            if self.weight_decay > 0.0 and p.ndim >= 2:
+                u = u + self.weight_decay * pf
+            return (pf - lr * u).astype(p.dtype), new_s
+
+        treedef, out = _map_zip(upd, grads, state["v"], params)
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = treedef.unflatten([o[1] for o in out])
+        return new_params, {"v": new_state}
+
+    def state_spec_tree(self, param_specs, params_shape) -> Any:
+        """Specs for the factored state: vr drops the last param axis, vc the
+        second-to-last.  Decided per-leaf from the param shapes so it matches
+        ``init`` exactly."""
+
+        def leaf(spec, p):
+            if self._factored(p):
+                return {
+                    "vr": P(*spec[:-1]),
+                    "vc": P(*spec[:-2], spec[-1]),
+                }
+            return {"v": spec}
+
+        treedef, out = _map_zip(
+            lambda s, p: leaf(s, p),
+            param_specs, params_shape,
+        )
+        return {"v": treedef.unflatten(out)}
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise ValueError(name)

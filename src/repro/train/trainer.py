@@ -1,0 +1,202 @@
+"""Training step factory: loss + grad with microbatch accumulation, global
+clip, LR schedule, optimizer update — all inside one jit with explicit
+in/out shardings, so the same function serves CPU tests, the 512-device
+dry-run, and a real cluster.
+
+Microbatching is a ``lax.scan`` over ``num_microbatches`` slices of the
+global batch: the per-microbatch backward (remat'd scan-over-layers) reuses
+one activation footprint while gradients accumulate in f32 — this is what
+bounds activation memory to ``(B/µ) * S * D * L_pattern`` on the big train
+cells.  Gradient reduction across data/model happens inside the backward
+(GSPMD); the optional pod-axis *compressed* reduction lives in compress.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (
+    ModelConfig,
+    data_spec,
+    forward,
+    init_params,
+    lm_loss,
+    param_spec_tree,
+)
+from repro.models.sharding import batch_axes
+from repro.train.optimizer import make_optimizer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+    num_microbatches: int = 1
+    remat: str = "nothing"
+    aux_coef: float = 0.01       # MoE load-balance weight
+    weight_decay: float = 0.1
+
+
+def lr_schedule(tc: TrainConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, tc.warmup_steps)
+    prog = jnp.clip(
+        (s - tc.warmup_steps) / jnp.maximum(1.0, tc.total_steps - tc.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = tc.min_lr_frac + (1 - tc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tc.lr * jnp.minimum(warm, 1.0) * jnp.where(s < tc.warmup_steps, 1.0, cos)
+
+
+def make_train_state(key: Array, cfg: ModelConfig, tc: TrainConfig) -> dict:
+    opt = make_optimizer(
+        tc.optimizer,
+        **({"weight_decay": tc.weight_decay} if tc.optimizer == "adamw" else {}),
+    )
+    params = init_params(key, cfg)
+    return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ModelConfig, tc: TrainConfig) -> dict:
+    return jax.eval_shape(lambda: make_train_state(jax.random.PRNGKey(0), cfg, tc))
+
+
+def state_spec_tree(
+    cfg: ModelConfig, tc: TrainConfig, state_shape: dict, mesh: Mesh
+) -> dict:
+    opt = make_optimizer(tc.optimizer)
+    pspecs = param_spec_tree(cfg, state_shape["params"], mesh)
+    return {
+        "params": pspecs,
+        "opt": opt.state_spec_tree(pspecs, state_shape["params"]),
+        "step": P(),
+    }
+
+
+def _loss_fn(cfg: ModelConfig, tc: TrainConfig, params, batch) -> tuple[Array, dict]:
+    logits, aux = forward(
+        cfg, params, batch["tokens"], batch.get("patches"), remat=tc.remat
+    )
+    labels = batch["labels"]
+    if cfg.input_mode == "tokens+patches":
+        # patch positions carry no next-token target
+        pmask = jnp.arange(labels.shape[1]) < cfg.num_patches
+        labels = jnp.where(pmask[None, :], -1, labels)
+    loss = lm_loss(cfg, logits, labels)
+    total = loss + tc.aux_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def _global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    opt = make_optimizer(
+        tc.optimizer,
+        **({"weight_decay": tc.weight_decay} if tc.optimizer == "adamw" else {}),
+    )
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        mu = tc.num_microbatches
+
+        # Gradient buffer dtype: f32 for f32-param models; for bf16-param
+        # models (the 70B+/400B configs) the accumulator + grads in f32 are
+        # 2x the parameter memory — use bf16 buffers there (the standard
+        # production trade; Adafactor's update math still runs in f32
+        # per-leaf).  Scale-by-µ *before* summing to keep bf16 headroom.
+        acc_dt = (jnp.float32 if cfg.param_dtype == "float32"
+                  else jnp.dtype(cfg.param_dtype))
+
+        if mu == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: _loss_fn(cfg, tc, p, batch), has_aux=True
+            )(params)
+        else:
+            def slice_mb(x, i):
+                b = x.shape[0] // mu
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+            def mb_step(carry, i):
+                acc, metrics_acc = carry
+                mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                (_, m), g = jax.value_and_grad(
+                    lambda p: _loss_fn(cfg, tc, p, mb), has_aux=True
+                )(params)
+                acc = jax.tree.map(
+                    lambda a, gg: a + (gg.astype(jnp.float32) / mu).astype(acc_dt),
+                    acc, g,
+                )
+                metrics_acc = jax.tree.map(lambda a, b_: a + b_, metrics_acc, m)
+                return (acc, metrics_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            )
+            m0 = {"loss": jnp.zeros(()), "aux": jnp.zeros(())}
+            (grads, msum), _ = jax.lax.scan(
+                mb_step, (zeros, m0), jnp.arange(mu)
+            )
+            metrics = jax.tree.map(lambda x: x / mu, msum)
+
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                             .astype(acc_dt), grads)
+
+        lr = lr_schedule(tc, state["step"])
+        new_params, new_opt = opt.update(
+            grads, state["opt"], params, lr, state["step"]
+        )
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def shard_train_step(
+    mesh: Mesh, cfg: ModelConfig, tc: TrainConfig, state_shape: dict
+):
+    """jit the train step with explicit in/out shardings for ``mesh``.
+
+    Returns (jitted_fn, state_shardings, batch_shardings).
+    """
+    specs = state_spec_tree(cfg, tc, state_shape, mesh)
+    state_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+    def batch_sharding(leaf):
+        return NamedSharding(mesh, data_spec(mesh, leaf.shape))
+
+    train_step = make_train_step(cfg, tc)
+    fn = jax.jit(
+        train_step,
+        in_shardings=(state_sh, None),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    return fn, state_sh, batch_sharding

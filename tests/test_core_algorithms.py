@@ -1,0 +1,274 @@
+"""Tests for greedy variants, sieve-streaming, and SS (Algorithm 1):
+correctness against brute force, the paper's approximation guarantees as
+executable assertions, and SS behavioural properties (shrink rate, |V'|,
+certificate eps_hat)."""
+
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacilityLocation,
+    FeatureCoverage,
+    greedy,
+    lazy_greedy,
+    preprune_mask,
+    probe_count,
+    sieve_streaming,
+    ss_sparsify,
+    stochastic_greedy,
+    summarize,
+)
+from repro.core.sparsify import max_rounds
+
+
+def make_fc(seed, n=60, F=24):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    W = jax.random.uniform(k1, (n, F)) * (jax.random.uniform(k2, (n, F)) < 0.3)
+    return FeatureCoverage(W=W)
+
+
+def brute_force_opt(fn, k):
+    best, best_set = -1.0, None
+    for S in itertools.combinations(range(fn.n), k):
+        state = fn.empty_state()
+        for v in S:
+            state = fn.add(state, jnp.asarray(v))
+        val = float(fn.value(state))
+        if val > best:
+            best, best_set = val, S
+    return best, best_set
+
+
+# ---------------------------------------------------------------- greedy ----
+def test_greedy_1_minus_1_over_e_vs_bruteforce():
+    fn = make_fc(0, n=12, F=8)
+    k = 3
+    opt, _ = brute_force_opt(fn, k)
+    g = greedy(fn, k)
+    assert float(g.value) >= (1 - math.exp(-1)) * opt - 1e-5
+    # In practice greedy is near-optimal on these instances.
+    assert float(g.value) >= 0.9 * opt
+
+
+def test_greedy_gains_monotone_decreasing():
+    fn = make_fc(1)
+    g = greedy(fn, 10)
+    gains = np.asarray(g.gains)
+    assert np.all(gains[:-1] >= gains[1:] - 1e-4)
+
+
+def test_greedy_value_equals_sum_of_gains():
+    fn = make_fc(2)
+    g = greedy(fn, 8)
+    assert abs(float(g.value) - float(np.sum(np.asarray(g.gains)))) < 1e-3
+
+
+def test_greedy_respects_alive_mask():
+    fn = make_fc(3)
+    alive = jnp.zeros((fn.n,), bool).at[jnp.arange(10)].set(True)
+    g = greedy(fn, 5, alive=alive)
+    assert np.all(np.asarray(g.selected) < 10)
+
+
+def test_lazy_greedy_matches_greedy():
+    for seed in range(4):
+        fn = make_fc(seed, n=40, F=16)
+        g = greedy(fn, 6)
+        lz = lazy_greedy(fn, 6)
+        assert abs(float(g.value) - float(lz.value)) < 1e-3
+        assert list(np.asarray(g.selected)) == list(np.asarray(lz.selected))
+
+
+def test_stochastic_greedy_close_to_greedy():
+    fn = make_fc(5, n=80)
+    g = greedy(fn, 8)
+    sg = stochastic_greedy(fn, 8, jax.random.PRNGKey(0), s=40)
+    assert float(sg.value) >= 0.85 * float(g.value)
+
+
+# ----------------------------------------------------------------- sieve ----
+def test_sieve_streaming_half_guarantee():
+    """Sieve-streaming guarantees (1/2 - eps) OPT; check against greedy
+    (>= OPT(1-1/e)), so sieve >= ~0.5/(1) * greedy-ish. Use a loose bound."""
+    for seed in range(3):
+        fn = make_fc(seed, n=70)
+        g = greedy(fn, 8)
+        sv = sieve_streaming(fn, 8)
+        assert float(sv.value) >= 0.45 * float(g.value)
+        # and never better than greedy by much (sanity)
+        assert float(sv.value) <= float(g.value) * 1.001
+
+
+def test_sieve_selection_consistent_with_value():
+    fn = make_fc(7, n=50)
+    sv = sieve_streaming(fn, 6)
+    sel = [int(v) for v in np.asarray(sv.selected) if v >= 0]
+    state = fn.empty_state()
+    for v in sel:
+        state = fn.add(state, jnp.asarray(v))
+    assert abs(float(fn.value(state)) - float(sv.value)) < 1e-3
+
+
+def test_sieve_stream_order_invariance_of_guarantee():
+    fn = make_fc(8, n=60)
+    g = greedy(fn, 6)
+    perm = jax.random.permutation(jax.random.PRNGKey(1), fn.n)
+    sv = sieve_streaming(fn, 6, stream=perm)
+    assert float(sv.value) >= 0.45 * float(g.value)
+
+
+# -------------------------------------------------------------------- SS ----
+def test_ss_runs_and_shrinks():
+    fn = make_fc(9, n=400, F=32)
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0))
+    n_vp = int(jnp.sum(ss.vprime))
+    assert 0 < n_vp < fn.n
+    assert int(ss.rounds) <= max_rounds(fn.n)
+
+
+def test_ss_shrink_rate_per_round():
+    """Each round removes ~ (1 - 1/sqrt(c)) of live elements + m probes."""
+    n = 2048
+    fn = make_fc(10, n=n, F=16)
+    c = 8.0
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0), c=c)
+    m = probe_count(n)
+    trace = [t for t in np.asarray(ss.alive_trace) if t >= 0]
+    live = n
+    for t in trace:
+        expected = (live - m) - math.floor((live - m) * (1 - 1 / math.sqrt(c)))
+        assert abs(t - expected) <= 1, (t, expected)
+        live = t
+
+
+def test_ss_quality_against_greedy():
+    """The paper's headline empirical claim: greedy on V' ~= greedy on V
+    (relative utility >= 0.95 across seeds; paper reports >= 0.97-0.99)."""
+    ratios = []
+    for seed in range(5):
+        fn = make_fc(seed, n=300, F=48)
+        g = greedy(fn, 10)
+        res, ss = summarize(fn, 10, jax.random.PRNGKey(seed))
+        ratios.append(float(res.value) / float(g.value))
+    assert min(ratios) >= 0.9
+    assert float(np.mean(ratios)) >= 0.95
+
+
+def test_ss_theorem1_certificate():
+    """f(S') >= (1 - 1/e)(f(S*) - k*eps_hat) with eps_hat the SS certificate
+    and f(S*) <= f(greedy)/(1-1/e) (so the test is conservative)."""
+    fn = make_fc(11, n=200, F=32)
+    k = 8
+    g = greedy(fn, k)
+    res, ss = summarize(fn, k, jax.random.PRNGKey(3))
+    opt_ub = float(g.value) / (1 - math.exp(-1))
+    bound = (1 - math.exp(-1)) * (opt_ub - k * float(ss.eps_hat))
+    assert float(res.value) >= min(bound, float(g.value)) - 1e-3
+
+
+def test_ss_vprime_includes_tail():
+    """When |V| <= r log n the loop stops and the remainder joins V'."""
+    fn = make_fc(12, n=40, F=16)  # 40 < 8*log2(40) ~ 42 -> 0 rounds
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0))
+    assert int(ss.rounds) == 0
+    assert bool(jnp.all(ss.vprime))
+
+
+def test_ss_respects_initial_alive():
+    fn = make_fc(13, n=300)
+    alive = jnp.arange(fn.n) < 150
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0), alive=alive)
+    assert not bool(jnp.any(ss.vprime[150:]))
+
+
+def test_ss_importance_sampling_works():
+    fn = make_fc(14, n=300)
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0), importance=True)
+    g = greedy(fn, 10)
+    res = greedy(fn, 10, alive=ss.vprime)
+    assert float(res.value) >= 0.9 * float(g.value)
+
+
+def test_preprune_is_safe():
+    """Wei-et-al rule must not hurt greedy's achievable value."""
+    fn = make_fc(15, n=120)
+    k = 6
+    mask = preprune_mask(fn, k)
+    assert int(jnp.sum(mask)) >= k
+    g_full = greedy(fn, k)
+    g_pruned = greedy(fn, k, alive=mask)
+    assert float(g_pruned.value) >= 0.999 * float(g_full.value)
+
+
+def test_ss_facility_location():
+    X = jax.random.normal(jax.random.PRNGKey(0), (250, 12))
+    fn = FacilityLocation.from_features(X, kernel="rbf")
+    g = greedy(fn, 10)
+    res, ss = summarize(fn, 10, jax.random.PRNGKey(1))
+    assert float(res.value) >= 0.93 * float(g.value)
+
+
+def test_ss_vprime_size_scales_polylog():
+    """|V'| = O(log^2 n): growing n 4x should grow |V'| far less than 4x."""
+    sizes, vps = [256, 1024], []
+    for n in sizes:
+        fn = make_fc(16, n=n, F=16)
+        ss = ss_sparsify(fn, jax.random.PRNGKey(0))
+        vps.append(int(jnp.sum(ss.vprime)))
+    assert vps[1] < vps[0] * 2.5  # 4x data -> ~(log ratio)^2 ~= 1.5x
+
+
+def test_conditional_ss_on_graph_given_s():
+    """SS on the conditional graph G(V, E|S) (paper §3, 'SS can be easily
+    extended to G(V, E|S)'): sparsify conditioned on a partial solution and
+    check greedy-on-V' still matches greedy continuing from S."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import FeatureCoverage, greedy
+    from repro.core.sparsify import ss_sparsify
+
+    key = jax.random.PRNGKey(11)
+    W = jax.random.uniform(key, (200, 64))
+    fn = FeatureCoverage(W=W, phi="sqrt")
+    # condition on a 5-element prefix S
+    prefix = greedy(fn, 5)
+    state = prefix.state
+    ss = ss_sparsify(fn, key, r=6, c=8.0, state=state)
+    # keep the prefix out of the candidate pool either way
+    avail = ss.vprime.at[prefix.selected].set(False)
+    res_cond = greedy(fn, 5, alive=avail)
+    full_avail = jnp.ones((200,), bool).at[prefix.selected].set(False)
+    res_full = greedy(fn, 5, alive=full_avail)
+    # compare the *continuations* from the shared state
+    def continue_from(sel):
+        st = state
+        for i in range(5):
+            st = fn.add(st, sel[i])
+        return float(fn.value(st))
+    v_cond = continue_from(res_cond.selected)
+    v_full = continue_from(res_full.selected)
+    assert v_cond >= 0.95 * v_full, (v_cond, v_full)
+
+
+def test_facility_location_ss_end_to_end():
+    """SS + greedy under the facility-location objective (the paper's other
+    graph-based objective family)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import FacilityLocation, greedy
+    from repro.core.sparsify import ss_sparsify
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.random((300, 16), np.float32))
+    fn = FacilityLocation.from_features(X, kernel="cosine")
+    ref = greedy(fn, 8)
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0), r=8, c=8.0)
+    red = greedy(fn, 8, alive=ss.vprime)
+    assert int(jnp.sum(ss.vprime)) < 300
+    assert float(red.value / ref.value) > 0.95

@@ -1,0 +1,163 @@
+"""Unit + property tests for the submodular objectives (repro.core.functions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.functions import FacilityLocation, FeatureCoverage
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_fc(seed: int, n: int = 24, F: int = 12, phi: str = "sqrt") -> FeatureCoverage:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    W = jax.random.uniform(k1, (n, F)) * (jax.random.uniform(k2, (n, F)) < 0.4)
+    return FeatureCoverage(W=W, phi=phi)
+
+
+def make_fl(seed: int, n: int = 20, d: int = 6) -> FacilityLocation:
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return FacilityLocation.from_features(X, kernel="rbf")
+
+
+def brute_value(fn, idx_set):
+    """f(S) by state construction — reference path."""
+    state = fn.empty_state()
+    for v in idx_set:
+        state = fn.add(state, jnp.asarray(v))
+    return float(fn.value(state))
+
+
+ALL_FNS = [
+    lambda s: make_fc(s, phi="sqrt"),
+    lambda s: make_fc(s, phi="log1p"),
+    lambda s: make_fc(s, phi="setcover"),
+    lambda s: make_fc(s, phi="satcov"),
+    lambda s: make_fl(s),
+]
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+def test_normalized(mk):
+    fn = mk(0)
+    assert abs(float(fn.value(fn.empty_state()))) < 1e-6
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_diminishing_returns(mk, data):
+    """Property (paper Eq. 1): f(v|A) >= f(v|B) whenever A ⊆ B, v ∉ B."""
+    seed = data.draw(st.integers(0, 5))
+    fn = mk(seed)
+    n = fn.n
+    items = data.draw(
+        st.lists(st.integers(0, n - 1), min_size=3, max_size=8, unique=True)
+    )
+    v, rest = items[0], items[1:]
+    cut = data.draw(st.integers(0, len(rest)))
+    A, B = rest[:cut], rest
+    sA = fn.empty_state()
+    for x in A:
+        sA = fn.add(sA, jnp.asarray(x))
+    sB = fn.empty_state()
+    for x in B:
+        sB = fn.add(sB, jnp.asarray(x))
+    gA = float(fn.gains(sA)[v])
+    gB = float(fn.gains(sB)[v])
+    assert gA >= gB - 1e-4
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_monotone(mk, data):
+    seed = data.draw(st.integers(0, 5))
+    fn = mk(seed)
+    items = data.draw(
+        st.lists(st.integers(0, fn.n - 1), min_size=1, max_size=6, unique=True)
+    )
+    vals = [brute_value(fn, items[:i]) for i in range(len(items) + 1)]
+    assert all(b >= a - 1e-4 for a, b in zip(vals, vals[1:]))
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+def test_gains_match_value_delta(mk):
+    """gains(state)[v] == f(S+v) - f(S) for every v."""
+    fn = mk(3)
+    S = [1, 5, 7]
+    state = fn.empty_state()
+    for v in S:
+        state = fn.add(state, jnp.asarray(v))
+    base = float(fn.value(state))
+    g = np.asarray(fn.gains(state))
+    for v in range(fn.n):
+        direct = float(fn.value(fn.add(state, jnp.asarray(v)))) - base
+        assert abs(g[v] - direct) < 1e-4, (v, g[v], direct)
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+def test_pairwise_gains_match(mk):
+    """pairwise_gains(probes)[i, v] == f(v | {probes[i]})."""
+    fn = mk(4)
+    probes = jnp.asarray([0, 3, 9])
+    P = np.asarray(fn.pairwise_gains(probes))
+    for i, u in enumerate([0, 3, 9]):
+        su = fn.add(fn.empty_state(), jnp.asarray(u))
+        g = np.asarray(fn.gains(su))
+        keep = np.arange(fn.n) != u  # v == u: set semantics give exactly 0
+        np.testing.assert_allclose(P[i][keep], g[keep], atol=1e-4)
+        assert abs(P[i][u]) < 1e-5
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+def test_residual_gains_match(mk):
+    """residual_gains()[v] == f(V) - f(V \\ v)."""
+    fn = mk(5)
+    n = fn.n
+    full = brute_value(fn, list(range(n)))
+    res = np.asarray(fn.residual_gains())
+    for v in range(0, n, 5):
+        without = brute_value(fn, [x for x in range(n) if x != v])
+        assert abs(res[v] - (full - without)) < 1e-3, v
+
+
+@pytest.mark.parametrize("mk", ALL_FNS)
+def test_add_many_matches_sequential(mk):
+    fn = mk(6)
+    mask = np.zeros((fn.n,), bool)
+    mask[[2, 4, 8, 11]] = True
+    st_seq = fn.empty_state()
+    for v in [2, 4, 8, 11]:
+        st_seq = fn.add(st_seq, jnp.asarray(v))
+    st_many = fn.add_many(fn.empty_state(), jnp.asarray(mask))
+    assert abs(float(fn.value(st_seq)) - float(fn.value(st_many))) < 1e-4
+
+
+def test_conditional_pairwise_gains():
+    """pairwise_gains with a state == f(v | S + u)."""
+    fn = make_fc(7)
+    S = [2, 6]
+    state = fn.empty_state()
+    for v in S:
+        state = fn.add(state, jnp.asarray(v))
+    probes = jnp.asarray([1, 4])
+    P = np.asarray(fn.pairwise_gains(probes, state))
+    for i, u in enumerate([1, 4]):
+        su = fn.add(state, jnp.asarray(u))
+        g = np.asarray(fn.gains(su))
+        keep = np.arange(fn.n) != u  # diagonal: set semantics give exactly 0
+        np.testing.assert_allclose(P[i][keep], g[keep], atol=1e-4)
+
+
+def test_linear_phi_is_modular():
+    """phi='linear' makes the function modular: f(v|S) independent of S."""
+    fn = make_fc(8, phi="linear")
+    s0 = fn.empty_state()
+    s1 = fn.add(fn.add(s0, jnp.asarray(0)), jnp.asarray(1))
+    np.testing.assert_allclose(
+        np.asarray(fn.gains(s0)), np.asarray(fn.gains(s1)), atol=1e-4
+    )

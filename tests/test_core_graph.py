@@ -1,0 +1,107 @@
+"""Tests for the submodularity graph: Lemmas 1-3 of the paper as executable
+properties, plus divergence bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import graph
+from repro.core.functions import FacilityLocation, FeatureCoverage
+
+
+def make_fc(seed: int, n: int = 16, F: int = 10) -> FeatureCoverage:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    W = jax.random.uniform(k1, (n, F)) * (jax.random.uniform(k2, (n, F)) < 0.5)
+    return FeatureCoverage(W=W)
+
+
+def make_fl(seed: int, n: int = 14) -> FacilityLocation:
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, 5))
+    return FacilityLocation.from_features(X, kernel="rbf")
+
+
+@pytest.mark.parametrize("mk", [make_fc, make_fl])
+@given(seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_triangle_inequality_lemma3(mk, seed):
+    """Lemma 3: w_vx <= w_vu + w_ux for all triples."""
+    fn = mk(seed)
+    W = graph.full_edge_matrix(fn)
+    viol = float(graph.check_triangle_inequality(W))
+    assert viol <= 1e-3, f"triangle inequality violated by {viol}"
+
+
+@pytest.mark.parametrize("mk", [make_fc, make_fl])
+def test_lemma2_marginal_gain_bound(mk):
+    """Lemma 2: f(v|S) <= f(u|S) + w_uv|S for u != v not in S."""
+    fn = mk(2)
+    S = [0, 3]
+    state = fn.empty_state()
+    for x in S:
+        state = fn.add(state, jnp.asarray(x))
+    g = np.asarray(fn.gains(state))
+    n = fn.n
+    Wc = np.asarray(
+        graph.edge_weights(fn, jnp.arange(n), state=state)
+    )  # (n, n): rows u, cols v
+    for u in range(n):
+        for v in range(n):
+            if u == v or u in S or v in S:
+                continue
+            assert g[v] <= g[u] + Wc[u, v] + 1e-3
+
+
+def test_lemma1_conditional_monotone():
+    """Lemma 1: w_uv|S <= w_uv|P for P ⊆ S."""
+    fn = make_fc(3)
+    sP = fn.add(fn.empty_state(), jnp.asarray(1))
+    sS = fn.add(sP, jnp.asarray(2))
+    probes = jnp.asarray([0, 5, 7])
+    wP = np.asarray(graph.edge_weights(fn, probes, state=sP))
+    wS = np.asarray(graph.edge_weights(fn, probes, state=sS))
+    assert np.all(wS <= wP + 1e-4)
+
+
+def test_divergence_is_min_over_probes():
+    fn = make_fc(4)
+    probes = jnp.asarray([0, 2, 9])
+    W = np.asarray(graph.edge_weights(fn, probes))
+    d = np.asarray(graph.divergence(fn, probes))
+    np.testing.assert_allclose(d, W.min(axis=0), atol=1e-5)
+
+
+def test_divergence_probe_mask_excludes():
+    fn = make_fc(5)
+    probes = jnp.asarray([0, 2, 9])
+    mask = jnp.asarray([True, False, True])
+    d_masked = np.asarray(graph.divergence(fn, probes, probe_mask=mask))
+    d_sub = np.asarray(graph.divergence(fn, jnp.asarray([0, 9])))
+    np.testing.assert_allclose(d_masked, d_sub, atol=1e-5)
+
+
+def test_divergence_update_running_min():
+    fn = make_fc(6)
+    d1 = graph.divergence(fn, jnp.asarray([0, 1]))
+    d2 = graph.divergence_update(fn, d1, jnp.asarray([2, 3]))
+    d_all = graph.divergence(fn, jnp.asarray([0, 1, 2, 3]))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d_all), atol=1e-5)
+
+
+def test_edge_weight_definition():
+    """w_uv = f(v|u) - f(u|V\\u) elementwise (Eq. 3)."""
+    fn = make_fc(7)
+    probes = jnp.asarray([3, 8])
+    W = np.asarray(graph.edge_weights(fn, probes))
+    pair = np.asarray(fn.pairwise_gains(probes))
+    res = np.asarray(fn.residual_gains())
+    np.testing.assert_allclose(W, pair - res[np.asarray([3, 8])][:, None], atol=1e-5)
+
+
+def test_self_edge_nonpositive():
+    """w_uu = f(u|u) - f(u|V\\u) = -f(u|V\\u) <= 0 (used in Prop. 1 proof)."""
+    fn = make_fc(8)
+    W = np.asarray(graph.full_edge_matrix(fn))
+    assert np.all(np.diag(W) <= 1e-5)

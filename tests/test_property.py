@@ -1,0 +1,162 @@
+"""Property-based tests (hypothesis) on the system's submodular invariants:
+diminishing returns, the graph lemmas (1-3), SS certificates, sieve bounds,
+and the loss/optimizer numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FacilityLocation, FeatureCoverage, greedy
+from repro.core.graph import (
+    check_triangle_inequality,
+    divergence,
+    edge_weights,
+    full_edge_matrix,
+)
+from repro.core.sparsify import ss_sparsify
+from repro.train.compress import topk_block_sparsify
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def _fc(seed: int, n: int, F: int, phi: str = "sqrt") -> FeatureCoverage:
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.random((n, F), np.float32))
+    return FeatureCoverage(W=W, phi=phi)
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 24),
+       F=st.integers(2, 16),
+       phi=st.sampled_from(["sqrt", "log1p", "setcover"]))
+def test_diminishing_returns(seed, n, F, phi):
+    """f(v|A) >= f(v|B) for A ⊆ B — the defining inequality (paper eq. 1)."""
+    fn = _fc(seed, n, F, phi)
+    rng = np.random.default_rng(seed + 1)
+    a = rng.random(n) < 0.3
+    b = a | (rng.random(n) < 0.3)
+    sa = fn.add_many(fn.empty_state(), jnp.asarray(a))
+    sb = fn.add_many(fn.empty_state(), jnp.asarray(b))
+    ga, gb = fn.gains(sa), fn.gains(sb)
+    outside = ~jnp.asarray(b)
+    assert bool(jnp.all(jnp.where(outside, ga - gb >= -1e-4, True)))
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 16),
+       F=st.integers(2, 12))
+def test_monotone_nonneg(seed, n, F):
+    fn = _fc(seed, n, F)
+    assert bool(jnp.all(fn.gains(fn.empty_state()) >= -1e-6))
+    assert float(fn.value(fn.empty_state())) == 0.0
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 12),
+       F=st.integers(2, 8))
+def test_triangle_inequality_lemma3(seed, n, F):
+    fn = _fc(seed, n, F)
+    W = full_edge_matrix(fn)
+    assert float(check_triangle_inequality(W)) <= 1e-3
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 12),
+       F=st.integers(2, 8))
+def test_lemma2_bound(seed, n, F):
+    """f(v|S) <= f(u|S) + w_{uv|S} for all u != v (paper Lemma 2)."""
+    fn = _fc(seed, n, F)
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(n) < 0.25)
+    state = fn.add_many(fn.empty_state(), mask)
+    g = fn.gains(state)                                # f(.|S)
+    Wm = edge_weights(fn, jnp.arange(n), state=state)  # w_{u->v|S}
+    lhs = g[None, :]                                   # f(v|S)
+    rhs = g[:, None] + Wm
+    off = ~jnp.eye(n, dtype=bool) & ~mask[None, :] & ~mask[:, None]
+    assert bool(jnp.all(jnp.where(off, lhs <= rhs + 1e-3, True)))
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(16, 48),
+       F=st.integers(4, 16), r=st.integers(2, 6))
+def test_ss_certificate(seed, n, F, r):
+    """Every pruned element's divergence from V' is <= eps_hat."""
+    fn = _fc(seed, n, F)
+    key = jax.random.PRNGKey(seed)
+    ss = ss_sparsify(fn, key, r=r, c=8.0)
+    pruned = ~ss.vprime
+    if not bool(jnp.any(pruned)):
+        return
+    vp_idx = jnp.where(ss.vprime, size=n, fill_value=0)[0]
+    div = divergence(fn, vp_idx,
+                     probe_mask=jnp.sort(ss.vprime)[::-1])
+    viol = jnp.where(pruned, div - ss.eps_hat, -jnp.inf)
+    assert float(jnp.max(viol)) <= 1e-3
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 32),
+       F=st.integers(2, 12), k=st.integers(1, 6))
+def test_greedy_value_equals_sum_of_gains(seed, n, F, k):
+    fn = _fc(seed, n, F)
+    res = greedy(fn, min(k, n))
+    assert abs(float(jnp.sum(res.gains)) - float(res.value)) < 1e-3
+    # gains are non-increasing (greedy + submodularity)
+    g = np.asarray(res.gains)
+    assert np.all(np.diff(g) <= 1e-4)
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(6, 20))
+def test_facility_location_invariants(seed, n):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.random((n, 4), np.float32))
+    fn = FacilityLocation.from_features(X, kernel="cosine")
+    W = full_edge_matrix(fn)
+    assert float(check_triangle_inequality(W)) <= 1e-3
+    g = fn.gains(fn.empty_state())
+    assert bool(jnp.all(g >= -1e-5))
+
+
+@SET
+@given(seed=st.integers(0, 10_000),
+       size=st.integers(2, 300),
+       ratio=st.floats(0.05, 0.9),
+       block=st.sampled_from([8, 32, 128]))
+def test_topk_sparsifier_properties(seed, size, ratio, block):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=size).astype(np.float32))
+    y = topk_block_sparsify(x, ratio, block)
+    # kept entries are exact; zeros elsewhere
+    kept = np.asarray(y) != 0
+    np.testing.assert_array_equal(np.asarray(y)[kept], np.asarray(x)[kept])
+    # error norm <= original norm (contraction; EF convergence condition)
+    assert float(jnp.linalg.norm(x - y)) <= float(jnp.linalg.norm(x)) + 1e-6
+    # at least ceil(ratio*block) kept per full block
+    assert kept.sum() >= 1
+
+
+@SET
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 10),
+       v=st.integers(5, 50))
+def test_lm_loss_matches_naive(seed, n, v):
+    from repro.models import lm_loss
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="t", num_layers=1, d_model=8, num_heads=1,
+                      num_kv_heads=1, head_dim=8, d_ff=8, vocab_size=v)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, n, v)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, v, size=(2, n)).astype(np.int32))
+    labels = labels.at[0, 0].set(-1)  # masked position
+    got = float(lm_loss(cfg, logits, labels))
+    lp = jax.nn.log_softmax(logits, -1)
+    want, cnt = 0.0, 0
+    for b in range(2):
+        for t in range(n):
+            if int(labels[b, t]) >= 0:
+                want -= float(lp[b, t, int(labels[b, t])])
+                cnt += 1
+    assert abs(got - want / cnt) < 1e-4
