@@ -1,5 +1,9 @@
 """Paper Figure 1: utility f(S) and wall time vs ground-set size n, for
 lazy greedy, sieve-streaming, and SS(+greedy).  Synthetic NYT-like corpus.
+
+``backend`` selects the execution path of the SS + greedy stages through the
+unified dispatch layer (repro.core.backend): "oracle" (default), "pallas",
+or "sharded".
 """
 
 from __future__ import annotations
@@ -17,19 +21,21 @@ K = 10
 R, C = 8, 8.0
 
 
-def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0) -> dict:
+def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
+        backend="oracle") -> dict:
     rows = []
     key = jax.random.PRNGKey(seed)
     for n in sizes:
         W = jnp.asarray(news_day(seed + n, n, n_features))
         fn = FeatureCoverage(W=W, phi="sqrt")
 
-        res_g, t_g = timed(lambda: jax.block_until_ready(greedy(fn, K)))
+        res_g, t_g = timed(lambda: jax.block_until_ready(
+            greedy(fn, K, backend=backend)))
         _, t_lazy = timed(lambda: lazy_greedy(fn, K))
 
         def run_ss():
-            ss = ss_sparsify(fn, key, r=R, c=C)
-            out = greedy(fn, K, alive=ss.vprime)
+            ss = ss_sparsify(fn, key, r=R, c=C, backend=backend)
+            out = greedy(fn, K, alive=ss.vprime, backend=backend)
             return jax.block_until_ready(out), ss
 
         (res_ss, ss), t_ss = timed(run_ss)
@@ -40,6 +46,7 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0) -> dict:
         fg = float(res_g.value)
         rows.append({
             "n": int(n),
+            "backend": backend,
             "f_greedy": fg,
             "rel_ss": float(res_ss.value) / fg,
             "rel_sieve": float(res_sv.value) / fg,

@@ -2,29 +2,42 @@
 the roofline-derived TPU expectations for the two SS hot-spot kernels.
 
 On this CPU container the kernels cannot be *timed* on real hardware; we
-(1) verify interpret-mode output against the oracle on a shape sweep and
-(2) report each kernel's arithmetic intensity and the v5e-roofline time its
+(1) verify interpret-mode output against the oracle on a shape sweep,
+(2) verify the unified backend dispatch layer (``repro.core.backend``) —
+    oracle vs pallas divergence/gains through the same ``backend=`` routing
+    every entry point uses, and
+(3) report each kernel's arithmetic intensity and the v5e-roofline time its
 BlockSpec tiling implies, next to the measured wall time of the jnp
-reference path (the thing the kernel replaces)."""
+reference path (the thing the kernel replaces).
+
+``--smoke`` runs a single small shape per kernel — the CI regression gate.
+"""
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save, timed
-from repro.kernels import ops
+from repro.core import FeatureCoverage, get_backend
 from repro.kernels.ref import feature_gains_ref, ss_divergence_ref
 from repro.kernels.feature_gains import feature_gains_kernel
 from repro.kernels.ss_weights import ss_divergence_kernel
 from repro.launch.mesh import HW
 
+SS_SHAPES = [(2048, 512, 64), (4096, 1024, 96), (8192, 512, 104)]
+SS_SHAPES_SMOKE = [(512, 128, 24)]
+FG_SHAPES = [(4096, 512), (16384, 1024)]
+FG_SHAPES_SMOKE = [(512, 128)]
 
-def run(seed: int = 0) -> dict:
+
+def run(seed: int = 0, smoke: bool = False) -> dict:
     key = jax.random.PRNGKey(seed)
     rows = []
-    for (n, F, r) in [(2048, 512, 64), (4096, 1024, 96), (8192, 512, 104)]:
+    for (n, F, r) in (SS_SHAPES_SMOKE if smoke else SS_SHAPES):
         W = jax.random.uniform(key, (n, F))
         CU = jax.random.uniform(jax.random.fold_in(key, 1), (r, F))
         phi_cu = jnp.sum(jnp.sqrt(CU), axis=-1)
@@ -36,6 +49,7 @@ def run(seed: int = 0) -> dict:
             ss_divergence_kernel(W, CU, phi_cu, resid, None,
                                  phi="sqrt", interpret=True)))
         err = float(jnp.max(jnp.abs(ref - out)))
+        assert err < 1e-3, f"kernel/oracle divergence mismatch: {err}"
 
         # roofline for the kernel's HBM traffic: one read of W + CU + out
         bytes_moved = (n * F + r * F + n) * 4
@@ -53,7 +67,7 @@ def run(seed: int = 0) -> dict:
               f"cpu_ref={t_ref*1e3:.1f}ms tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs",
               flush=True)
 
-    for (n, F) in [(4096, 512), (16384, 1024)]:
+    for (n, F) in (FG_SHAPES_SMOKE if smoke else FG_SHAPES):
         W = jax.random.uniform(key, (n, F))
         c = jax.random.uniform(jax.random.fold_in(key, 3), (F,))
         phic = jnp.sum(jnp.sqrt(c))
@@ -62,6 +76,7 @@ def run(seed: int = 0) -> dict:
         out, _ = timed(lambda: jax.block_until_ready(
             feature_gains_kernel(W, c, phic, None, phi="sqrt", interpret=True)))
         err = float(jnp.max(jnp.abs(ref - out)))
+        assert err < 1e-3, f"feature_gains kernel mismatch: {err}"
         bytes_moved = (n * F + F + n) * 4
         flops = 2.0 * n * F
         rows.append({
@@ -78,14 +93,52 @@ def run(seed: int = 0) -> dict:
     return {"rows": rows}
 
 
-def run_flash(seed: int = 0) -> dict:
+def run_dispatch(seed: int = 0, smoke: bool = False) -> dict:
+    """Backend dispatch parity: oracle vs pallas through repro.core.backend —
+    the exact routing ss_sparsify/greedy use — on real objectives."""
+    n, F, r = (512, 128, 24) if smoke else (2048, 256, 64)
+    key = jax.random.PRNGKey(seed)
+    W = jax.random.uniform(key, (n, F))
+    fn = FeatureCoverage(W=W, phi="sqrt")
+    probes = jnp.arange(0, n, max(1, n // r))[:r]
+    residual = fn.residual_gains()
+
+    rows = []
+    ref, t_o = timed(lambda: jax.block_until_ready(
+        get_backend("oracle").divergence(fn, probes, residual=residual)))
+    out, t_p = timed(lambda: jax.block_until_ready(
+        get_backend("pallas").divergence(fn, probes, residual=residual)))
+    live = np.ones((n,), bool)
+    live[np.asarray(probes)] = False
+    err = float(np.max(np.abs(np.asarray(ref)[live] - np.asarray(out)[live])))
+    assert err < 1e-3, f"backend dispatch divergence mismatch: {err}"
+    rows.append({"op": "divergence", "n": n, "F": F, "r": r,
+                 "max_err": err, "t_oracle_s": t_o, "t_pallas_s": t_p})
+    print(f"dispatch divergence n={n} F={F} r={r} err={err:.2e}", flush=True)
+
+    state = fn.add_many(fn.empty_state(), jnp.arange(n) < 8)
+    ref, t_o = timed(lambda: jax.block_until_ready(
+        get_backend("oracle").gains(fn, state)))
+    out, t_p = timed(lambda: jax.block_until_ready(
+        get_backend("pallas").gains(fn, state)))
+    err = float(jnp.max(jnp.abs(ref - out)))
+    assert err < 1e-3, f"backend dispatch gains mismatch: {err}"
+    rows.append({"op": "gains", "n": n, "F": F,
+                 "max_err": err, "t_oracle_s": t_o, "t_pallas_s": t_p})
+    print(f"dispatch gains n={n} F={F} err={err:.2e}", flush=True)
+    save("kernel_dispatch", rows)
+    return {"rows": rows}
+
+
+def run_flash(seed: int = 0, smoke: bool = False) -> dict:
     """flash_attention kernel: correctness + v5e roofline of its tiling vs
     the XLA blockwise path's HBM-resident intermediates."""
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref
 
     rows = []
-    for (BH, S, hd) in [(8, 512, 128), (4, 1024, 128)]:
+    shapes = [(4, 256, 64)] if smoke else [(8, 512, 128), (4, 1024, 128)]
+    for (BH, S, hd) in shapes:
         key = jax.random.PRNGKey(seed)
         ks = jax.random.split(key, 3)
         q = jax.random.normal(ks[0], (BH, S, hd), jnp.float32)
@@ -96,6 +149,7 @@ def run_flash(seed: int = 0) -> dict:
         out, _ = timed(lambda: jax.block_until_ready(
             flash_attention(q, k, v, bq=256, bk=256, interpret=True)))
         err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 1e-2, f"flash_attention kernel mismatch: {err}"
         # kernel HBM traffic: q+k+v read + out write (causal ~half the flops)
         io_bytes = 4 * BH * S * hd * 4
         flops = 2 * 2 * BH * S * S * hd / 2
@@ -118,6 +172,16 @@ def run_flash(seed: int = 0) -> dict:
     return {"rows": rows}
 
 
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small shape per kernel (CI regression gate)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    run_dispatch(smoke=args.smoke)
+    run_flash(smoke=args.smoke)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
-    run_flash()
+    raise SystemExit(main())

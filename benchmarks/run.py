@@ -29,8 +29,9 @@ def main() -> int:
         "fig3": lambda: fig3_news.run(days=4 if args.quick else 16),
         "table2": lambda: table2_video.run(
             scale=0.08 if args.quick else 0.25),
-        "kernels": kernel_bench.run,
-        "kernels_flash": kernel_bench.run_flash,
+        "kernels": lambda: kernel_bench.run(smoke=args.quick),
+        "kernels_dispatch": lambda: kernel_bench.run_dispatch(smoke=args.quick),
+        "kernels_flash": lambda: kernel_bench.run_flash(smoke=args.quick),
         "data_selection": data_selection.run,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -2,10 +2,15 @@
 
 Builds a synthetic news day, runs the full greedy baseline, then Submodular
 Sparsification (Algorithm 1) + greedy on the reduced set, and prints the
-utility ratio, reduction, and the Theorem-2-style certificate.
+utility ratio, reduction, and the Theorem-2-style certificate.  The same
+pipeline is then re-run on each available execution backend (oracle jnp,
+Pallas kernels in interpret mode on CPU, shard_map) through the unified
+``backend=`` dispatch — identical algorithm, different execution.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [backend]
 """
+
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -15,26 +20,34 @@ from repro.core.sparsify import ss_sparsify, summarize
 from repro.data import news_day
 
 N, K = 4096, 10
+BACKEND = sys.argv[1] if len(sys.argv) > 1 else "oracle"
 
 print(f"ground set: {N} sentences (synthetic NYT-like day)")
 W = jnp.asarray(news_day(seed=0, n_sentences=N, n_features=512))
 fn = FeatureCoverage(W=W, phi="sqrt")   # the paper's f(S) = Σ_f sqrt(c_f(S))
 
 # --- offline baseline: greedy on the full ground set -----------------------
-full = greedy(fn, K)
+full = greedy(fn, K, backend=BACKEND)
 print(f"greedy on V:        f(S) = {float(full.value):.4f}")
 
 # --- the paper: SS (c=8, r=8) then greedy on V' -----------------------------
 key = jax.random.PRNGKey(0)
-ss = ss_sparsify(fn, key, r=8, c=8.0)
-reduced = greedy(fn, K, alive=ss.vprime)
+ss = ss_sparsify(fn, key, r=8, c=8.0, backend=BACKEND)
+reduced = greedy(fn, K, alive=ss.vprime, backend=BACKEND)
 nv = int(jnp.sum(ss.vprime))
 print(f"SS -> |V'| = {nv} ({100 * nv / N:.1f}% of V, "
-      f"{int(ss.rounds)} rounds)")
+      f"{int(ss.rounds)} rounds, backend={BACKEND})")
 print(f"greedy on V':       f(S) = {float(reduced.value):.4f}  "
       f"(relative = {float(reduced.value / full.value):.4f})")
 print(f"certificate eps^ = {float(ss.eps_hat):.4f}  "
       f"(Thm 2: f(S') >= (1-1/e)(f(S*) - 2k*eps))")
+
+# --- backend parity: one SS round on every registered backend ---------------
+for be in ("oracle", "pallas", "sharded"):
+    ss_be = ss_sparsify(fn, key, r=8, c=8.0, backend=be)
+    val = float(greedy(fn, K, alive=ss_be.vprime).value)
+    print(f"backend {be:8s}: |V'| = {int(jnp.sum(ss_be.vprime)):5d}  "
+          f"f(S) = {val:.4f}")
 
 # --- streaming baseline ------------------------------------------------------
 sv = sieve_streaming(fn, K)

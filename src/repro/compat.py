@@ -1,0 +1,92 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets a range of jax versions: newer ones expose ``jax.shard_map``
+/ ``jax.sharding.AxisType`` / ``pltpu.CompilerParams``, older ones the
+``jax.experimental.shard_map`` / ``pltpu.TPUCompilerParams`` spellings.  All
+call sites go through these helpers so the rest of the codebase stays
+version-agnostic.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """jax.make_mesh with Auto axis types where the argument exists."""
+    if _AxisType is not None:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(_AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None):
+    """shard_map with replication checking off, across API generations.
+
+    ``axis_names`` (optional) lists the mesh axes that are *manual* inside
+    the body (the new-API meaning); None means all of them.  On old jax this
+    is translated to the complementary ``auto`` set.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    kw: dict[str, Any] = {}
+    if "check_vma" in params:
+        kw["check_vma"] = False
+    elif "check_rep" in params:
+        kw["check_rep"] = False
+    if axis_names is not None:
+        if "axis_names" in params:
+            kw["axis_names"] = set(axis_names)
+        else:
+            kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — jax.set_mesh where available, else the
+    classic ``with mesh:`` context (which old with_sharding_constraint
+    resolves P() specs against)."""
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh  # Mesh is itself a context manager on older jax
+
+
+def get_abstract_mesh():
+    """The ambient mesh for sharding constraints, or None when no mesh
+    context is active (or the running jax predates abstract meshes)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            return get()
+        except Exception:  # pragma: no cover - defensive
+            return None
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        return mesh if mesh.axis_names else None
+    except Exception:  # pragma: no cover - defensive
+        return None
+
+
+def pallas_tpu_compiler_params(**kw):
+    """pltpu.CompilerParams (new) / pltpu.TPUCompilerParams (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kw)

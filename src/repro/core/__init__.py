@@ -1,8 +1,23 @@
 """Core reproduction of "Scaling Submodular Maximization via Pruned
 Submodularity Graphs": objectives, the submodularity graph, SS (Algorithm 1),
-and the greedy / streaming baselines."""
+the greedy / streaming baselines, and the execution-backend dispatch layer
+(oracle / pallas / sharded — see repro.core.backend and docs/backends.md)."""
 
-from repro.core.functions import FacilityLocation, FeatureCoverage
+from repro.core.backend import (
+    Backend,
+    OracleBackend,
+    PallasBackend,
+    ShardedBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
+from repro.core.functions import (
+    FacilityLocation,
+    FeatureCoverage,
+    SubmodularFunction,
+)
 from repro.core.graph import divergence, edge_weights, full_edge_matrix
 from repro.core.greedy import (
     GreedyResult,
@@ -21,6 +36,15 @@ from repro.core.sparsify import (
 )
 
 __all__ = [
+    "Backend",
+    "OracleBackend",
+    "PallasBackend",
+    "ShardedBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+    "SubmodularFunction",
     "FacilityLocation",
     "FeatureCoverage",
     "divergence",

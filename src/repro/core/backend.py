@@ -1,0 +1,241 @@
+"""Execution backends for the submodular-maximization hot paths.
+
+Every algorithm in :mod:`repro.core` evaluates the same three primitives —
+``gains`` (greedy's inner loop), ``pairwise_gains`` and ``divergence`` (the SS
+round, paper Def. 2) — but *how* those are executed depends on where the code
+runs.  This module is the single dispatch point:
+
+- ``oracle``  — plain jnp (XLA) on whatever the default device is.  The
+  reference semantics; always available.
+- ``pallas``  — the fused TPU kernels in :mod:`repro.kernels` (interpret mode
+  on CPU), falling back to the oracle for configurations the kernels do not
+  cover (``feat_w`` feature weights, facility location).
+- ``sharded`` — shard_map over a device mesh: the whole SS loop runs
+  distributed via the per-shard function views declared on the objective
+  (see :mod:`repro.core.distributed`).
+
+Selection is by a ``backend=`` argument accepted throughout the stack: a
+string (registry lookup), a :class:`Backend` instance (e.g. a
+:class:`ShardedBackend` carrying a specific mesh), or None for the default
+(the ``REPRO_SS_BACKEND`` environment variable, else ``oracle``).  Backends
+are hashable frozen dataclasses so they ride through ``jax.jit`` as static
+arguments.
+
+Adding a backend: subclass :class:`Backend`, override the primitives you
+accelerate (anything left alone inherits the oracle semantics), then
+``register_backend("name", factory)``.  See docs/backends.md for the full
+contract, including what a new *objective* must implement to be reachable
+from each backend.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+
+from repro.core import graph
+from repro.core.functions import SubmodularFunction
+
+Array = jax.Array
+
+
+def default_pallas_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU.
+
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode (CI / CPU correctness
+    path); ``=0`` forces the compiled kernel.
+    """
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] == "1"
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend(abc.ABC):
+    """Execution strategy for the submodular primitives.
+
+    The base class implements every primitive with the jnp oracle; subclasses
+    override what they accelerate.  Instances are immutable and hashable so
+    they can be jit-static.
+    """
+
+    name = "oracle"
+
+    # -- primitives --------------------------------------------------------
+    def gains(self, fn: SubmodularFunction, state, **kw) -> Array:
+        """f(v|S) for all v.  Shape (n,)."""
+        return fn.gains(state)
+
+    def pairwise_gains(
+        self, fn: SubmodularFunction, probes: Array, state=None, **kw
+    ) -> Array:
+        """f(v | S + u) for u in probes.  Shape (r, n)."""
+        return fn.pairwise_gains(probes, state)
+
+    def divergence(
+        self,
+        fn: SubmodularFunction,
+        probes: Array,
+        probe_mask: Array | None = None,
+        residual: Array | None = None,
+        state=None,
+        **kw,
+    ) -> Array:
+        """w_{U,v} = min_{u in U} [f(v|S+u) - f(u|V\\u)] for all v.  (n,)."""
+        return graph.divergence(fn, probes, probe_mask, residual, state)
+
+    # -- whole-loop entry points -------------------------------------------
+    def sparsify(self, fn: SubmodularFunction, key: Array, **kw):
+        """Run SS (Algorithm 1) under this backend.  Returns an SSResult.
+
+        The default runs the dense single-process loop with this backend's
+        ``divergence``; the sharded backend overrides the whole loop.
+        """
+        from repro.core.sparsify import _sparsify_dense
+
+        return _sparsify_dense(fn, key, backend=self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleBackend(Backend):
+    """Reference jnp semantics — inherits every primitive unchanged."""
+
+    name = "oracle"
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(Backend):
+    """Fused Pallas kernels with oracle fallback.
+
+    ``interpret=None`` auto-detects (interpret mode off-TPU, honoring
+    ``REPRO_PALLAS_INTERPRET``).  Objectives advertise kernel support via
+    their ``pallas_divergence`` / ``pallas_gains`` hooks; a ``None`` return
+    (e.g. FeatureCoverage with ``feat_w``, FacilityLocation) falls back to
+    the oracle path so the backend is always safe to select.
+    """
+
+    name = "pallas"
+    interpret: bool | None = None
+
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return default_pallas_interpret()
+        return self.interpret
+
+    def gains(self, fn: SubmodularFunction, state, **kw) -> Array:
+        out = fn.pallas_gains(state, interpret=self._interpret(), **kw)
+        return fn.gains(state) if out is None else out
+
+    def divergence(
+        self,
+        fn: SubmodularFunction,
+        probes: Array,
+        probe_mask: Array | None = None,
+        residual: Array | None = None,
+        state=None,
+        **kw,
+    ) -> Array:
+        if residual is None:
+            residual = fn.residual_gains()
+        out = fn.pallas_divergence(
+            probes, residual, state, probe_mask,
+            interpret=self._interpret(), **kw,
+        )
+        if out is None:
+            return graph.divergence(fn, probes, probe_mask, residual, state)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBackend(Backend):
+    """shard_map execution over a device mesh.
+
+    ``sparsify`` runs the whole SS loop distributed (collectives over
+    ``data_axis``; optional per-pod hierarchy over ``pod_axis``) — see
+    :func:`repro.core.distributed.ss_sparsify_sharded`.  The per-call
+    primitives (``gains`` etc.) inherit the oracle path: after SS the
+    surviving ground set is polylog-sized, so greedy's inner loop does not
+    benefit from sharding.
+
+    ``mesh=None`` builds a 1-D mesh over all visible devices at call time.
+    """
+
+    name = "sharded"
+    mesh: jax.sharding.Mesh | None = None
+    data_axis: str = "data"
+    pod_axis: str | None = None
+    bins: int = 512
+
+    def _mesh(self) -> jax.sharding.Mesh:
+        if self.mesh is not None:
+            return self.mesh
+        from repro.compat import make_mesh
+
+        return make_mesh((jax.device_count(),), (self.data_axis,))
+
+    def sparsify(self, fn: SubmodularFunction, key: Array, **kw):
+        from repro.core import distributed
+
+        state = kw.pop("state", None)
+        if state is not None:
+            raise NotImplementedError(
+                "sharded SS does not support conditional state yet; "
+                "use backend='oracle' or 'pallas' for G(V, E|S)"
+            )
+        if kw.pop("importance", False):
+            raise NotImplementedError(
+                "sharded SS does not support importance sampling yet"
+            )
+        return distributed.ss_sparsify_sharded(
+            fn, key, self._mesh(),
+            data_axis=self.data_axis, pod_axis=self.pod_axis,
+            bins=self.bins, **kw,
+        )
+
+
+# -- registry ---------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], Backend]] = {}
+_INSTANCES: dict[str, Backend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], Backend]) -> None:
+    """Register (or replace) a backend factory under ``name``."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> Backend:
+    """Singleton backend instance for a registered name."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        )
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def resolve_backend(spec: "str | Backend | None" = None) -> Backend:
+    """Resolve a ``backend=`` argument: Backend instance (as-is), registry
+    name, or None -> ``$REPRO_SS_BACKEND`` else ``oracle``."""
+    if isinstance(spec, Backend):
+        return spec
+    if spec is None:
+        spec = os.environ.get("REPRO_SS_BACKEND", "oracle")
+    if isinstance(spec, str):
+        return get_backend(spec)
+    raise TypeError(f"backend must be a name, Backend, or None; got {spec!r}")
+
+
+register_backend("oracle", OracleBackend)
+register_backend("pallas", PallasBackend)
+register_backend("sharded", ShardedBackend)

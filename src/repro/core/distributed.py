@@ -1,16 +1,22 @@
 """Distributed Submodular Sparsification: shard_map over the data axis.
 
 This realizes the paper's "per-iteration computation ... is small and highly
-parallelizable" claim on a TPU mesh.  The ground set's feature rows are
-sharded over ``data``; each SS round is:
+parallelizable" claim on a TPU mesh, for **any** objective implementing the
+shard hooks of :class:`repro.core.functions.SubmodularFunction` (per-shard
+function views — no objective-specific math lives here).  Each SS round is:
 
   1. **distributed probe sampling** — every device draws Gumbel scores for its
-     live rows, proposes its local top-m, all-gathers the (m, F) candidate
-     rows + scores, and takes the global top-m.  (Gumbel top-k == uniform
-     sampling without replacement, so this is exactly Algorithm 1's sampler.)
-  2. **local divergence** — the (m, F) probe block is tiny and replicated;
-     each device computes w_{U,v} for its own rows only: the (m, n_local, F)
-     contraction is embarrassingly parallel, as the paper promises.
+     live candidates, proposes its local top-m, all-gathers the candidate
+     (score, payload, residual) triples, and takes the global top-m.  (Gumbel
+     top-k == uniform sampling without replacement, so this is exactly
+     Algorithm 1's sampler.)  A probe's *payload* is whatever its objective
+     declares sufficient for any shard to evaluate probe-conditioned gains —
+     a coverage row for FeatureCoverage, a similarity column for
+     FacilityLocation.
+  2. **local divergence** — the (m, payload_dim) probe block is tiny and
+     replicated; each device computes w_{U,v} for its own candidates only via
+     ``fn.shard_payload_gains``: embarrassingly parallel, as the paper
+     promises.
   3. **distributed quantile prune** — instead of a global sort, a fixed-bin
      histogram of live divergences is psum'd and the (1 - 1/sqrt(c))-quantile
      threshold read off it.  We prune *at most* that fraction (the bin edge
@@ -23,38 +29,42 @@ sharded over ``data``; each SS round is:
 axis, every pod treats its own row range as a standalone ground set —
 collectives bind only the ``data`` axis — and the returned V' is the union of
 per-pod V' sets.  Cross-pod (DCN) traffic is zero during sparsification; only
-the final (tiny) reduced set crosses pods.
+the final (tiny) reduced set crosses pods.  Pod hierarchy requires the
+objective's arrays to be row-local (``supports_pod_sharding``): FeatureCoverage
+qualifies, FacilityLocation (whose served rows span the full ground set) does
+not.
+
+Entry points: ``ss_sparsify(fn, key, backend="sharded")`` (via
+:class:`repro.core.backend.ShardedBackend`) or :func:`ss_sparsify_sharded`
+directly with an explicit mesh.
 """
 
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.functions import NEG, FeatureCoverage
+from repro.compat import shard_map
+from repro.core.functions import NEG, FeatureCoverage, SubmodularFunction
 from repro.core.greedy import greedy
-from repro.core.sparsify import max_rounds, probe_count
+from repro.core.sparsify import SSResult, max_rounds, probe_count
 
 Array = jax.Array
 INF = -NEG
 
 
-def _phi(kind: str, c: Array) -> Array:
-    if kind == "sqrt":
-        return jnp.sqrt(jnp.maximum(c, 0.0))
-    if kind == "log1p":
-        return jnp.log1p(jnp.maximum(c, 0.0))
-    if kind == "linear":
-        return c
-    raise ValueError(kind)
+def _as_objective(fn, phi: str = "sqrt") -> SubmodularFunction:
+    """Legacy entry point: a raw (n, F) feature array means FeatureCoverage."""
+    if isinstance(fn, SubmodularFunction):
+        return fn
+    return FeatureCoverage(W=jnp.asarray(fn), phi=phi)
 
 
 def ss_sparsify_sharded(
-    W: Array,                  # (n, F) nonnegative feature rows (sharded in)
+    fn,                        # SubmodularFunction or legacy (n, F) array
     key: Array,
     mesh: Mesh,
     *,
@@ -64,28 +74,46 @@ def ss_sparsify_sharded(
     c: float = 8.0,
     phi: str = "sqrt",
     bins: int = 512,
-):
-    """Distributed Algorithm 1.  Returns (vprime (n,) bool, eps_hat scalar).
+    alive: Array | None = None,
+) -> SSResult:
+    """Distributed Algorithm 1 over any shard-capable objective.
 
-    ``W`` may live on host or device; it is placed row-sharded over
-    (pod, data).  Each pod sparsifies its own row range independently
-    (collectives over ``data`` only); the result is the union mask.
+    The objective's arrays are placed candidate-sharded over (pod, data) via
+    its ``shard_pack`` spec; each pod sparsifies its own candidate range
+    independently (collectives over ``data`` only).  Returns a full
+    :class:`SSResult` (``alive_trace`` is only recorded for single-level
+    meshes; with a pod hierarchy it is -1, since pods run independent loops).
     """
-    n, F = W.shape
+    fn = _as_objective(fn, phi)
+    n = fn.n
     axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
     nshards = 1
     for a in axes:
         nshards *= mesh.shape[a]
     ndata = mesh.shape[data_axis]
     npods = mesh.shape[pod_axis] if pod_axis else 1
+    if pod_axis and not fn.supports_pod_sharding:
+        raise NotImplementedError(
+            f"{type(fn).__name__} does not support pod-hierarchical sharding"
+        )
     assert n % nshards == 0, f"n={n} must divide {nshards} shards (pad rows)"
     n_pod = n // npods                       # per-pod ground set size
+    n_loc = n // nshards                     # per-device candidate count
     m = min(probe_count(n_pod, r), n_pod)    # probes per round (per pod)
+    # Each device proposes its local top-m_loc; proposing every local row is
+    # enough when a shard holds fewer than m candidates (ndata * m_loc >= m).
+    m_loc = min(m, n_loc)
     rounds_cap = max_rounds(n_pod, r, c)
     shrink = 1.0 - 1.0 / math.sqrt(c)
 
-    in_spec = P(axes if len(axes) > 1 else axes[0], None)
-    W = jax.device_put(W, NamedSharding(mesh, in_spec))
+    arrays, specs, rebuild = fn.shard_pack(axes)
+    arrays = tuple(
+        jax.device_put(a, NamedSharding(mesh, s)) for a, s in zip(arrays, specs)
+    )
+    mask_spec = P(axes if len(axes) > 1 else axes[0])
+    alive0 = jnp.ones((n,), bool) if alive is None else jnp.asarray(alive)
+    alive0 = jax.device_put(alive0, NamedSharding(mesh, mask_spec))
+
     keys = jax.random.split(key, npods)      # per-pod independent streams
     keys_spec = P(pod_axis) if pod_axis else P()
     if pod_axis:
@@ -93,26 +121,24 @@ def ss_sparsify_sharded(
     else:
         keys = keys[0]
 
-    def kernel(W_loc: Array, key_loc: Array):
-        # W_loc: (n_local, F) — this device's rows.  All collectives bind
-        # data_axis only: pods run independently.
+    def kernel(key_loc: Array, alive_loc: Array, *arrs):
+        # All collectives bind data_axis only: pods run independently.
+        fn_loc = rebuild(*arrs)
         if pod_axis:
             key_loc = key_loc[0]             # (1, 2) -> (2,)
-        n_loc = W_loc.shape[0]
+        assert fn_loc.local_n() == n_loc
         didx = jax.lax.axis_index(data_axis)
 
-        # residual gains f(u | V\u) against the *pod* ground set
-        C = jax.lax.psum(jnp.sum(W_loc, axis=0), data_axis)       # (F,)
-        phiC = jnp.sum(_phi(phi, C))
-        residual = phiC - jnp.sum(_phi(phi, C[None, :] - W_loc), axis=-1)
+        ctx = fn_loc.shard_init(data_axis)
+        resid_loc = fn_loc.shard_residuals(ctx)       # (n_loc,)
 
         def cond(carry):
-            alive, vprime, div, eps, k, rnd = carry
+            alive, vprime, div, eps, k, rnd, trace = carry
             total = jax.lax.psum(jnp.sum(alive), data_axis)
             return (total > m) & (rnd < rounds_cap)
 
         def body(carry):
-            alive, vprime, div, eps, k, rnd = carry
+            alive, vprime, div, eps, k, rnd, trace = carry
             k, k1 = jax.random.split(k)
             # identical stream on every data shard; fold in the shard id for
             # distinct local gumbel draws
@@ -120,28 +146,28 @@ def ss_sparsify_sharded(
                 jax.random.gumbel(jax.random.fold_in(k1, didx), (n_loc,))
                 + jnp.where(alive, 0.0, NEG)
             )
-            loc_val, loc_idx = jax.lax.top_k(g, m)
-            loc_rows = W_loc[loc_idx]                         # (m, F)
+            loc_val, loc_idx = jax.lax.top_k(g, m_loc)
+            loc_pay = fn_loc.shard_payloads(loc_idx)          # (m_loc, D)
+            loc_res = resid_loc[loc_idx]                      # (m_loc,)
             all_val = jax.lax.all_gather(loc_val, data_axis).reshape(-1)
-            all_rows = jax.lax.all_gather(loc_rows, data_axis).reshape(-1, F)
+            all_pay = jax.lax.all_gather(loc_pay, data_axis)
+            all_pay = all_pay.reshape(-1, all_pay.shape[-1])
+            all_res = jax.lax.all_gather(loc_res, data_axis).reshape(-1)
             top_val, top_pos = jax.lax.top_k(all_val, m)      # global top-m
-            probes = all_rows[top_pos]                        # (m, F)
+            payloads = all_pay[top_pos]                       # (m, D)
+            resid_p = all_res[top_pos]                        # (m,)
 
-            # membership: my local row j became a probe iff its gumbel value
-            # is among the global top-m (values are a.s. distinct)
+            # membership: my local candidate j became a probe iff its gumbel
+            # value is among the global top-m (values are a.s. distinct)
             thresh_val = top_val[-1]
             probe_hot = alive & (g >= thresh_val)
             vprime = vprime | probe_hot
             alive = alive & ~probe_hot
 
-            # local divergence w_{U, v} for my rows
-            CU = probes                                        # S=∅: state 0
-            phi_cu = jnp.sum(_phi(phi, CU), axis=-1)           # (m,)
-            both = CU[:, None, :] + W_loc[None, :, :]          # (m, n_loc, F)
-            pair = jnp.sum(_phi(phi, both), axis=-1) - phi_cu[:, None]
-            # residual of each probe: recompute from the gathered rows
-            resid_p = phiC - jnp.sum(_phi(phi, C[None, :] - CU), axis=-1)
-            w = pair - resid_p[:, None]                        # (m, n_loc)
+            # local divergence w_{U, v} for my candidates, via the per-shard
+            # function view: f(v | U+u) from the replicated payload block.
+            pair = fn_loc.shard_payload_gains(payloads, ctx)  # (m, n_loc)
+            w = pair - resid_p[:, None]
             div = jnp.minimum(div, jnp.min(w, axis=0))
 
             # distributed quantile: histogram of live divergences
@@ -172,38 +198,51 @@ def ss_sparsify_sharded(
                 )
             )
             alive = alive & ~removed
-            return (alive, vprime, div, eps, k, rnd + 1)
+            trace = trace.at[rnd].set(
+                jax.lax.psum(jnp.sum(alive), data_axis).astype(jnp.int32)
+            )
+            return (alive, vprime, div, eps, k, rnd + 1, trace)
 
         carry = (
-            jnp.ones((n_loc,), bool),
+            alive_loc,
             jnp.zeros((n_loc,), bool),
             jnp.full((n_loc,), INF),
             jnp.float32(NEG),
             key_loc,
             jnp.int32(0),
+            jnp.full((rounds_cap,), -1, jnp.int32),
         )
-        alive, vprime, div, eps, _, rnd = jax.lax.while_loop(cond, body, carry)
+        alive, vprime, div, eps, _, rnd, trace = jax.lax.while_loop(
+            cond, body, carry
+        )
         vprime = vprime | alive
         eps = jnp.maximum(eps, 0.0)
-        return vprime, (eps[None] if pod_axis else eps)
+        if pod_axis:
+            return vprime, div, eps[None], rnd[None], trace[None]
+        return vprime, div, eps, rnd, trace
 
-    out_mask_spec = P(axes if len(axes) > 1 else axes[0])
-    eps_spec = P(pod_axis) if pod_axis else P()
-    fn = jax.shard_map(
+    scalar_spec = P(pod_axis) if pod_axis else P()
+    trace_spec = P(pod_axis, None) if pod_axis else P()
+    fn_sm = shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(in_spec, keys_spec),
-        out_specs=(out_mask_spec, eps_spec),
-        axis_names=set(axes),
-        check_vma=False,
+        in_specs=(keys_spec, mask_spec) + specs,
+        out_specs=(mask_spec, mask_spec, scalar_spec, scalar_spec, trace_spec),
     )
-    vprime, eps = fn(W, keys)
-    eps_hat = jnp.max(eps) if pod_axis else eps
-    return vprime, eps_hat
+    vprime, div, eps, rounds, trace = fn_sm(keys, alive0, *arrays)
+    eps_hat = jnp.max(eps)
+    rounds_out = jnp.max(rounds)
+    if pod_axis:
+        # Pods run independent loops of (possibly) different length — a single
+        # global live-count trace is not well defined, so mark unrecorded.
+        trace_out = jnp.full((rounds_cap,), -1, jnp.int32)
+    else:
+        trace_out = trace
+    return SSResult(vprime, div, eps_hat, rounds_out, trace_out)
 
 
 def summarize_sharded(
-    W: Array,
+    fn,                        # SubmodularFunction or legacy (n, F) array
     k: int,
     key: Array,
     mesh: Mesh,
@@ -213,16 +252,19 @@ def summarize_sharded(
     r: int = 8,
     c: float = 8.0,
     phi: str = "sqrt",
+    bins: int = 512,
 ):
     """End-to-end distributed pipeline: sharded SS -> greedy on the union V'.
 
-    The greedy stage sees only |V'| = O(log² n) rows — it runs on the full
-    (replicated) objective like the paper's final stage.  Returns
-    (selected (k,) indices into the original ground set, f(S), vprime mask).
+    The greedy stage sees only |V'| = O(log² n) live candidates — it runs on
+    the full (replicated) objective like the paper's final stage.  Returns
+    (selected (k,) indices into the original ground set, f(S), vprime mask,
+    eps_hat certificate).
     """
-    vprime, eps = ss_sparsify_sharded(
-        W, key, mesh, data_axis=data_axis, pod_axis=pod_axis, r=r, c=c, phi=phi
+    fn = _as_objective(fn, phi)
+    ss = ss_sparsify_sharded(
+        fn, key, mesh,
+        data_axis=data_axis, pod_axis=pod_axis, r=r, c=c, bins=bins,
     )
-    fn = FeatureCoverage(W=jnp.asarray(W), phi=phi)
-    res = greedy(fn, k, alive=jnp.asarray(vprime))
-    return res.selected, res.value, vprime, eps
+    res = greedy(fn, k, alive=jnp.asarray(ss.vprime))
+    return res.selected, res.value, ss.vprime, ss.eps_hat

@@ -1,10 +1,10 @@
 """Submodular objective functions with batched, TPU-friendly marginal-gain APIs.
 
-Every function here exposes the same vectorized protocol, built around a compact
-*state* that summarizes the current solution set ``S`` so that marginal gains
-``f(v|S)`` for **all** candidates ``v`` are computed in one dense, matmul-shaped
-operation (no per-element Python loops — the TPU adaptation of the paper's
-per-pair function evaluations, see DESIGN.md §3):
+Every objective subclasses :class:`SubmodularFunction`, a formal abstract base
+built around a compact *state* that summarizes the current solution set ``S``
+so that marginal gains ``f(v|S)`` for **all** candidates ``v`` are computed in
+one dense, matmul-shaped operation (no per-element Python loops — the TPU
+adaptation of the paper's per-pair function evaluations, see DESIGN.md §3):
 
 - ``empty_state()``             -> state for S = ∅
 - ``value(state)``              -> f(S)
@@ -18,6 +18,19 @@ per-pair function evaluations, see DESIGN.md §3):
 ``pairwise_gains`` + ``residual_gains`` are exactly the ingredients of the
 submodularity-graph edge weight  w_{u->v} = f(v|u) - f(u|V\\u)  (paper Eq. 3) and
 its conditional version w_{uv|S} (paper Eq. 4).
+
+Beyond the core protocol, the base class defines two groups of *optional*
+execution hooks consumed by :mod:`repro.core.backend` (see docs/backends.md):
+
+- **Pallas hooks** (``pallas_divergence`` / ``pallas_gains``) let an objective
+  provide a fused-kernel implementation of the SS hot spots; returning ``None``
+  (the default) makes the pallas backend fall back to the jnp oracle.
+- **Shard hooks** (``shard_pack`` / ``local_n`` / ``shard_init`` /
+  ``shard_residuals`` / ``shard_payloads`` / ``shard_payload_gains``) describe
+  a per-shard *function view*: how the objective's arrays are partitioned over
+  a mesh and how each device computes residuals and probe-conditioned gains for
+  its local slice of the ground set.  Any objective implementing them runs
+  under the sharded SS loop in :mod:`repro.core.distributed` unchanged.
 
 Implemented objectives:
 
@@ -34,12 +47,13 @@ boundaries; static (non-array) config lives in the pytree aux data.
 
 from __future__ import annotations
 
+import abc
 import dataclasses
-from functools import partial
-from typing import Any
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 Array = jax.Array
 
@@ -64,9 +78,134 @@ def _phi(kind: str, c: Array, cap: Array | None) -> Array:
     raise ValueError(f"unknown concave transform {kind!r}")
 
 
+class SubmodularFunction(abc.ABC):
+    """Abstract base for monotone submodular objectives over n ground elements.
+
+    Subclasses must be registered pytrees (array leaves, static config in aux)
+    so instances cross jit / shard_map boundaries.  The abstract core protocol
+    is what every algorithm in :mod:`repro.core` consumes; the ``pallas_*`` and
+    ``shard_*`` hooks are optional capability extensions used by the execution
+    backends in :mod:`repro.core.backend`.
+    """
+
+    # -- core protocol (required) ------------------------------------------
+    @property
+    @abc.abstractmethod
+    def n(self) -> int:
+        """Ground-set size."""
+
+    @abc.abstractmethod
+    def empty_state(self) -> Any:
+        """Summary state for S = ∅."""
+
+    @abc.abstractmethod
+    def value(self, state: Any) -> Array:
+        """f(S) from the summary state."""
+
+    @abc.abstractmethod
+    def gains(self, state: Any) -> Array:
+        """f(v|S) for all v.  Shape (n,)."""
+
+    @abc.abstractmethod
+    def add(self, state: Any, v: Array) -> Any:
+        """State for S + v (rank-1 update)."""
+
+    @abc.abstractmethod
+    def add_many(self, state: Any, mask: Array) -> Any:
+        """State for S + {v : mask[v]}."""
+
+    @abc.abstractmethod
+    def pairwise_gains(self, probes: Array, state: Any | None = None) -> Array:
+        """f(v | S + u) for u in probes (r,), all v.  Shape (r, n)."""
+
+    @abc.abstractmethod
+    def residual_gains(self) -> Array:
+        """f(v | V \\ v) for all v.  Shape (n,)."""
+
+    def singleton_gains(self) -> Array:
+        """f(v) for all v ( = gains on the empty state)."""
+        return self.gains(self.empty_state())
+
+    # -- pallas hooks (optional) -------------------------------------------
+    # Returning None means "no fused kernel for this configuration"; the
+    # pallas backend then falls back to the jnp oracle.  ``interpret`` selects
+    # Pallas interpret mode (CPU correctness path) vs. the compiled TPU kernel.
+
+    def pallas_divergence(
+        self,
+        probes: Array,
+        residual: Array,
+        state: Any | None = None,
+        probe_mask: Array | None = None,
+        *,
+        interpret: bool,
+        **block_kw,
+    ) -> Array | None:
+        """Fused divergence w_{U,v} (paper Def. 2) for all v, or None."""
+        return None
+
+    def pallas_gains(
+        self, state: Any, *, interpret: bool, **block_kw
+    ) -> Array | None:
+        """Fused greedy gains f(v|S) for all v, or None."""
+        return None
+
+    # -- shard hooks (optional) --------------------------------------------
+    # Together these define a per-shard *function view*: `shard_pack` says how
+    # the objective's arrays are laid out over the mesh; the remaining hooks
+    # are called *inside* shard_map on the rebuilt local view, where array
+    # leaves hold only this device's slice of the ground set.
+
+    #: whether per-pod hierarchical sharding (a standalone ground set per pod)
+    #: is supported — requires the objective's arrays to be row-local.
+    supports_pod_sharding: bool = False
+
+    def shard_pack(
+        self, axes: Sequence[str]
+    ) -> tuple[tuple[Array, ...], tuple[P, ...], Callable[..., "SubmodularFunction"]]:
+        """(arrays, partition specs, rebuild) for entering shard_map.
+
+        ``arrays`` are the objective's array leaves, ``specs`` their
+        PartitionSpecs over mesh ``axes`` (candidate dimension sharded), and
+        ``rebuild(*local_arrays)`` reconstructs the local function view inside
+        the shard_map body.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the sharded protocol"
+        )
+
+    def local_n(self) -> int:
+        """Number of *local* candidates held by this shard view."""
+        raise NotImplementedError
+
+    def shard_init(self, axis: str) -> Any:
+        """One-time collective setup: pod-global context (psum/all_gather over
+        ``axis``) reused by shard_residuals / shard_payload_gains."""
+        raise NotImplementedError
+
+    def shard_residuals(self, ctx: Any) -> Array:
+        """f(u | V \\ u) for the local candidates.  Shape (n_local,)."""
+        raise NotImplementedError
+
+    def shard_payloads(self, idx: Array) -> Array:
+        """Payload rows for local candidate indices ``idx`` (k,) — a compact
+        description of each probe sufficient for any shard to evaluate
+        probe-conditioned gains.  Shape (k, payload_dim)."""
+        raise NotImplementedError
+
+    def shard_payload_gains(self, payloads: Array, ctx: Any) -> Array:
+        """f(v | ∅ + u) for gathered probe ``payloads`` (m, payload_dim) and
+        all local candidates v.  Shape (m, n_local)."""
+        raise NotImplementedError
+
+
+def _row_spec(axes: Sequence[str]) -> P:
+    return P(tuple(axes) if len(axes) > 1 else axes[0], None)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class FeatureCoverage:
+class FeatureCoverage(SubmodularFunction):
     """Feature-based concave-over-modular coverage function (paper §4).
 
     f(S) = sum_f  w_f * phi( c_f(S) ),   c_f(S) = sum_{v in S} W[v, f]
@@ -82,6 +221,8 @@ class FeatureCoverage:
     feat_w: Array | None = None  # (F,) or None
     phi: str = "sqrt"
     alpha: float = 0.2          # saturation fraction for phi="satcov"
+
+    supports_pod_sharding = True
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
@@ -158,13 +299,90 @@ class FeatureCoverage:
             - _phi(self.phi, C[None, :] - self.W, cap)
         )
 
-    def singleton_gains(self) -> Array:
-        return self.gains(self.empty_state())
+    # -- pallas hooks ------------------------------------------------------
+    def pallas_divergence(
+        self,
+        probes: Array,
+        residual: Array,
+        state: Array | None = None,
+        probe_mask: Array | None = None,
+        *,
+        interpret: bool,
+        **block_kw,
+    ) -> Array | None:
+        if self.feat_w is not None:
+            # phi is applied per feature and then weighted (sum_f w_f phi(x_f));
+            # the kernel has no feature-weight path, so signal oracle fallback.
+            return None
+        from repro.kernels.ss_weights import ss_divergence_kernel
+
+        base = self.empty_state() if state is None else state
+        cap = self._cap()
+        CU = base[None, :] + self.W[probes]                      # (r, F)
+        phi_cu = jnp.sum(_phi(self.phi, CU.astype(jnp.float32), cap), axis=-1)
+        resid = residual[probes]
+        if probe_mask is not None:
+            # Masked probes use the kernel's pad-row convention: phi_cu = -INF
+            # makes their edge weight +INF, so they never win the min.
+            phi_cu = jnp.where(probe_mask, phi_cu, NEG)
+            resid = jnp.where(probe_mask, resid, 0.0)
+        return ss_divergence_kernel(
+            self.W, CU, phi_cu, resid, cap,
+            phi=self.phi, interpret=interpret, **block_kw,
+        )
+
+    def pallas_gains(
+        self, state: Array, *, interpret: bool, **block_kw
+    ) -> Array | None:
+        if self.feat_w is not None:
+            return None
+        from repro.kernels.feature_gains import feature_gains_kernel
+
+        cap = self._cap()
+        phi_c = jnp.sum(_phi(self.phi, state.astype(jnp.float32), cap))
+        return feature_gains_kernel(
+            self.W, state, phi_c, cap,
+            phi=self.phi, interpret=interpret, **block_kw,
+        )
+
+    # -- shard hooks (row-sharded: each device owns a block of W's rows) ----
+    def shard_pack(self, axes):
+        spec = _row_spec(axes)
+        if self.feat_w is None:
+            return (self.W,), (spec,), (
+                lambda W_loc: dataclasses.replace(self, W=W_loc)
+            )
+        return (self.W, self.feat_w), (spec, P(None)), (
+            lambda W_loc, fw: dataclasses.replace(self, W=W_loc, feat_w=fw)
+        )
+
+    def local_n(self) -> int:
+        return self.W.shape[0]
+
+    def shard_init(self, axis: str):
+        # Pod-global coverage totals: everything downstream is local given C.
+        C = jax.lax.psum(jnp.sum(self.W, axis=0), axis)          # (F,)
+        cap = self.alpha * C if self.phi == "satcov" else None
+        phiC = self._wsum(_phi(self.phi, C, cap))
+        return (C, cap, phiC)
+
+    def shard_residuals(self, ctx) -> Array:
+        C, cap, phiC = ctx
+        return phiC - self._wsum(_phi(self.phi, C[None, :] - self.W, cap))
+
+    def shard_payloads(self, idx: Array) -> Array:
+        return self.W[idx]                                       # (k, F)
+
+    def shard_payload_gains(self, payloads: Array, ctx) -> Array:
+        _, cap, _ = ctx
+        phi_cu = self._wsum(_phi(self.phi, payloads, cap))       # (m,)
+        both = payloads[:, None, :] + self.W[None, :, :]         # (m, nl, F)
+        return self._wsum(_phi(self.phi, both, cap)) - phi_cu[:, None]
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class FacilityLocation:
+class FacilityLocation(SubmodularFunction):
     """Facility location: f(S) = sum_i max(0, max_{s in S} sim[i, s]).
 
     ``sim`` is the (n, n) similarity matrix (assumed nonnegative for
@@ -241,8 +459,56 @@ class FacilityLocation:
         loss_per_row = jnp.where(tie, 0.0, jnp.maximum(best, 0.0) - jnp.maximum(second, 0.0))
         return jnp.sum(jnp.where(is_best, loss_per_row[:, None], 0.0), axis=0)
 
-    def singleton_gains(self) -> Array:
-        return self.gains(self.empty_state())
+    # -- shard hooks (column-sharded: each device owns a block of candidate
+    # columns, with the full set of served rows) ---------------------------
+    # A probe's payload is its n-dim coverage column, so any shard can
+    # evaluate f(v | ∅ + u) against it locally.  Pod hierarchy would need
+    # row-local views too, hence supports_pod_sharding = False.
 
+    def shard_pack(self, axes):
+        if len(axes) > 1:
+            raise NotImplementedError(
+                "FacilityLocation shards candidates only (no pod hierarchy): "
+                "its served rows span the full ground set"
+            )
+        return (self.sim,), (P(None, axes[0]),), (
+            lambda sim_loc: dataclasses.replace(self, sim=sim_loc)
+        )
 
-SubmodularFunction = Any  # structural protocol: FeatureCoverage | FacilityLocation
+    def local_n(self) -> int:
+        return self.sim.shape[1]
+
+    def shard_init(self, axis: str):
+        # Global per-row top-2 similarities (for residuals): gather each
+        # shard's local top-2 and reduce.
+        k2 = min(2, self.sim.shape[1])
+        loc_top = jax.lax.top_k(self.sim, k2)[0]                 # (n, k2)
+        allt = jax.lax.all_gather(loc_top, axis)                 # (S, n, k2)
+        allt = jnp.moveaxis(allt, 0, 1).reshape(self.sim.shape[0], -1)
+        pad = jnp.full((self.sim.shape[0], 2), NEG, allt.dtype)
+        top2 = jax.lax.top_k(jnp.concatenate([allt, pad], axis=1), 2)[0]
+        best, second = top2[:, 0], top2[:, 1]
+        # ties: number of global columns achieving the per-row max
+        cnt = jax.lax.psum(
+            jnp.sum(self.sim >= best[:, None], axis=1), axis
+        )
+        loss = jnp.where(
+            cnt > 1, 0.0, jnp.maximum(best, 0.0) - jnp.maximum(second, 0.0)
+        )
+        return (best, loss)
+
+    def shard_residuals(self, ctx) -> Array:
+        best, loss = ctx
+        is_best = self.sim >= best[:, None]                      # (n, n_loc)
+        return jnp.sum(jnp.where(is_best, loss[:, None], 0.0), axis=0)
+
+    def shard_payloads(self, idx: Array) -> Array:
+        # Probe coverage columns mu_u = max(0, sim[:, u]) — (k, n).
+        return jnp.maximum(self.sim[:, idx].T, 0.0)
+
+    def shard_payload_gains(self, payloads: Array, ctx) -> Array:
+        # f(v | ∅+u) = sum_i max(sim[i, v] - mu[u, i], 0) for local columns v.
+        return jnp.sum(
+            jnp.maximum(self.sim.T[None, :, :] - payloads[:, None, :], 0.0),
+            axis=-1,
+        )

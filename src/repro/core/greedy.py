@@ -4,8 +4,10 @@ greedy, and bidirectional randomized greedy (for the non-monotone Eq. 9).
 TPU adaptation (DESIGN.md §3): the classic lazy-greedy priority queue is a
 pointer structure with data-dependent control flow — poison for accelerators.
 On TPU the efficient formulation is *incremental dense recomputation*: keep the
-summary state, recompute all masked gains with one fused op per step
-(`fn.gains` is matmul-shaped), and take a masked argmax.  Lazy greedy is still
+summary state, recompute all masked gains with one fused op per step, and take
+a masked argmax.  The per-step gains call is dispatched through the execution
+backend layer (``backend="pallas"`` routes it to the fused Pallas kernel; the
+default oracle is plain jnp — see repro.core.backend).  Lazy greedy is still
 provided (host/numpy) because it is the paper's wall-clock baseline on CPU.
 """
 
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import Backend, resolve_backend
 from repro.core.functions import NEG, SubmodularFunction
 
 Array = jax.Array
@@ -31,21 +34,36 @@ class GreedyResult(NamedTuple):
     state: Array         # final summary state
 
 
-@partial(jax.jit, static_argnames=("k",))
-def greedy(fn: SubmodularFunction, k: int, alive: Array | None = None) -> GreedyResult:
+def greedy(
+    fn: SubmodularFunction,
+    k: int,
+    alive: Array | None = None,
+    backend: "str | Backend | None" = None,
+) -> GreedyResult:
     """Standard greedy under a cardinality constraint, restricted to ``alive``.
 
     Runs exactly k steps (static).  If fewer than k alive elements exist the
     remaining slots select the best dead element with gain forced to 0 — the
     returned value is still f of the alive selections only, because dead
-    elements are never added to the state.
+    elements are never added to the state.  ``backend`` selects the execution
+    path for the per-step gains (repro.core.backend); it is resolved here,
+    outside the jit boundary, so the env-var default is honored per call
+    rather than baked into the first trace.
     """
+    return _greedy(fn, k, alive, resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("k", "backend"))
+def _greedy(
+    fn: SubmodularFunction, k: int, alive: Array | None, backend: Backend
+) -> GreedyResult:
+    be = backend
     n = fn.n
     alive = jnp.ones((n,), bool) if alive is None else alive
 
     def step(carry, _):
         state, avail = carry
-        g = jnp.where(avail, fn.gains(state), NEG)
+        g = jnp.where(avail, be.gains(fn, state), NEG)
         v = jnp.argmax(g)
         ok = avail[v]
         new_state = jax.tree.map(
@@ -96,17 +114,30 @@ def lazy_greedy(
     return GreedyResult(jnp.asarray(sel), jnp.asarray(gains), fn.value(state), state)
 
 
-@partial(jax.jit, static_argnames=("k", "s"))
 def stochastic_greedy(
     fn: SubmodularFunction,
     k: int,
     key: Array,
     s: int,
     alive: Array | None = None,
+    backend: "str | Backend | None" = None,
 ) -> GreedyResult:
     """"Lazier than lazy greedy" [Mirzasoleiman et al. 2015]: per step, take the
     best element of a uniform random subset of size ``s`` (≈ (n/k) log(1/eps)).
     """
+    return _stochastic_greedy(fn, k, key, s, alive, resolve_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("k", "s", "backend"))
+def _stochastic_greedy(
+    fn: SubmodularFunction,
+    k: int,
+    key: Array,
+    s: int,
+    alive: Array | None,
+    backend: Backend,
+) -> GreedyResult:
+    be = backend
     n = fn.n
     alive = jnp.ones((n,), bool) if alive is None else alive
 
@@ -116,7 +147,7 @@ def stochastic_greedy(
         gumb = jax.random.gumbel(key_i, (n,)) + jnp.where(avail, 0.0, NEG)
         cand = jax.lax.top_k(gumb, s)[1]
         sub_mask = jnp.zeros((n,), bool).at[cand].set(True) & avail
-        g = jnp.where(sub_mask, fn.gains(state), NEG)
+        g = jnp.where(sub_mask, be.gains(fn, state), NEG)
         v = jnp.argmax(g)
         ok = avail[v]
         new_state = jax.tree.map(

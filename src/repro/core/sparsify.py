@@ -6,11 +6,17 @@ static n-slot tensor with a boolean ``alive`` mask; each SS round
   1. samples ``m = r·log2(n)`` probe indices from the live set (Gumbel top-k),
   2. moves them from ``alive`` into the retained mask ``vprime``,
   3. computes divergences w_{U,v} (paper Def. 2) for all live v in one fused
-     (m, n, F) block (Pallas kernel on TPU, jnp oracle elsewhere),
+     (m, n, F) block, dispatched through the selected execution backend
+     (jnp oracle, Pallas kernel, or shard_map — see repro.core.backend),
   4. drops the (1 - 1/sqrt(c)) fraction of live elements with the smallest
      *running* divergence (min over all probes sampled so far).
 The loop runs under ``jax.lax.while_loop`` with fully static shapes, so the
 whole sparsifier jit-compiles and can run inside the sharded data pipeline.
+
+Backend selection: ``ss_sparsify(fn, key, backend="pallas")`` (or a
+``Backend`` instance).  ``backend="sharded"`` swaps in the distributed loop
+from :mod:`repro.core.distributed` — the whole round then runs under
+shard_map over a mesh, for any objective implementing the shard hooks.
 
 Quality certificate: ``eps_hat`` is max_{v pruned} w_{U,v} at prune time — an
 upper bound on max_{v in V\\V'} w_{V',v} since the probe union only grows (the
@@ -28,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph
+from repro.core.backend import Backend, resolve_backend
 from repro.core.functions import NEG, SubmodularFunction
 from repro.core.greedy import bidirectional_greedy, greedy
 
@@ -47,16 +54,11 @@ def probe_count(n: int, r: int = 8) -> int:
     """m = r * log2(n) (paper samples ``r log n`` per round, log base 2)."""
     return max(1, int(r * math.log2(max(n, 2))))
 
-
 def max_rounds(n: int, r: int = 8, c: float = 8.0) -> int:
     """log_{sqrt(c)}(n) rounds suffice (paper §3.2); +2 slack for rounding."""
     return max(1, int(math.ceil(math.log(max(n, 2)) / math.log(math.sqrt(c)))) + 2)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("r", "c", "importance", "use_kernel"),
-)
 def ss_sparsify(
     fn: SubmodularFunction,
     key: Array,
@@ -65,7 +67,7 @@ def ss_sparsify(
     alive: Array | None = None,
     state: Array | None = None,
     importance: bool = False,
-    use_kernel: bool = False,
+    backend: "str | Backend | None" = None,
 ) -> SSResult:
     """Algorithm 1 (Submodular Sparsification).
 
@@ -78,8 +80,29 @@ def ss_sparsify(
       state: optional summary state for *conditional* SS on G(V, E|S).
       importance: §3.4 improvement 2 — sample probes with probability
         proportional to f(u) + f(u|V\\u) instead of uniformly.
-      use_kernel: dispatch divergence to the Pallas TPU kernel.
+      backend: execution backend — "oracle" (default), "pallas", "sharded",
+        or a Backend instance (repro.core.backend).
     """
+    be = resolve_backend(backend)
+    return be.sparsify(
+        fn, key, r=r, c=c, alive=alive, state=state, importance=importance
+    )
+
+
+@partial(jax.jit, static_argnames=("r", "c", "importance", "backend"))
+def _sparsify_dense(
+    fn: SubmodularFunction,
+    key: Array,
+    r: int = 8,
+    c: float = 8.0,
+    alive: Array | None = None,
+    state: Array | None = None,
+    importance: bool = False,
+    backend: Backend | None = None,
+) -> SSResult:
+    """The dense single-process SS loop; ``backend`` (an already-resolved
+    Backend instance — callers go through ss_sparsify) supplies divergence."""
+    be = backend if backend is not None else resolve_backend(None)
     n = fn.n
     m = min(probe_count(n, r), n)  # tiny ground sets: everything is a probe
     rounds_cap = max_rounds(n, r, c)
@@ -94,14 +117,8 @@ def ss_sparsify(
     else:
         logits = jnp.zeros((n,))
 
-    if use_kernel:
-        from repro.kernels import ops as _kops
-
-        def _divergence(probes):
-            return _kops.ss_divergence(fn, probes, residual, state)
-    else:
-        def _divergence(probes):
-            return graph.divergence(fn, probes, residual=residual, state=state)
+    def _divergence(probes):
+        return be.divergence(fn, probes, residual=residual, state=state)
 
     def cond(carry):
         alive, vprime, div, eps_hat, key, rnd, trace = carry
@@ -163,24 +180,40 @@ def preprune_mask(fn: SubmodularFunction, k: int) -> Array:
 
 
 def postreduce(
-    fn: SubmodularFunction, result: SSResult, eps: float, key: Array
+    fn: SubmodularFunction,
+    result: SSResult,
+    eps: float,
+    key: Array,
+    max_members: int | None = None,
 ) -> Array:
     """§3.4 improvement 3: shrink V' further by (approximately) solving Eq. 9
     restricted to V' with bidirectional greedy.  Returns a new vprime mask.
 
     h(V') = |{v in V \\ V' : w_{V'v} <= eps}|  -  computed against the edge
-    weights from V'-members to all pruned v.
+    weights from V'-members to all pruned v.  Member bookkeeping is vectorized
+    over a static block of |V'|-sized slots (padded with -1) and scattered
+    back to ground indices in one masked scatter — no per-element host loop.
+    ``max_members`` is the static slot count; when None it is sized with one
+    host read of |V'| (pass an explicit bound to avoid that sync inside
+    larger traced pipelines).  Note the reduction itself (bidirectional
+    greedy) is a host-side loop by design — V' is polylog-sized after SS.
     """
-    vp_idx = jnp.where(result.vprime, size=fn.n, fill_value=-1)[0]
-    n_vp = int(jnp.sum(result.vprime))
-    members = [int(i) for i in vp_idx[:n_vp]]
+    n = fn.n
+    if max_members is None:
+        max_members = int(jnp.sum(result.vprime))  # one sizing sync
+    slots = max(1, min(n, max_members))
+    vp_idx = jnp.where(result.vprime, size=slots, fill_value=-1)[0]  # (slots,)
+    valid = vp_idx >= 0
+    members = jnp.where(valid, vp_idx, 0)
     residual = fn.residual_gains()
-    # Edge weights from every V' member to every ground element: (|V'|, n).
-    W = graph.edge_weights(fn, jnp.asarray(members), residual=residual)
+    # Edge weights from every V' member slot to every ground element:
+    # (slots, n).  Invalid (padding) slots get +INF rows: they never cover.
+    W = graph.edge_weights(fn, members, residual=residual)
+    W = jnp.where(valid[:, None], W, INF)
     pruned = ~result.vprime
 
     def h_of(mask_members: Array) -> Array:
-        # mask_members: (|V'|,) bool over `members`
+        # mask_members: (slots,) bool over member slots
         wmin = jnp.min(jnp.where(mask_members[:, None], W, INF), axis=0)
         covered = pruned & (wmin <= eps)
         return jnp.sum(covered) - 0.0  # |V'| term handled by caller's deltas
@@ -190,13 +223,14 @@ def postreduce(
         # h(X) = covered(X) - |X|  (Eq. 9 as coverage minus cardinality).
         a = h_of(lo.at[v].set(True)) - h_of(lo) - 1.0
         b = (h_of(hi.at[v].set(False)) - h_of(hi)) + 1.0
+        # Padding slots cover nothing: a = -1 < 0 <= b = +1, never taken.
         return a, b
 
-    keep_local = bidirectional_greedy(gain_fn, len(members), key)
-    new_vprime = jnp.zeros((fn.n,), bool)
-    for i, mi in enumerate(members):
-        new_vprime = new_vprime.at[mi].set(bool(keep_local[i]))
-    return new_vprime
+    keep_slots = bidirectional_greedy(gain_fn, slots, key)
+    # Vectorized member-mask scatter: slot i keeps ground element vp_idx[i].
+    # Invalid slots scatter to index n, dropped by out-of-bounds mode.
+    target = jnp.where(valid & keep_slots, vp_idx, n)
+    return jnp.zeros((n,), bool).at[target].set(True, mode="drop")
 
 
 def summarize(
@@ -207,15 +241,16 @@ def summarize(
     c: float = 8.0,
     preprune: bool = False,
     importance: bool = False,
-    use_kernel: bool = False,
+    backend: "str | Backend | None" = None,
 ):
     """End-to-end paper pipeline: (optional pre-prune) -> SS -> greedy on V'.
 
-    Returns (GreedyResult, SSResult).
+    ``backend`` selects the execution path for both stages.  Returns
+    (GreedyResult, SSResult).
     """
     alive = preprune_mask(fn, k) if preprune else None
     ss = ss_sparsify(
-        fn, key, r=r, c=c, alive=alive, importance=importance, use_kernel=use_kernel
+        fn, key, r=r, c=c, alive=alive, importance=importance, backend=backend
     )
-    res = greedy(fn, k, alive=ss.vprime)
+    res = greedy(fn, k, alive=ss.vprime, backend=backend)
     return res, ss

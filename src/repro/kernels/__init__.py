@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the perf-critical hot spots, each with a pure-jnp
-oracle in ref.py and a jit'd dispatch wrapper in ops.py:
+oracle in ref.py.  Dispatch is owned by the backend layer
+(``repro.core.backend``; objectives opt in via their ``pallas_*`` hooks) —
+ops.py keeps the kernels' stable public entry points on top of it:
 
 - ss_weights.ss_divergence_kernel  — the paper's hot spot: fused
   submodularity-graph edge weights + min-over-probes (one HBM pass over W).

@@ -1,36 +1,24 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels, routed through the execution
+backend layer (``repro.core.backend``).
 
-These adapt the kernels to the ``repro.core`` objects (FeatureCoverage /
-FacilityLocation) and dispatch between the real TPU kernel and interpret mode
-(CPU correctness path).  ``repro.core.sparsify.ss_sparsify(use_kernel=True)``
-and the greedy driver route their hot loops through here.
+There is no objective-specific dispatch here anymore: objectives advertise
+kernel support through their ``pallas_divergence`` / ``pallas_gains`` hooks
+(see :class:`repro.core.functions.SubmodularFunction`), and the pallas backend
+falls back to the jnp oracle whenever a hook returns ``None`` (e.g.
+FeatureCoverage with ``feat_w`` feature weights, or FacilityLocation, whose
+fused (r, n, n) kernel is future work).  These functions are kept as the
+kernels' stable public entry points for tests and benchmarks;
+``repro.core.sparsify.ss_sparsify(backend="pallas")`` and the greedy driver
+reach the same code through the backend registry.
 """
 
 from __future__ import annotations
 
-import os
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.functions import FacilityLocation, FeatureCoverage
-from repro.kernels.feature_gains import feature_gains_kernel
-from repro.kernels.ss_weights import ss_divergence_kernel
+from repro.core.backend import default_pallas_interpret, get_backend
 
 Array = jax.Array
-
-
-def _interpret() -> bool:
-    """Pallas interpret mode unless we are actually on TPU."""
-    if os.environ.get("REPRO_PALLAS_INTERPRET"):
-        return os.environ["REPRO_PALLAS_INTERPRET"] == "1"
-    return jax.default_backend() != "tpu"
-
-
-def _fc_cap(fn: FeatureCoverage) -> Array | None:
-    if fn.phi != "satcov":
-        return None
-    return fn.alpha * jnp.sum(fn.W, axis=0)
 
 
 def ss_divergence(
@@ -46,49 +34,16 @@ def ss_divergence(
     (candidates v equal to a probe are owned by V' and their entry is
     unspecified — the SS loop never reads them).
     """
-    if isinstance(fn, FeatureCoverage):
-        base = fn.empty_state() if state is None else state
-        CU = base[None, :] + fn.W[probes]                   # (r, F)
-        cap = _fc_cap(fn)
-        from repro.kernels.ref import _phi as _phi_ref
-
-        phi_cu = jnp.sum(
-            _phi_ref(fn.phi, CU.astype(jnp.float32), cap), axis=-1
-        )
-        if fn.feat_w is not None:
-            # Fold feature weights into W/CU (phi is applied per feature and
-            # then weighted: sum_f w_f * phi(x_f) — kernel has no feat_w path,
-            # so fall back to the jnp oracle in that case).
-            from repro.core import graph
-
-            return graph.divergence(fn, probes, residual=residual, state=state)
-        return ss_divergence_kernel(
-            fn.W,
-            CU,
-            phi_cu,
-            residual[probes],
-            cap,
-            phi=fn.phi,
-            interpret=_interpret(),
-            **block_kw,
-        )
-    if isinstance(fn, FacilityLocation):
-        # Similarity-based objective: same fused pattern, (r, n, n) reduction.
-        from repro.core import graph
-
-        return graph.divergence(fn, probes, residual=residual, state=state)
-    raise TypeError(type(fn))
-
-
-def feature_gains(fn: FeatureCoverage, state: Array, **block_kw) -> Array:
-    """Kernel-backed greedy gains f(v|S) for all v.  Shape (n,)."""
-    assert isinstance(fn, FeatureCoverage)
-    if fn.feat_w is not None:
-        return fn.gains(state)
-    cap = _fc_cap(fn)
-    from repro.kernels.ref import _phi as _phi_ref
-
-    phi_c = jnp.sum(_phi_ref(fn.phi, state.astype(jnp.float32), cap))
-    return feature_gains_kernel(
-        fn.W, state, phi_c, cap, phi=fn.phi, interpret=_interpret(), **block_kw
+    return get_backend("pallas").divergence(
+        fn, probes, residual=residual, state=state, **block_kw
     )
+
+
+def feature_gains(fn, state: Array, **block_kw) -> Array:
+    """Kernel-backed greedy gains f(v|S) for all v.  Shape (n,)."""
+    return get_backend("pallas").gains(fn, state, **block_kw)
+
+
+def _interpret() -> bool:
+    """Deprecated alias — use repro.core.backend.default_pallas_interpret."""
+    return default_pallas_interpret()

@@ -4,25 +4,25 @@ dry-run sets XLA_FLAGS before importing anything)."""
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """The assignment's target: 16x16 = 256 chips per pod; 2 pods = 512."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     """Small explicit meshes for CPU tests (e.g. (1,1), (2,2), (2,2,2))."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def single_device_mesh() -> Mesh:
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

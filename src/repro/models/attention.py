@@ -33,9 +33,10 @@ def _constrain_heads(x: Array) -> Array:
     strictly better than sharding head_dim, which puts the QK/PV contraction
     dimension on the model axis and forces an all-reduce of every score block
     (measured: 16.5 TB/chip of collective traffic on llama4 prefill_32k)."""
+    from repro.compat import get_abstract_mesh
     from repro.models.sharding import usable_axes
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return x
     ok = usable_axes(mesh)

@@ -15,7 +15,10 @@ Objectives:
     higher fidelity for short contexts.
 
 This is the serving-side twin of the training-data coreset stage: the same
-core algorithms (ss_sparsify + greedy) run inside the engine, unchanged.
+core algorithms (ss_sparsify + greedy) run inside the engine, unchanged, and
+``KVSelectConfig.backend`` selects their execution backend ("oracle" or
+"pallas"; the per-row selection is vmapped, so the sharded backend — which
+owns the whole mesh — does not apply here).
 """
 
 from __future__ import annotations
@@ -38,6 +41,9 @@ class KVSelectConfig:
     r: int = 8
     c: float = 8.0
     use_ss: bool = True        # False: greedy on the full ground set (ablation)
+    backend: str = "oracle"    # execution backend (repro.core.backend); the
+    #                            per-row selection is vmapped, so only dense
+    #                            backends (oracle / pallas) are valid here
 
 
 def _pooled_keys(cache: dict, seq_len: int) -> Array:
@@ -72,8 +78,8 @@ def select_positions(
         raise ValueError(kv.objective)
     alive = None
     if kv.use_ss:
-        alive = ss_sparsify(fn, key, r=kv.r, c=kv.c).vprime
-    res = greedy(fn, kv.budget, alive=alive)
+        alive = ss_sparsify(fn, key, r=kv.r, c=kv.c, backend=kv.backend).vprime
+    res = greedy(fn, kv.budget, alive=alive, backend=kv.backend)
     return jnp.sort(res.selected)
 
 

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim for the test suite.
+
+``from _hypothesis_compat import given, settings, st`` behaves exactly like
+the real hypothesis imports when the package is installed.  When it is not,
+``@given(...)``-decorated tests are individually skipped while every plain
+test in the same module still collects and runs (a module-level importorskip
+would throw those away too).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in so module-level strategy expressions still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: _AnyStrategy()
+
+        def __call__(self, *a, **k):
+            return _AnyStrategy()
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

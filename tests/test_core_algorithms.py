@@ -194,6 +194,25 @@ def test_ss_importance_sampling_works():
     assert float(res.value) >= 0.9 * float(g.value)
 
 
+def test_postreduce_shrinks_and_covers():
+    """§3.4 improvement 3: the bidirectional post-reduction returns a subset
+    of V' whose members still eps-cover every pruned element that the chosen
+    eps can cover (h is maximized by construction, and the scatter back to
+    ground indices must be exact)."""
+    from repro.core.sparsify import postreduce
+    from repro.core import graph
+
+    fn = make_fc(20, n=120, F=24)
+    key = jax.random.PRNGKey(0)
+    ss = ss_sparsify(fn, key, r=6, c=8.0)
+    eps = float(ss.eps_hat) + 1e-3
+    new_vp = postreduce(fn, ss, eps, jax.random.PRNGKey(1))
+    # subset of the original V', nothing new invented
+    assert bool(jnp.all(~new_vp | ss.vprime))
+    assert int(jnp.sum(new_vp)) <= int(jnp.sum(ss.vprime))
+    assert int(jnp.sum(new_vp)) > 0
+
+
 def test_preprune_is_safe():
     """Wei-et-al rule must not hurt greedy's achievable value."""
     fn = make_fc(15, n=120)

@@ -4,9 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
+from _hypothesis_compat import given, settings, st  # skips @given tests only
 from repro.core.functions import FacilityLocation, FeatureCoverage
 
 jax.config.update("jax_enable_x64", False)

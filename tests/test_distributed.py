@@ -29,13 +29,13 @@ def test_sharded_ss_matches_full_greedy():
         import jax, jax.numpy as jnp
         from repro.core.distributed import summarize_sharded
         from repro.core import FeatureCoverage, greedy
+        from repro.compat import make_mesh
         from repro.data import news_day
 
         W = news_day(0, 1024, 128)
         fn = FeatureCoverage(W=jnp.asarray(W), phi="sqrt")
         ref = greedy(fn, 8)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         sel, val, vp, eps = summarize_sharded(W, 8, jax.random.PRNGKey(0), mesh)
         ratio = float(val / ref.value)
         assert ratio > 0.95, ratio
@@ -50,13 +50,13 @@ def test_sharded_ss_hierarchical_pods():
         import jax, jax.numpy as jnp
         from repro.core.distributed import summarize_sharded
         from repro.core import FeatureCoverage, greedy
+        from repro.compat import make_mesh
         from repro.data import news_day
 
         W = news_day(1, 1024, 128)
         fn = FeatureCoverage(W=jnp.asarray(W), phi="sqrt")
         ref = greedy(fn, 8)
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("pod", "data"))
         sel, val, vp, eps = summarize_sharded(
             W, 8, jax.random.PRNGKey(0), mesh, pod_axis="pod")
         ratio = float(val / ref.value)
@@ -66,6 +66,69 @@ def test_sharded_ss_hierarchical_pods():
     assert "OK" in out
 
 
+def test_sharded_backend_facility_location_multidevice():
+    """Acceptance: ss_sparsify(backend=...) runs FacilityLocation on a real
+    multi-device CPU mesh through a ShardedBackend, and greedy on the sharded
+    V' matches greedy on the oracle V' within 1e-3 relative."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp
+        from repro.core import FacilityLocation, ShardedBackend, greedy, ss_sparsify
+        from repro.compat import make_mesh
+
+        X = jax.random.normal(jax.random.PRNGKey(1), (512, 16))
+        fn = FacilityLocation.from_features(X, kernel="rbf")
+        key = jax.random.PRNGKey(0)
+        be = ShardedBackend(mesh=make_mesh((8,), ("data",)))
+        ss_s = ss_sparsify(fn, key, r=8, c=8.0, backend=be)
+        ss_o = ss_sparsify(fn, key, r=8, c=8.0, backend="oracle")
+        v_s = float(greedy(fn, 8, alive=ss_s.vprime).value)
+        v_o = float(greedy(fn, 8, alive=ss_o.vprime).value)
+        rel = abs(v_s - v_o) / v_o
+        assert rel < 1e-3, (v_s, v_o, rel)
+        assert int(jnp.sum(ss_s.vprime)) < 512
+        print("FL_PARITY", rel)
+    """)
+    assert "FL_PARITY" in out
+
+
+def test_sharded_backend_objective_generic():
+    """The sharded loop is objective-generic: both objectives run through the
+    same shard_map kernel via their shard hooks, and per-shard residuals
+    match the dense oracle exactly."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import FacilityLocation, FeatureCoverage
+        from repro.core.distributed import ss_sparsify_sharded
+        from repro.compat import make_mesh, shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_mesh((8,), ("data",))
+        key = jax.random.PRNGKey(0)
+        W = jax.random.uniform(key, (512, 64))
+        fns = [FeatureCoverage(W=W, phi="sqrt"),
+               FeatureCoverage(W=W, phi="satcov", alpha=0.3),
+               FeatureCoverage(W=W, feat_w=jnp.linspace(0.5, 1.5, 64)),
+               FacilityLocation.from_features(
+                   jax.random.normal(key, (512, 8)), kernel="cosine")]
+        for fn in fns:
+            # per-shard residuals == dense residuals
+            arrays, specs, rebuild = fn.shard_pack(("data",))
+            def res_kernel(*arrs):
+                loc = rebuild(*arrs)
+                return loc.shard_residuals(loc.shard_init("data"))
+            res = shard_map(res_kernel, mesh=mesh, in_specs=specs,
+                            out_specs=P("data"))(*arrays)
+            np.testing.assert_allclose(np.asarray(res),
+                                       np.asarray(fn.residual_gains()),
+                                       rtol=1e-4, atol=1e-4)
+            # and the full sharded loop runs
+            ss = ss_sparsify_sharded(fn, key, mesh)
+            assert 0 < int(jnp.sum(ss.vprime)) < fn.n
+        print("GENERIC_OK")
+    """)
+    assert "GENERIC_OK" in out
+
+
 def test_compressed_pod_training_converges():
     out = run_sub("""
         import jax, jax.numpy as jnp
@@ -73,15 +136,16 @@ def test_compressed_pod_training_converges():
         from repro.train import (TrainConfig, make_train_state, CompressConfig,
                                  init_error_state, make_compressed_train_step)
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = configs.smoke("llama3.2-3b")
         tc = TrainConfig(optimizer="adamw", lr=1e-3, warmup_steps=1,
                          total_steps=20)
         cc = CompressConfig(ratio=0.1, block=64)
         state = make_train_state(jax.random.PRNGKey(0), cfg, tc)
         state["error"] = init_error_state(state["params"])
-        with jax.set_mesh(mesh):
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             step = jax.jit(make_compressed_train_step(mesh, cfg, tc, cc))
             toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
                                       cfg.vocab_size)
@@ -112,7 +176,8 @@ def test_sharded_train_step_on_mesh():
         tc = TrainConfig(optimizer="adafactor", num_microbatches=2,
                          warmup_steps=1, total_steps=8, lr=1e-3)
         shape = abstract_train_state(cfg, tc)
-        with jax.set_mesh(mesh):
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             fn, state_sh, batch_sh = shard_train_step(mesh, cfg, tc, shape)
             state = make_train_state(jax.random.PRNGKey(0), cfg, tc)
             state = jax.device_put(state, state_sh)

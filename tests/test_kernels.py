@@ -1,6 +1,6 @@
 """Pallas kernel tests (deliverable c): shape/dtype sweeps in interpret mode
-against the pure-jnp oracles in ref.py, plus integration through ops.py and
-ss_sparsify(use_kernel=True)."""
+against the pure-jnp oracles in ref.py, plus integration through the backend
+dispatch layer (ops.py / ss_sparsify(backend="pallas"))."""
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +91,7 @@ def test_ss_sparsify_kernel_path_equivalent_quality():
     W = jax.random.uniform(key, (512, 128))
     fn = FeatureCoverage(W=W, phi="sqrt")
     ss_ref = ss_sparsify(fn, key, r=6, c=8.0)
-    ss_ker = ss_sparsify(fn, key, r=6, c=8.0, use_kernel=True)
+    ss_ker = ss_sparsify(fn, key, r=6, c=8.0, backend="pallas")
     f_ref = greedy(fn, 8, alive=ss_ref.vprime).value
     f_ker = greedy(fn, 8, alive=ss_ker.vprime).value
     # same PRNG stream => identical probe sets; divergences agree to fp error

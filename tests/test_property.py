@@ -5,7 +5,8 @@ and the loss/optimizer numerics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # skips @given tests only
 
 from repro.core import FacilityLocation, FeatureCoverage, greedy
 from repro.core.graph import (
