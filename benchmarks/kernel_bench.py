@@ -1,30 +1,44 @@
 """Pallas kernel microbench: correctness (interpret mode vs jnp oracle) plus
-the roofline-derived TPU expectations for the two SS hot-spot kernels.
+the roofline-derived TPU expectations for the SS hot-spot kernels.
 
 On this CPU container the kernels cannot be *timed* on real hardware; we
-(1) verify interpret-mode output against the oracle on a shape sweep,
+(1) verify interpret-mode output against the oracle on a shape sweep — the
+    feature-coverage divergence/gains kernels (with and without ``feat_w``
+    feature weights) and the facility-location divergence kernel,
 (2) verify the unified backend dispatch layer (``repro.core.backend``) —
     oracle vs pallas divergence/gains through the same ``backend=`` routing
-    every entry point uses, and
+    every entry point uses, on both objective families, and
 (3) report each kernel's arithmetic intensity and the v5e-roofline time its
-BlockSpec tiling implies, next to the measured wall time of the jnp
-reference path (the thing the kernel replaces).
+    BlockSpec tiling implies, next to the measured wall time of the jnp
+    reference path (the thing the kernel replaces).
 
 ``--smoke`` runs a single small shape per kernel — the CI regression gate.
+``--json PATH`` writes every row (each carrying a stable ``bench_key`` and a
+warm ``wall_s`` wall time) to PATH; ``--baseline PATH`` compares the fresh
+rows against a previously committed JSON (``BENCH_kernels.json`` at the repo
+root is the CI baseline) and exits nonzero on a >``--max-ratio`` per-kernel
+wall-time regression.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save, timed
-from repro.core import FeatureCoverage, get_backend
-from repro.kernels.ref import feature_gains_ref, ss_divergence_ref
+from repro.core import FacilityLocation, FeatureCoverage, get_backend
 from repro.kernels.feature_gains import feature_gains_kernel
+from repro.kernels.fl_divergence import fl_divergence_kernel
+from repro.kernels.ref import (
+    feature_gains_ref,
+    fl_divergence_ref,
+    ss_divergence_ref,
+)
 from repro.kernels.ss_weights import ss_divergence_kernel
 from repro.launch.mesh import HW
 
@@ -32,6 +46,13 @@ SS_SHAPES = [(2048, 512, 64), (4096, 1024, 96), (8192, 512, 104)]
 SS_SHAPES_SMOKE = [(512, 128, 24)]
 FG_SHAPES = [(4096, 512), (16384, 1024)]
 FG_SHAPES_SMOKE = [(512, 128)]
+# facility location: (n, r) — the sim matrix is (n, n)
+FL_SHAPES = [(1024, 64), (1536, 48)]
+FL_SHAPES_SMOKE = [(256, 16)]
+
+
+def _feat_w(F: int) -> jax.Array:
+    return jnp.linspace(0.5, 1.5, F)
 
 
 def run(seed: int = 0, smoke: bool = False) -> dict:
@@ -40,92 +61,162 @@ def run(seed: int = 0, smoke: bool = False) -> dict:
     for (n, F, r) in (SS_SHAPES_SMOKE if smoke else SS_SHAPES):
         W = jax.random.uniform(key, (n, F))
         CU = jax.random.uniform(jax.random.fold_in(key, 1), (r, F))
-        phi_cu = jnp.sum(jnp.sqrt(CU), axis=-1)
         resid = jax.random.uniform(jax.random.fold_in(key, 2), (r,))
+        for weighted in (False, True):
+            fw = _feat_w(F) if weighted else None
+            phis = jnp.sqrt(CU) if fw is None else jnp.sqrt(CU) * fw
+            phi_cu = jnp.sum(phis, axis=-1)
+            name = "ss_divergence_featw" if weighted else "ss_divergence"
 
-        ref, t_ref = timed(lambda: jax.block_until_ready(
-            ss_divergence_ref(W, CU, phi_cu, resid, None, "sqrt")))
-        out, t_int = timed(lambda: jax.block_until_ready(
-            ss_divergence_kernel(W, CU, phi_cu, resid, None,
-                                 phi="sqrt", interpret=True)))
-        err = float(jnp.max(jnp.abs(ref - out)))
-        assert err < 1e-3, f"kernel/oracle divergence mismatch: {err}"
+            ref, t_ref = timed(lambda: jax.block_until_ready(
+                ss_divergence_ref(W, CU, phi_cu, resid, None, "sqrt", fw)))
+            out, t_int = timed(lambda: jax.block_until_ready(
+                ss_divergence_kernel(W, CU, phi_cu, resid, None, fw,
+                                     phi="sqrt", interpret=True)), repeat=3)
+            err = float(jnp.max(jnp.abs(ref - out)))
+            assert err < 1e-3, f"kernel/oracle divergence mismatch: {err}"
 
-        # roofline for the kernel's HBM traffic: one read of W + CU + out
-        bytes_moved = (n * F + r * F + n) * 4
-        flops = 2.0 * r * n * F            # add + sqrt per (probe, cand, feat)
-        t_mem = bytes_moved / HW["hbm_bw"]
-        t_cmp = flops / HW["peak_flops_bf16"]
-        rows.append({
-            "kernel": "ss_divergence", "n": n, "F": F, "r": r,
-            "max_err": err, "t_jnp_cpu_s": t_ref, "t_interp_s": t_int,
-            "tpu_bytes": bytes_moved, "tpu_flops": flops,
-            "tpu_roofline_s": max(t_mem, t_cmp),
-            "arithmetic_intensity": flops / bytes_moved,
-        })
-        print(f"kernel ss_divergence n={n} F={F} r={r} err={err:.2e} "
-              f"cpu_ref={t_ref*1e3:.1f}ms tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs",
-              flush=True)
+            # roofline for the kernel's HBM traffic: one read of W + CU + out
+            bytes_moved = (n * F + r * F + n) * 4
+            flops = 2.0 * r * n * F        # add + sqrt per (probe, cand, feat)
+            t_mem = bytes_moved / HW["hbm_bw"]
+            t_cmp = flops / HW["peak_flops_bf16"]
+            rows.append({
+                "kernel": name, "n": n, "F": F, "r": r,
+                "bench_key": f"{name}/n{n}-F{F}-r{r}", "wall_s": t_int,
+                "max_err": err, "t_jnp_cpu_s": t_ref, "t_interp_s": t_int,
+                "tpu_bytes": bytes_moved, "tpu_flops": flops,
+                "tpu_roofline_s": max(t_mem, t_cmp),
+                "arithmetic_intensity": flops / bytes_moved,
+            })
+            print(f"kernel {name} n={n} F={F} r={r} err={err:.2e} "
+                  f"cpu_ref={t_ref*1e3:.1f}ms "
+                  f"tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs",
+                  flush=True)
 
     for (n, F) in (FG_SHAPES_SMOKE if smoke else FG_SHAPES):
         W = jax.random.uniform(key, (n, F))
         c = jax.random.uniform(jax.random.fold_in(key, 3), (F,))
-        phic = jnp.sum(jnp.sqrt(c))
-        ref, t_ref = timed(lambda: jax.block_until_ready(
-            feature_gains_ref(W, c, phic, None, "sqrt")))
-        out, _ = timed(lambda: jax.block_until_ready(
-            feature_gains_kernel(W, c, phic, None, phi="sqrt", interpret=True)))
-        err = float(jnp.max(jnp.abs(ref - out)))
-        assert err < 1e-3, f"feature_gains kernel mismatch: {err}"
-        bytes_moved = (n * F + F + n) * 4
-        flops = 2.0 * n * F
-        rows.append({
-            "kernel": "feature_gains", "n": n, "F": F,
-            "max_err": err, "t_jnp_cpu_s": t_ref,
-            "tpu_bytes": bytes_moved, "tpu_flops": flops,
-            "tpu_roofline_s": max(bytes_moved / HW["hbm_bw"],
-                                  flops / HW["peak_flops_bf16"]),
-            "arithmetic_intensity": flops / bytes_moved,
-        })
-        print(f"kernel feature_gains n={n} F={F} err={err:.2e} "
-              f"cpu_ref={t_ref*1e3:.1f}ms", flush=True)
+        for weighted in (False, True):
+            fw = _feat_w(F) if weighted else None
+            phic = jnp.sum(jnp.sqrt(c) if fw is None else jnp.sqrt(c) * fw)
+            name = "feature_gains_featw" if weighted else "feature_gains"
+            ref, t_ref = timed(lambda: jax.block_until_ready(
+                feature_gains_ref(W, c, phic, None, "sqrt", fw)))
+            out, t_int = timed(lambda: jax.block_until_ready(
+                feature_gains_kernel(W, c, phic, None, fw,
+                                     phi="sqrt", interpret=True)), repeat=3)
+            err = float(jnp.max(jnp.abs(ref - out)))
+            assert err < 1e-3, f"feature_gains kernel mismatch: {err}"
+            bytes_moved = (n * F + F + n) * 4
+            flops = 2.0 * n * F
+            rows.append({
+                "kernel": name, "n": n, "F": F,
+                "bench_key": f"{name}/n{n}-F{F}", "wall_s": t_int,
+                "max_err": err, "t_jnp_cpu_s": t_ref, "t_interp_s": t_int,
+                "tpu_bytes": bytes_moved, "tpu_flops": flops,
+                "tpu_roofline_s": max(bytes_moved / HW["hbm_bw"],
+                                      flops / HW["peak_flops_bf16"]),
+                "arithmetic_intensity": flops / bytes_moved,
+            })
+            print(f"kernel {name} n={n} F={F} err={err:.2e} "
+                  f"cpu_ref={t_ref*1e3:.1f}ms", flush=True)
     save("kernel_bench", rows)
+    return {"rows": rows}
+
+
+def run_fl(seed: int = 0, smoke: bool = False) -> dict:
+    """Facility-location divergence kernel: interpret-mode parity vs the jnp
+    oracle + the v5e roofline of its (candidates x served rows) tiling."""
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for (n, r) in (FL_SHAPES_SMOKE if smoke else FL_SHAPES):
+        X = jax.random.normal(key, (n, 16))
+        fn = FacilityLocation.from_features(X, kernel="cosine")
+        probes = jnp.arange(0, n, max(1, n // r))[:r]
+        MU = jnp.maximum(fn.sim[:, probes].T, 0.0)               # (r, n)
+        resid = fn.residual_gains()[probes]
+
+        ref, t_ref = timed(lambda: jax.block_until_ready(
+            fl_divergence_ref(fn.sim, MU, resid)))
+        out, t_int = timed(lambda: jax.block_until_ready(
+            fl_divergence_kernel(fn.sim, MU, resid, interpret=True)),
+            repeat=3)
+        err = float(jnp.max(jnp.abs(ref - out)))
+        assert err < 1e-3, f"fl_divergence kernel mismatch: {err}"
+
+        # kernel HBM traffic: one read of sim + MU + the (n,) result; the
+        # naive path round-trips the (r, n, n) max tensor through HBM.
+        bytes_moved = (n * n + r * n + n) * 4
+        flops = 2.0 * r * n * n            # compare + accumulate per element
+        t_mem = bytes_moved / HW["hbm_bw"]
+        t_cmp = flops / HW["peak_flops_bf16"]
+        rows.append({
+            "kernel": "fl_divergence", "n": n, "r": r,
+            "bench_key": f"fl_divergence/n{n}-r{r}", "wall_s": t_int,
+            "max_err": err, "t_jnp_cpu_s": t_ref, "t_interp_s": t_int,
+            "tpu_bytes": bytes_moved, "tpu_flops": flops,
+            "tpu_roofline_s": max(t_mem, t_cmp),
+            "arithmetic_intensity": flops / bytes_moved,
+            "naive_hbm_bytes": 8.0 * r * n * n,
+        })
+        print(f"kernel fl_divergence n={n} r={r} err={err:.2e} "
+              f"cpu_ref={t_ref*1e3:.1f}ms tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs",
+              flush=True)
+    save("kernel_fl", rows)
     return {"rows": rows}
 
 
 def run_dispatch(seed: int = 0, smoke: bool = False) -> dict:
     """Backend dispatch parity: oracle vs pallas through repro.core.backend —
-    the exact routing ss_sparsify/greedy use — on real objectives."""
+    the exact routing ss_sparsify/greedy use — on real objectives, covering
+    every objective family the pallas backend now fuses (plain and feat_w
+    feature coverage, facility location)."""
     n, F, r = (512, 128, 24) if smoke else (2048, 256, 64)
+    n_fl = 256 if smoke else 1024
     key = jax.random.PRNGKey(seed)
     W = jax.random.uniform(key, (n, F))
-    fn = FeatureCoverage(W=W, phi="sqrt")
-    probes = jnp.arange(0, n, max(1, n // r))[:r]
-    residual = fn.residual_gains()
+    objectives = {
+        "fc": FeatureCoverage(W=W, phi="sqrt"),
+        "fc_featw": FeatureCoverage(W=W, feat_w=_feat_w(F), phi="sqrt"),
+        "fl": FacilityLocation.from_features(
+            jax.random.normal(jax.random.fold_in(key, 7), (n_fl, 16)),
+            kernel="cosine"),
+    }
 
     rows = []
-    ref, t_o = timed(lambda: jax.block_until_ready(
-        get_backend("oracle").divergence(fn, probes, residual=residual)))
-    out, t_p = timed(lambda: jax.block_until_ready(
-        get_backend("pallas").divergence(fn, probes, residual=residual)))
-    live = np.ones((n,), bool)
-    live[np.asarray(probes)] = False
-    err = float(np.max(np.abs(np.asarray(ref)[live] - np.asarray(out)[live])))
-    assert err < 1e-3, f"backend dispatch divergence mismatch: {err}"
-    rows.append({"op": "divergence", "n": n, "F": F, "r": r,
-                 "max_err": err, "t_oracle_s": t_o, "t_pallas_s": t_p})
-    print(f"dispatch divergence n={n} F={F} r={r} err={err:.2e}", flush=True)
+    for name, fn in objectives.items():
+        probes = jnp.arange(0, fn.n, max(1, fn.n // r))[:r]
+        residual = fn.residual_gains()
+        ref, t_o = timed(lambda: jax.block_until_ready(
+            get_backend("oracle").divergence(fn, probes, residual=residual)))
+        out, t_p = timed(lambda: jax.block_until_ready(
+            get_backend("pallas").divergence(fn, probes, residual=residual)),
+            repeat=3)
+        live = np.ones((fn.n,), bool)
+        live[np.asarray(probes)] = False
+        err = float(np.max(np.abs(
+            np.asarray(ref)[live] - np.asarray(out)[live])))
+        assert err < 1e-3, f"backend dispatch divergence mismatch ({name}): {err}"
+        rows.append({"op": "divergence", "objective": name, "n": fn.n, "r": r,
+                     "bench_key": f"dispatch_divergence/{name}-n{fn.n}-r{r}",
+                     "wall_s": t_p,
+                     "max_err": err, "t_oracle_s": t_o, "t_pallas_s": t_p})
+        print(f"dispatch divergence [{name}] n={fn.n} r={r} err={err:.2e}",
+              flush=True)
 
-    state = fn.add_many(fn.empty_state(), jnp.arange(n) < 8)
-    ref, t_o = timed(lambda: jax.block_until_ready(
-        get_backend("oracle").gains(fn, state)))
-    out, t_p = timed(lambda: jax.block_until_ready(
-        get_backend("pallas").gains(fn, state)))
-    err = float(jnp.max(jnp.abs(ref - out)))
-    assert err < 1e-3, f"backend dispatch gains mismatch: {err}"
-    rows.append({"op": "gains", "n": n, "F": F,
-                 "max_err": err, "t_oracle_s": t_o, "t_pallas_s": t_p})
-    print(f"dispatch gains n={n} F={F} err={err:.2e}", flush=True)
+        state = fn.add_many(fn.empty_state(), jnp.arange(fn.n) < 8)
+        ref, t_o = timed(lambda: jax.block_until_ready(
+            get_backend("oracle").gains(fn, state)))
+        out, t_p = timed(lambda: jax.block_until_ready(
+            get_backend("pallas").gains(fn, state)), repeat=3)
+        err = float(jnp.max(jnp.abs(ref - out)))
+        assert err < 1e-3, f"backend dispatch gains mismatch ({name}): {err}"
+        rows.append({"op": "gains", "objective": name, "n": fn.n,
+                     "bench_key": f"dispatch_gains/{name}-n{fn.n}",
+                     "wall_s": t_p,
+                     "max_err": err, "t_oracle_s": t_o, "t_pallas_s": t_p})
+        print(f"dispatch gains [{name}] n={fn.n} err={err:.2e}", flush=True)
     save("kernel_dispatch", rows)
     return {"rows": rows}
 
@@ -146,8 +237,9 @@ def run_flash(seed: int = 0, smoke: bool = False) -> dict:
         v = jax.random.normal(ks[2], (BH, S, hd), jnp.float32)
         ref, t_ref = timed(lambda: jax.block_until_ready(
             flash_attention_ref(q, k, v)))
-        out, _ = timed(lambda: jax.block_until_ready(
-            flash_attention(q, k, v, bq=256, bk=256, interpret=True)))
+        out, t_int = timed(lambda: jax.block_until_ready(
+            flash_attention(q, k, v, bq=256, bk=256, interpret=True)),
+            repeat=3)
         err = float(jnp.max(jnp.abs(out - ref)))
         assert err < 1e-2, f"flash_attention kernel mismatch: {err}"
         # kernel HBM traffic: q+k+v read + out write (causal ~half the flops)
@@ -158,6 +250,7 @@ def run_flash(seed: int = 0, smoke: bool = False) -> dict:
         xla_extra = 3 * BH * S * S * 4
         rows.append({
             "kernel": "flash_attention", "BH": BH, "S": S, "hd": hd,
+            "bench_key": f"flash_attention/BH{BH}-S{S}-hd{hd}", "wall_s": t_int,
             "max_err": err, "t_jnp_cpu_s": t_ref,
             "tpu_bytes_kernel": io_bytes,
             "tpu_bytes_xla_path": io_bytes + xla_extra,
@@ -172,14 +265,83 @@ def run_flash(seed: int = 0, smoke: bool = False) -> dict:
     return {"rows": rows}
 
 
+def run_all(seed: int = 0, smoke: bool = False) -> list[dict]:
+    """All kernel benches, flattened to one row list (the --json payload)."""
+    rows = []
+    rows += run(seed, smoke)["rows"]
+    rows += run_fl(seed, smoke)["rows"]
+    rows += run_dispatch(seed, smoke)["rows"]
+    rows += run_flash(seed, smoke)["rows"]
+    return rows
+
+
+def check_regression(
+    rows: list[dict], baseline_path: str, max_ratio: float = 2.0,
+    abs_floor: float = 0.010,
+) -> int:
+    """Compare fresh ``wall_s`` per ``bench_key`` against a committed baseline
+    JSON.  Returns the number of kernels slower than ``max_ratio`` x baseline
+    (missing baseline keys are informational — new kernels enter the
+    trajectory on the next baseline refresh).
+
+    A key fails only when it regresses both *relatively* (> max_ratio) and
+    *absolutely* (> abs_floor seconds over baseline): sub-10ms interpret-mode
+    timings are dominated by timer/machine noise, while the regressions the
+    gate exists for (a fusion silently breaking, an accidental O(r n^2)
+    materialization) blow wall time up by far more than the floor."""
+    with open(baseline_path) as f:
+        base = {row["bench_key"]: row for row in json.load(f)["rows"]}
+    fresh = {row["bench_key"]: row for row in rows if "bench_key" in row}
+    violations = 0
+    for key in sorted(base):
+        if key not in fresh:
+            print(f"regression-gate: baseline key {key} not measured "
+                  f"(kernel removed or shapes changed?)", flush=True)
+            violations += 1
+            continue
+        b, fr = base[key]["wall_s"], fresh[key]["wall_s"]
+        ratio = fr / b if b > 0 else float("inf")
+        bad = ratio > max_ratio and (fr - b) > abs_floor
+        flag = "FAIL" if bad else (
+            "ok (noise floor)" if ratio > max_ratio else "ok")
+        print(f"regression-gate: {key:48s} {b*1e3:8.1f}ms -> {fr*1e3:8.1f}ms "
+              f"({ratio:4.2f}x) {flag}", flush=True)
+        if bad:
+            violations += 1
+    for key in sorted(set(fresh) - set(base)):
+        print(f"regression-gate: new kernel {key} (no baseline yet)",
+              flush=True)
+    return violations
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one small shape per kernel (CI regression gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all rows (bench_key + wall_s) to PATH")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed baseline JSON to gate wall times against")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when wall_s exceeds baseline * this ratio")
+    ap.add_argument("--abs-floor", type=float, default=0.010,
+                    help="seconds over baseline a key must also regress by "
+                    "before it can fail (noise floor for sub-10ms timings)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
-    run_dispatch(smoke=args.smoke)
-    run_flash(smoke=args.smoke)
+    rows = run_all(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": rows}, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.json}", flush=True)
+    if args.baseline:
+        bad = check_regression(rows, args.baseline, args.max_ratio,
+                               args.abs_floor)
+        if bad:
+            print(f"regression-gate: {bad} kernel(s) regressed "
+                  f">{args.max_ratio}x vs {args.baseline}", file=sys.stderr)
+            return 1
+        print("regression-gate: all kernels within "
+              f"{args.max_ratio}x of baseline", flush=True)
     return 0
 
 

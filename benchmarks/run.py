@@ -1,9 +1,15 @@
 """Benchmark aggregator: one entry per paper table/figure + the beyond-paper
-extras.  ``PYTHONPATH=src python -m benchmarks.run [--quick]``."""
+extras.  ``PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]``.
+
+``--json PATH`` writes every job's payload to one consolidated JSON — the
+kernel jobs' rows carry the ``bench_key``/``wall_s`` fields consumed by the
+CI bench-regression gate (``benchmarks.kernel_bench --baseline``).
+"""
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -14,6 +20,8 @@ def main() -> int:
                     help="smaller sizes (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all job payloads to one consolidated JSON")
     args = ap.parse_args()
 
     from benchmarks import (data_selection, fig1_scaling, fig2_reduced_size,
@@ -30,19 +38,26 @@ def main() -> int:
         "table2": lambda: table2_video.run(
             scale=0.08 if args.quick else 0.25),
         "kernels": lambda: kernel_bench.run(smoke=args.quick),
+        "kernels_fl": lambda: kernel_bench.run_fl(smoke=args.quick),
         "kernels_dispatch": lambda: kernel_bench.run_dispatch(smoke=args.quick),
         "kernels_flash": lambda: kernel_bench.run_flash(smoke=args.quick),
         "data_selection": data_selection.run,
     }
     only = set(args.only.split(",")) if args.only else None
+    payloads = {}
     t00 = time.time()
     for name, job in jobs.items():
         if only and name not in only:
             continue
         print(f"\n=== {name} {'='*50}", flush=True)
         t0 = time.time()
-        job()
+        payloads[name] = job()
         print(f"=== {name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": args.quick, "jobs": payloads}, f, indent=1,
+                      default=str)
+        print(f"\nwrote consolidated payloads to {args.json}")
     print(f"\nall benchmarks done in {time.time()-t00:.1f}s "
           f"(results under results/bench/)")
     return 0

@@ -8,8 +8,10 @@ runs.  This module is the single dispatch point:
 - ``oracle``  — plain jnp (XLA) on whatever the default device is.  The
   reference semantics; always available.
 - ``pallas``  — the fused TPU kernels in :mod:`repro.kernels` (interpret mode
-  on CPU), falling back to the oracle for configurations the kernels do not
-  cover (``feat_w`` feature weights, facility location).
+  on CPU).  Every shipped objective provides kernels for every configuration
+  (FeatureCoverage with and without ``feat_w``, FacilityLocation); the oracle
+  fallback remains only as the safety net for *future* objectives that have
+  not implemented the hooks yet.
 - ``sharded`` — shard_map over a device mesh: the whole SS loop runs
   distributed via the per-shard function views declared on the objective
   (see :mod:`repro.core.distributed`).
@@ -109,13 +111,14 @@ class OracleBackend(Backend):
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(Backend):
-    """Fused Pallas kernels with oracle fallback.
+    """Fused Pallas kernels.
 
     ``interpret=None`` auto-detects (interpret mode off-TPU, honoring
     ``REPRO_PALLAS_INTERPRET``).  Objectives advertise kernel support via
-    their ``pallas_divergence`` / ``pallas_gains`` hooks; a ``None`` return
-    (e.g. FeatureCoverage with ``feat_w``, FacilityLocation) falls back to
-    the oracle path so the backend is always safe to select.
+    their ``pallas_divergence`` / ``pallas_gains`` hooks; both shipped
+    objectives implement them for every configuration, so nothing falls back
+    in-tree — a ``None`` return from an objective that has no kernel still
+    drops to the oracle path, keeping the backend always safe to select.
     """
 
     name = "pallas"

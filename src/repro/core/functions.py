@@ -310,16 +310,14 @@ class FeatureCoverage(SubmodularFunction):
         interpret: bool,
         **block_kw,
     ) -> Array | None:
-        if self.feat_w is not None:
-            # phi is applied per feature and then weighted (sum_f w_f phi(x_f));
-            # the kernel has no feature-weight path, so signal oracle fallback.
-            return None
         from repro.kernels.ss_weights import ss_divergence_kernel
 
         base = self.empty_state() if state is None else state
         cap = self._cap()
         CU = base[None, :] + self.W[probes]                      # (r, F)
-        phi_cu = jnp.sum(_phi(self.phi, CU.astype(jnp.float32), cap), axis=-1)
+        # The kernel carries feat_w through the phi-reduction, so the probe
+        # baseline must be the same weighted sum.
+        phi_cu = self._wsum(_phi(self.phi, CU.astype(jnp.float32), cap))
         resid = residual[probes]
         if probe_mask is not None:
             # Masked probes use the kernel's pad-row convention: phi_cu = -INF
@@ -327,21 +325,19 @@ class FeatureCoverage(SubmodularFunction):
             phi_cu = jnp.where(probe_mask, phi_cu, NEG)
             resid = jnp.where(probe_mask, resid, 0.0)
         return ss_divergence_kernel(
-            self.W, CU, phi_cu, resid, cap,
+            self.W, CU, phi_cu, resid, cap, self.feat_w,
             phi=self.phi, interpret=interpret, **block_kw,
         )
 
     def pallas_gains(
         self, state: Array, *, interpret: bool, **block_kw
     ) -> Array | None:
-        if self.feat_w is not None:
-            return None
         from repro.kernels.feature_gains import feature_gains_kernel
 
         cap = self._cap()
-        phi_c = jnp.sum(_phi(self.phi, state.astype(jnp.float32), cap))
+        phi_c = self._wsum(_phi(self.phi, state.astype(jnp.float32), cap))
         return feature_gains_kernel(
-            self.W, state, phi_c, cap,
+            self.W, state, phi_c, cap, self.feat_w,
             phi=self.phi, interpret=interpret, **block_kw,
         )
 
@@ -458,6 +454,39 @@ class FacilityLocation(SubmodularFunction):
         tie = jnp.sum(is_best, axis=1) > 1
         loss_per_row = jnp.where(tie, 0.0, jnp.maximum(best, 0.0) - jnp.maximum(second, 0.0))
         return jnp.sum(jnp.where(is_best, loss_per_row[:, None], 0.0), axis=0)
+
+    # -- pallas hooks ------------------------------------------------------
+    def pallas_divergence(
+        self,
+        probes: Array,
+        residual: Array,
+        state: Array | None = None,
+        probe_mask: Array | None = None,
+        *,
+        interpret: bool,
+        **block_kw,
+    ) -> Array | None:
+        from repro.kernels.fl_divergence import fl_divergence_kernel
+
+        base = self.empty_state() if state is None else state
+        MU = jnp.maximum(base[None, :], self.sim[:, probes].T)   # (r, n)
+        resid = residual[probes]
+        if probe_mask is not None:
+            # Kernel pad-row convention: resid = -INF makes the edge weight
+            # +INF, so masked probes never win the min.
+            resid = jnp.where(probe_mask, resid, NEG)
+        return fl_divergence_kernel(
+            self.sim, MU, resid, interpret=interpret, **block_kw
+        )
+
+    def pallas_gains(
+        self, state: Array, *, interpret: bool, **block_kw
+    ) -> Array | None:
+        from repro.kernels.fl_divergence import fl_gains_kernel
+
+        return fl_gains_kernel(
+            self.sim, state, interpret=interpret, **block_kw
+        )
 
     # -- shard hooks (column-sharded: each device owns a block of candidate
     # columns, with the full set of served rows) ---------------------------

@@ -4,8 +4,13 @@ oracle in ref.py.  Dispatch is owned by the backend layer
 ops.py keeps the kernels' stable public entry points on top of it:
 
 - ss_weights.ss_divergence_kernel  — the paper's hot spot: fused
-  submodularity-graph edge weights + min-over-probes (one HBM pass over W).
-- feature_gains.feature_gains_kernel — greedy's per-step marginal gains.
+  submodularity-graph edge weights + min-over-probes (one HBM pass over W),
+  with an optional feat_w feature-weight tile through the phi-reduction.
+- feature_gains.feature_gains_kernel — greedy's per-step marginal gains
+  (same feat_w support).
+- fl_divergence.fl_divergence_kernel — facility location's fused (r, n, n)
+  max/accumulate divergence; fl_gains_kernel is its single-probe instance
+  for greedy.
 - flash_attention.flash_attention  — fused online-softmax attention for the
   LM stack (the §Perf-dominant memory term of the 32k cells).
 """

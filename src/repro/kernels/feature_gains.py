@@ -1,7 +1,10 @@
 """Pallas TPU kernel for the greedy inner loop: batched marginal gains of the
 feature-based coverage objective.
 
-g[v] = sum_f [ phi(c_f + W[v, f]) ] - sum_f phi(c_f)        for all v
+g[v] = sum_f w_f phi(c_f + W[v, f]) - sum_f w_f phi(c_f)    for all v
+
+(``feat_w`` feature weights w_f default to ones; like the divergence kernel
+they ride as a resident (1, BF) tile with 0 on padded feature columns.)
 
 This is evaluated once per greedy step (the TPU replacement for the lazy-
 greedy priority queue — see DESIGN.md §3).  The kernel tiles (candidates x
@@ -28,8 +31,9 @@ Array = jax.Array
 def _feature_gains_kernel(
     w_ref,      # (BN, BF) candidate features tile
     c_ref,      # (1, BF)  coverage state tile
-    phic_ref,   # (1, 1)   scalar sum_f phi(c)
+    phic_ref,   # (1, 1)   scalar sum_f w_f phi(c)
     cap_ref,    # (1, BF)
+    fw_ref,     # (1, BF)  feature weights (ones when unweighted; 0 on pads)
     out_ref,    # (1, BN)
     *,
     phi: str,
@@ -44,7 +48,8 @@ def _feature_gains_kernel(
     w = w_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)          # (1, BF)
     cap = cap_ref[...].astype(jnp.float32)
-    val = _phi(phi, c + w, cap)                  # (BN, BF)
+    fw = fw_ref[...].astype(jnp.float32)
+    val = _phi(phi, c + w, cap) * fw             # (BN, BF)
     out_ref[...] += jnp.sum(val, axis=1)[None, :]
 
     @pl.when(i_f == n_f_blocks - 1)
@@ -56,8 +61,9 @@ def _feature_gains_kernel(
 def feature_gains_kernel(
     W: Array,           # (n, F)
     c: Array,           # (F,)
-    phi_c_total: Array,  # scalar
+    phi_c_total: Array,  # scalar: sum_f w_f phi(c) (weighted when feat_w given)
     cap: Array | None = None,
+    feat_w: Array | None = None,  # (F,) feature weights, None = unweighted
     *,
     phi: str = "sqrt",
     bn: int = 512,
@@ -76,10 +82,13 @@ def feature_gains_kernel(
     capp = jnp.zeros((1, fpad), f32)
     if cap is not None:
         capp = capp.at[0, :F].set(cap.astype(f32))
+    fwp = jnp.zeros((1, fpad), f32).at[0, :F].set(
+        jnp.ones((F,), f32) if feat_w is None else feat_w.astype(f32)
+    )
     phic = jnp.asarray(phi_c_total, f32).reshape(1, 1)
 
-    # Padded feature columns have c = 0 and W = 0 -> phi contributes phi(0)=0
-    # for every supported phi, so padding is exact.
+    # Padded feature columns have c = 0, W = 0 and weight 0 -> they contribute
+    # nothing, so padding is exact.
     grid = (npad // bn, fpad // bf)
     out = pl.pallas_call(
         functools.partial(_feature_gains_kernel, phi=phi, n_f_blocks=grid[1]),
@@ -89,6 +98,7 @@ def feature_gains_kernel(
             pl.BlockSpec((1, bf), lambda i, j: (0, j)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((1, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bf), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, npad), f32),
@@ -96,5 +106,5 @@ def feature_gains_kernel(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(Wp, cp, phic, capp)
+    )(Wp, cp, phic, capp, fwp)
     return out[0, :n]

@@ -111,8 +111,8 @@ def _flash_kernel(
 
     @pl.when(ik == n_k_blocks - 1)
     def _finish():
-        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
-        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / lse).astype(o_ref.dtype)
 
 
 @functools.partial(

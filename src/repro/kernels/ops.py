@@ -4,9 +4,9 @@ backend layer (``repro.core.backend``).
 There is no objective-specific dispatch here anymore: objectives advertise
 kernel support through their ``pallas_divergence`` / ``pallas_gains`` hooks
 (see :class:`repro.core.functions.SubmodularFunction`), and the pallas backend
-falls back to the jnp oracle whenever a hook returns ``None`` (e.g.
-FeatureCoverage with ``feat_w`` feature weights, or FacilityLocation, whose
-fused (r, n, n) kernel is future work).  These functions are kept as the
+falls back to the jnp oracle whenever a hook returns ``None`` (no shipped
+configuration does: FeatureCoverage covers ``feat_w`` and FacilityLocation has
+its fused (r, n, n) kernel in ``fl_divergence.py``).  These functions are kept as the
 kernels' stable public entry points for tests and benchmarks;
 ``repro.core.sparsify.ss_sparsify(backend="pallas")`` and the greedy driver
 reach the same code through the backend registry.

@@ -33,8 +33,9 @@ def ss_divergence_ref(
     resid: Array,    # (r,)  residual gains f(u | V \\ u) ( = 0 for pad rows )
     cap: Array | None,  # (F,) saturation caps for phi='satcov', else None
     phi: str = "sqrt",
+    feat_w: Array | None = None,  # (F,) feature weights, None = unweighted
 ) -> Array:
-    """w_{U,v} = min_u [ sum_f phi(CU_u + W_v) - phi_cu_u - resid_u ].  (n,).
+    """w_{U,v} = min_u [ sum_f w_f phi(CU_u + W_v) - phi_cu_u - resid_u ].  (n,).
 
     Pad-row convention: padded probe rows carry phi_cu = -INF, so their weight
     is +INF and they never win the min.
@@ -42,7 +43,10 @@ def ss_divergence_ref(
     f32 = jnp.float32
     Wf, CUf = W.astype(f32), CU.astype(f32)
     both = CUf[:, None, :] + Wf[None, :, :]          # (r, n, F)
-    acc = jnp.sum(_phi(phi, both, cap), axis=-1)      # (r, n)
+    val = _phi(phi, both, cap)
+    if feat_w is not None:
+        val = val * feat_w.astype(f32)
+    acc = jnp.sum(val, axis=-1)                       # (r, n)
     wmat = acc - phi_cu.astype(f32)[:, None] - resid.astype(f32)[:, None]
     return jnp.min(wmat, axis=0)
 
@@ -50,29 +54,38 @@ def ss_divergence_ref(
 def feature_gains_ref(
     W: Array,          # (n, F)
     c: Array,          # (F,) current coverage state
-    phi_c_total: Array,  # scalar: sum_f phi(c)
+    phi_c_total: Array,  # scalar: sum_f w_f phi(c)
     cap: Array | None,
     phi: str = "sqrt",
+    feat_w: Array | None = None,  # (F,) feature weights, None = unweighted
 ) -> Array:
-    """g[v] = sum_f phi(c + W_v) - phi_c_total.  (n,)."""
+    """g[v] = sum_f w_f phi(c + W_v) - phi_c_total.  (n,)."""
     f32 = jnp.float32
     val = _phi(phi, c.astype(f32)[None, :] + W.astype(f32), cap)
-    return jnp.sum(val, axis=-1) - phi_c_total.astype(f32)
+    if feat_w is not None:
+        val = val * feat_w.astype(f32)
+    return jnp.sum(val, axis=-1) - jnp.asarray(phi_c_total, f32)
 
 
 def fl_divergence_ref(
     sim: Array,      # (n, n) similarity; sim[i, v] = service of row i by v
     MU: Array,       # (r, n) probe coverage rows: mu[u, i] = max(state_i, sim[i, u])
-    fl_cu: Array,    # (r,)  sum_i mu[u, i] ... baseline f(S + u); -INF pads
-    resid: Array,    # (r,)  residual gains of probes
+    resid: Array,    # (r,)  residual gains of probes; -INF masks a probe
 ) -> Array:
-    """Facility-location divergence: min_u [ sum_i max(sim[i,v], mu[u,i]) - fl_cu_u - resid_u ]."""
+    """Facility-location divergence:
+    min_u [ sum_i max(sim[i,v] - mu[u,i], 0) - resid_u ].  (n,).
+
+    Pad/mask-row convention: masked probe rows carry resid = -INF, so their
+    weight is +INF and they never win the min.
+    """
     f32 = jnp.float32
     acc = jnp.sum(
-        jnp.maximum(sim.T.astype(f32)[None, :, :], MU.astype(f32)[:, None, :]),
+        jnp.maximum(
+            sim.T.astype(f32)[None, :, :] - MU.astype(f32)[:, None, :], 0.0
+        ),
         axis=-1,
     )  # (r, n)
-    wmat = acc - fl_cu.astype(f32)[:, None] - resid.astype(f32)[:, None]
+    wmat = acc - resid.astype(f32)[:, None]
     return jnp.min(wmat, axis=0)
 
 

@@ -2,7 +2,10 @@
 
 Computes   w_{U,v} = min_{u in U} [ f(v | S + u) - f(u | V \\ u) ]   for every
 candidate v in one pass, for the feature-based objective
-f(S) = sum_f phi(c_f(S)).
+f(S) = sum_f w_f * phi(c_f(S)) — the optional ``feat_w`` feature-weight vector
+rides through the phi-reduction as a resident (1, BF) tile (weights default to
+ones; padded feature columns carry weight 0, which also makes the padding
+exact for any phi).
 
 Why a kernel: the naive computation materializes the (r, n, F) tensor
 phi(CU[u] + W[v]) in HBM (r = |U| = r·log n probes, n candidates, F features).
@@ -57,9 +60,10 @@ def _phi(kind: str, c, cap):
 def _ss_divergence_kernel(
     w_ref,       # (BN, BF) candidate features tile
     cu_ref,      # (RP, BF) probe coverage tile
-    phicu_ref,   # (RP, 1)  sum_f phi(CU) per probe (-INF for pad rows)
+    phicu_ref,   # (RP, 1)  sum_f w_f phi(CU) per probe (-INF for pad rows)
     resid_ref,   # (RP, 1)  probe residual gains
     cap_ref,     # (1, BF)  satcov caps (zeros otherwise)
+    fw_ref,      # (1, BF)  feature weights (ones when unweighted; 0 on pads)
     out_ref,     # (1, BN)  divergence tile
     acc_ref,     # (RP, BN) f32 VMEM scratch accumulator
     *,
@@ -76,16 +80,17 @@ def _ss_divergence_kernel(
     w = w_ref[...].astype(jnp.float32)        # (BN, BF)
     cu = cu_ref[...].astype(jnp.float32)      # (RP, BF)
     cap = cap_ref[...].astype(jnp.float32)    # (1, BF)
+    fw = fw_ref[...].astype(jnp.float32)      # (1, BF)
 
     rp = cu.shape[0]
     n_chunks = rp // probe_chunk
 
     def body(j, acc):
         # Probe chunk (PC, BF) against the whole candidate tile (BN, BF):
-        # contrib[p, v] = sum_f phi(cu[p, f] + w[v, f])
+        # contrib[p, v] = sum_f w_f * phi(cu[p, f] + w[v, f])
         cu_j = jax.lax.dynamic_slice_in_dim(cu, j * probe_chunk, probe_chunk, 0)
         val = _phi(phi, cu_j[:, None, :] + w[None, :, :], cap[None, :, :])
-        contrib = jnp.sum(val, axis=-1)       # (PC, BN)
+        contrib = jnp.sum(val * fw[None, :, :], axis=-1)  # (PC, BN)
         return jax.lax.dynamic_update_slice_in_dim(
             acc,
             jax.lax.dynamic_slice_in_dim(acc, j * probe_chunk, probe_chunk, 0)
@@ -109,9 +114,10 @@ def _ss_divergence_kernel(
 def ss_divergence_kernel(
     W: Array,         # (n, F)
     CU: Array,        # (r, F)
-    phi_cu: Array,    # (r,)
+    phi_cu: Array,    # (r,)  sum_f w_f phi(CU)  (weighted when feat_w given)
     resid: Array,     # (r,)
     cap: Array | None = None,
+    feat_w: Array | None = None,  # (F,) feature weights, None = unweighted
     *,
     phi: str = "sqrt",
     bn: int = 256,
@@ -139,6 +145,11 @@ def ss_divergence_kernel(
     capp = jnp.zeros((1, fpad), f32)
     if cap is not None:
         capp = capp.at[0, :F].set(cap.astype(f32))
+    # Weight 1 on real features, 0 on padded columns (padding stays exact for
+    # any phi, including hypothetical phi(0) != 0 transforms).
+    fwp = jnp.zeros((1, fpad), f32).at[0, :F].set(
+        jnp.ones((F,), f32) if feat_w is None else feat_w.astype(f32)
+    )
 
     grid = (npad // bn, fpad // bf)
     out = pl.pallas_call(
@@ -155,6 +166,7 @@ def ss_divergence_kernel(
             pl.BlockSpec((rp, 1), lambda i, j: (0, 0)),        # phi_cu
             pl.BlockSpec((rp, 1), lambda i, j: (0, 0)),        # resid
             pl.BlockSpec((1, bf), lambda i, j: (0, j)),        # cap
+            pl.BlockSpec((1, bf), lambda i, j: (0, j)),        # feat_w
         ],
         out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, npad), f32),
@@ -163,7 +175,7 @@ def ss_divergence_kernel(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(Wp, CUp, phicup, residp, capp)
+    )(Wp, CUp, phicup, residp, capp, fwp)
     return out[0, :n]
 
 

@@ -190,7 +190,7 @@ def blockwise_attention(
     def q_block(i, qi):
         # qi: (B, H, bq, hd)
         def k_step(carry, j):
-            acc, m, l = carry
+            acc, m, lse = carry
             kj, vj = kb[:, :, j], vb[:, :, j]                 # (B, H, bk, hd)
             s = jnp.einsum(
                 "bhqd,bhsd->bhqs", qi, kj,
@@ -208,13 +208,13 @@ def blockwise_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))       # (B, H, bq)
             p_ = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + jnp.sum(p_, axis=-1)
+            lse_new = lse * alpha + jnp.sum(p_, axis=-1)
             pv = jnp.einsum(
                 "bhqs,bhsd->bhqd", p_.astype(vj.dtype), vj,
                 preferred_element_type=jnp.float32,
             )
             acc_new = acc * alpha[..., None] + pv
-            return (acc_new, m_new, l_new), None
+            return (acc_new, m_new, lse_new), None
 
         acc0 = jnp.zeros((B, H, bq, hd), jnp.float32)
         m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
@@ -222,10 +222,10 @@ def blockwise_attention(
         # remat the k-step: the backward recomputes the (bq, bk) score tiles
         # instead of stashing the full S×S attention matrix (flash-attention
         # memory behaviour, expressed as scan + checkpoint)
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, lse), _ = jax.lax.scan(
             jax.checkpoint(k_step), (acc0, m0, l0), jnp.arange(nk)
         )
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lse[..., None], 1e-30)
         return out  # (B, H, bq, hd)
 
     outs = jax.lax.map(lambda i: q_block(i, qb[:, :, i]), jnp.arange(nq))

@@ -1,7 +1,9 @@
 """Backend dispatch layer tests: registry contract + numerical parity of the
 oracle / pallas (interpret) / sharded execution backends on both objectives
-and all phi variants, including the configurations where the pallas backend
-must fall back to the oracle (feat_w feature weights, facility location).
+and all phi variants.  Every shipped configuration — FeatureCoverage with and
+without feat_w feature weights, and FacilityLocation — now has a fused
+kernel, so the pallas legs exercise real kernels, never the oracle fallback
+(test_pallas_hooks_no_fallback pins that).
 
 Multi-device sharded parity lives in test_distributed.py (needs forced host
 devices); here the sharded backend runs on the default single-device mesh —
@@ -48,16 +50,21 @@ OBJECTIVES = {
     "fc_setcover": lambda: make_fc(phi="setcover"),
     "fc_satcov": lambda: make_fc(phi="satcov", alpha=0.3),
     "fc_linear": lambda: make_fc(phi="linear"),
-    "fc_featw": lambda: make_fc(phi="sqrt", feat_w=True),  # pallas fallback
-    "fl": lambda: make_fl(),                               # pallas fallback
+    "fc_featw": lambda: make_fc(phi="sqrt", feat_w=True),
+    "fc_featw_log1p": lambda: make_fc(phi="log1p", feat_w=True),
+    "fc_featw_satcov": lambda: make_fc(phi="satcov", feat_w=True, alpha=0.3),
+    "fl": lambda: make_fl(),
+    "fl_rbf": lambda: make_fl(kernel="rbf"),
 }
 
 
 # ------------------------------------------------------------- registry ----
-def test_registry_contract():
+def test_registry_contract(monkeypatch):
     assert {"oracle", "pallas", "sharded"} <= set(available_backends())
     assert isinstance(get_backend("oracle"), OracleBackend)
     assert isinstance(resolve_backend("pallas"), PallasBackend)
+    # None resolves to the env default (the CI matrix sets it), else oracle.
+    monkeypatch.delenv("REPRO_SS_BACKEND", raising=False)
     assert resolve_backend(None).name == "oracle"
     be = PallasBackend(interpret=True)
     assert resolve_backend(be) is be
@@ -89,6 +96,22 @@ def test_backends_are_jit_static():
     assert PallasBackend(interpret=True) != PallasBackend(interpret=False)
 
 
+# --------------------------------------------------------- no fallback ----
+@pytest.mark.parametrize("name", sorted(OBJECTIVES))
+def test_pallas_hooks_no_fallback(name):
+    """backend="pallas" is total: every shipped objective configuration
+    provides both kernel hooks (a None return would silently re-route to the
+    jnp oracle and the kernels would stop being exercised)."""
+    fn = OBJECTIVES[name]()
+    probes = jnp.asarray([1, 42, 99])
+    out = fn.pallas_divergence(
+        probes, fn.residual_gains(), interpret=True
+    )
+    assert out is not None and out.shape == (fn.n,)
+    g = fn.pallas_gains(fn.empty_state(), interpret=True)
+    assert g is not None and g.shape == (fn.n,)
+
+
 # ------------------------------------------------------ divergence parity ----
 @pytest.mark.parametrize("name", sorted(OBJECTIVES))
 def test_divergence_parity_oracle_vs_pallas(name):
@@ -106,8 +129,9 @@ def test_divergence_parity_oracle_vs_pallas(name):
     )
 
 
-def test_divergence_parity_with_state():
-    fn = make_fc(phi="sqrt")
+@pytest.mark.parametrize("name", ["fc_sqrt", "fc_featw", "fl"])
+def test_divergence_parity_with_state(name):
+    fn = OBJECTIVES[name]()
     state = fn.add_many(fn.empty_state(), jnp.arange(fn.n) < 7)
     probes = jnp.asarray([20, 90, 150])
     residual = fn.residual_gains()
@@ -122,8 +146,9 @@ def test_divergence_parity_with_state():
     )
 
 
-def test_divergence_parity_probe_mask():
-    fn = make_fc(phi="sqrt")
+@pytest.mark.parametrize("name", ["fc_sqrt", "fc_featw", "fl"])
+def test_divergence_parity_probe_mask(name):
+    fn = OBJECTIVES[name]()
     probes = jnp.asarray([10, 60, 120])
     mask = jnp.asarray([True, False, True])
     residual = fn.residual_gains()
@@ -164,7 +189,9 @@ def test_greedy_parity_across_backends(name):
 
 
 # ------------------------------------------------------- sparsify parity ----
-@pytest.mark.parametrize("name", ["fc_sqrt", "fc_satcov", "fc_featw", "fl"])
+@pytest.mark.parametrize(
+    "name", ["fc_sqrt", "fc_satcov", "fc_featw", "fc_featw_satcov", "fl"]
+)
 def test_ss_sparsify_oracle_pallas_identical(name):
     """Same PRNG stream => identical probe sets; divergences agree to fp
     error, so the retained sets match elementwise."""

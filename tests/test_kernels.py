@@ -1,18 +1,26 @@
 """Pallas kernel tests (deliverable c): shape/dtype sweeps in interpret mode
 against the pure-jnp oracles in ref.py, plus integration through the backend
-dispatch layer (ops.py / ss_sparsify(backend="pallas"))."""
+dispatch layer (ops.py / ss_sparsify(backend="pallas")).  Covers the
+feature-coverage kernels (with and without feat_w feature weights) and the
+facility-location divergence kernel across all phi kinds, non-multiple-of-tile
+shapes, and r < 8 probe padding."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FeatureCoverage, greedy
+from repro.core import FacilityLocation, FeatureCoverage, greedy
 from repro.core.graph import divergence
 from repro.core.sparsify import ss_sparsify
 from repro.kernels import ops
 from repro.kernels.feature_gains import feature_gains_kernel
-from repro.kernels.ref import feature_gains_ref, ss_divergence_ref
+from repro.kernels.fl_divergence import fl_divergence_kernel, fl_gains_kernel
+from repro.kernels.ref import (
+    feature_gains_ref,
+    fl_divergence_ref,
+    ss_divergence_ref,
+)
 from repro.kernels.ss_weights import ss_divergence_kernel
 
 
@@ -57,6 +65,48 @@ def test_feature_gains_kernel_matches_ref(n, F, dtype):
     tol = 1e-4 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=tol, atol=tol)
+
+
+PHI_FW = {
+    "sqrt": jnp.sqrt,
+    "log1p": jnp.log1p,
+    "setcover": lambda c: jnp.minimum(c, 1.0),
+    "linear": lambda c: c,
+}
+
+
+@pytest.mark.parametrize("phi", sorted(PHI_FW) + ["satcov"])
+@pytest.mark.parametrize("n,F,r", [(130, 70, 9), (256, 128, 3), (513, 257, 16)])
+def test_ss_divergence_kernel_feat_w(n, F, r, phi):
+    """feat_w rides through the phi-reduction for every phi kind (and r < 8
+    exercises the probe-chunk pad rows)."""
+    W, CU, _, resid = _mk(6, n, F, r, jnp.float32)
+    fw = jnp.linspace(0.5, 1.5, F)
+    if phi == "satcov":
+        cap = 0.2 * jnp.sum(W, axis=0)
+        phi_cu = jnp.sum(jnp.minimum(CU, cap) * fw, axis=-1)
+    else:
+        cap = None
+        phi_cu = jnp.sum(PHI_FW[phi](CU) * fw, axis=-1)
+    ref = ss_divergence_ref(W, CU, phi_cu, resid, cap, phi, fw)
+    out = ss_divergence_kernel(W, CU, phi_cu, resid, cap, fw, phi=phi,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("phi", sorted(PHI_FW))
+@pytest.mark.parametrize("n,F", [(130, 70), (512, 256)])
+def test_feature_gains_kernel_feat_w(n, F, phi):
+    key = jax.random.PRNGKey(9)
+    W = jax.random.uniform(key, (n, F))
+    c = jax.random.uniform(jax.random.fold_in(key, 1), (F,))
+    fw = jnp.linspace(0.25, 2.0, F)
+    phic = jnp.sum(PHI_FW[phi](c) * fw)
+    ref = feature_gains_ref(W, c, phic, None, phi, fw)
+    out = feature_gains_kernel(W, c, phic, None, fw, phi=phi, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_satcov_cap_path():
@@ -107,6 +157,78 @@ def test_feature_gains_integration_with_greedy():
     out = ops.feature_gains(fn, state)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------- facility location kernel ----
+def _mk_fl(seed, n, d=12, kernel="cosine"):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return FacilityLocation.from_features(X, kernel=kernel)
+
+
+# non-multiple-of-tile candidate/served dims; r < 8 exercises probe padding
+FL_SHAPES = [(64, 3), (130, 5), (256, 16), (313, 9), (520, 24)]
+
+
+@pytest.mark.parametrize("n,r", FL_SHAPES)
+@pytest.mark.parametrize("kernel", ["cosine", "rbf"])
+def test_fl_divergence_kernel_matches_ref(n, r, kernel):
+    fn = _mk_fl(0, n, kernel=kernel)
+    probes = jnp.arange(0, n, max(1, n // r))[:r]
+    MU = jnp.maximum(fn.sim[:, probes].T, 0.0)
+    resid = fn.residual_gains()[probes]
+    ref = fl_divergence_ref(fn.sim, MU, resid)
+    out = fl_divergence_kernel(fn.sim, MU, resid, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fl_divergence_kernel_small_blocks():
+    """Multi-tile grid on a small problem (block sizes below the defaults)."""
+    fn = _mk_fl(1, 384)
+    probes = jnp.asarray([0, 57, 200, 383])
+    MU = jnp.maximum(fn.sim[:, probes].T, 0.0)
+    resid = fn.residual_gains()[probes]
+    ref = fl_divergence_ref(fn.sim, MU, resid)
+    out = fl_divergence_kernel(fn.sim, MU, resid,
+                               bn=128, bi=128, probe_chunk=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [100, 256])
+def test_fl_gains_kernel_matches_oracle(n):
+    """fl_gains_kernel (single-probe divergence instance) == fn.gains."""
+    fn = _mk_fl(2, n)
+    state = fn.add_many(fn.empty_state(), jnp.arange(n) % 7 == 0)
+    ref = fn.gains(state)
+    out = fl_gains_kernel(fn.sim, state, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fl_ops_divergence_matches_graph():
+    """Kernel-backed FL divergence through the public ops entry point ==
+    core.graph.divergence on live candidates (incl. conditional state)."""
+    fn = _mk_fl(3, 200)
+    probes = jnp.asarray([3, 77, 150])
+    state = fn.add_many(fn.empty_state(), jnp.arange(200) < 5)
+    residual = fn.residual_gains()
+    ref = divergence(fn, probes, residual=residual, state=state)
+    out = ops.ss_divergence(fn, probes, residual, state=state)
+    mask = np.ones((200,), bool)
+    mask[np.asarray(probes)] = False
+    np.testing.assert_allclose(np.asarray(out)[mask], np.asarray(ref)[mask],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fl_ss_sparsify_kernel_path_equivalent_quality():
+    key = jax.random.PRNGKey(11)
+    fn = _mk_fl(4, 512)
+    ss_ref = ss_sparsify(fn, key, r=6, c=8.0)
+    ss_ker = ss_sparsify(fn, key, r=6, c=8.0, backend="pallas")
+    f_ref = greedy(fn, 8, alive=ss_ref.vprime).value
+    f_ker = greedy(fn, 8, alive=ss_ker.vprime).value
+    assert abs(float(f_ref) - float(f_ker)) / float(f_ref) < 1e-3
 
 
 @pytest.mark.parametrize("S,hd,bq,bk", [(128, 64, 64, 64), (256, 128, 128, 64),
