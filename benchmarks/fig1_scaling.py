@@ -4,13 +4,24 @@ lazy greedy, sieve-streaming, and SS(+greedy).  Synthetic NYT-like corpus.
 ``backend`` selects the execution path of the SS + greedy stages through the
 unified dispatch layer (repro.core.backend): "oracle" (default), "pallas",
 or "sharded".
+
+CLI: ``python -m benchmarks.fig1_scaling --json PATH`` emits one row per
+(n, backend) with a stable ``bench_key`` and a *warm* SS wall time
+(``wall_s`` — best of ``--repeat`` runs, so jit tracing is amortized out of
+the gated metric).  ``--baseline PATH`` gates the fresh rows against a
+committed JSON (``BENCH_e2e.json`` at the repo root is the CI baseline,
+sharing the regression logic of ``benchmarks.kernel_bench``) and exits
+nonzero on a wall-time regression.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import save, timed
 from repro.core import FeatureCoverage, greedy, lazy_greedy, sieve_streaming
@@ -22,7 +33,7 @@ R, C = 8, 8.0
 
 
 def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
-        backend="oracle") -> dict:
+        backend="oracle", repeat=1) -> dict:
     rows = []
     key = jax.random.PRNGKey(seed)
     for n in sizes:
@@ -38,7 +49,7 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
             out = greedy(fn, K, alive=ss.vprime, backend=backend)
             return jax.block_until_ready(out), ss
 
-        (res_ss, ss), t_ss = timed(run_ss)
+        (res_ss, ss), t_ss = timed(run_ss, repeat=repeat)
         res_sv, t_sv = timed(
             lambda: jax.block_until_ready(sieve_streaming(fn, K))
         )
@@ -47,6 +58,8 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
         rows.append({
             "n": int(n),
             "backend": backend,
+            "bench_key": f"fig1/{backend}-n{n}",
+            "wall_s": t_ss,
             "f_greedy": fg,
             "rel_ss": float(res_ss.value) / fg,
             "rel_sieve": float(res_sv.value) / fg,
@@ -64,5 +77,55 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
     return {"rows": rows}
 
 
+def main() -> int:
+    from benchmarks.kernel_bench import check_regression
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[512, 1024, 2048, 4096, 8192])
+    ap.add_argument("--backends", nargs="+", default=["oracle"])
+    ap.add_argument("--repeat", type=int, default=2,
+                    help="timing repeats for the SS stage (>=2 gives warm "
+                    "wall times — the gated metric)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all rows (bench_key + warm SS wall_s) to PATH")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed baseline JSON (BENCH_e2e.json) to gate "
+                    "SS wall times against")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when wall_s exceeds baseline * this ratio")
+    ap.add_argument("--abs-floor", type=float, default=0.25,
+                    help="seconds over baseline a key must also regress by "
+                    "(end-to-end timings carry more machine noise than the "
+                    "kernel smoke, hence the higher floor)")
+    args = ap.parse_args()
+
+    rows = []
+    for backend in args.backends:
+        rows += run(sizes=tuple(args.sizes), backend=backend,
+                    repeat=args.repeat)["rows"]
+    if len(args.backends) > 1:
+        # run() saves its own backend's rows each call — rewrite the legacy
+        # artifact with the combined set so no backend's rows are dropped.
+        save("fig1_scaling", rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.json}", flush=True)
+    if args.baseline:
+        bad, unmeasured = check_regression(rows, args.baseline,
+                                           args.max_ratio, args.abs_floor)
+        if bad or unmeasured:
+            print(f"regression-gate: {bad} e2e row(s) regressed "
+                  f">{args.max_ratio}x and {unmeasured} baseline key(s) "
+                  f"unmeasured vs {args.baseline} (run all baseline "
+                  "sizes/backends, or refresh the baseline)",
+                  file=sys.stderr)
+            return 1
+        print(f"regression-gate: all e2e rows within {args.max_ratio}x "
+              "of baseline", flush=True)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

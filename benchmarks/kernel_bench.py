@@ -31,7 +31,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save, timed
-from repro.core import FacilityLocation, FeatureCoverage, get_backend
+from repro.core import (
+    FacilityLocation,
+    FeatureCoverage,
+    bucket_schedule,
+    get_backend,
+)
 from repro.kernels.feature_gains import feature_gains_kernel
 from repro.kernels.fl_divergence import fl_divergence_kernel
 from repro.kernels.ref import (
@@ -167,6 +172,91 @@ def run_fl(seed: int = 0, smoke: bool = False) -> dict:
     return {"rows": rows}
 
 
+def run_compact(seed: int = 0, smoke: bool = False) -> dict:
+    """Shrink-aware compacted divergence: wall time must track the live count
+    (the bucket size), not the ground-set size n.
+
+    For every bucket of the SS shrink schedule, gathers a live set of that
+    size and times the compact-candidate kernel path through the backend
+    dispatch (``divergence_compact``), asserting elementwise parity against
+    the full-n kernel output.  The ``*-full`` row is the same-process full-n
+    reference the compacted ratios are taken against; at c = 8 the round-2+
+    buckets (live <= n/sqrt(c)) are the acceptance shapes."""
+    key = jax.random.PRNGKey(seed)
+    be = get_backend("pallas")
+    rows = []
+
+    def bench_objective(fam: str, fn, r: int, extra: dict):
+        n = fn.n
+        probes = jnp.arange(0, n, max(1, n // r))[:r]
+        residual = fn.residual_gains()
+        full, t_full = timed(lambda: jax.block_until_ready(
+            be.divergence(fn, probes, residual=residual)), repeat=3)
+        shape_tag = "-".join(f"{k}{v}" for k, v in extra.items())
+        rows.append({
+            "kernel": f"{fam}_compact", **extra, "k": n,
+            "bench_key": f"{fam}_compact/{shape_tag}-full", "wall_s": t_full,
+            "ratio_vs_full": 1.0,
+        })
+        perm = jax.random.permutation(jax.random.fold_in(key, 11), n)
+        live_pool = perm[~jnp.isin(perm, probes)]   # live set excludes probes
+        for j, size in enumerate(bucket_schedule(n, 8.0)):
+            if size >= n:
+                continue
+            cand_idx = jnp.sort(live_pool[:size])
+            out, t_c = timed(lambda: jax.block_until_ready(
+                be.divergence_compact(
+                    fn, probes, cand_idx, residual=residual)), repeat=3)
+            err = float(jnp.max(jnp.abs(out - full[cand_idx])))
+            assert err < 1e-3, f"{fam} compact/full mismatch (k={size}): {err}"
+            rows.append({
+                "kernel": f"{fam}_compact", **extra, "k": int(size),
+                "bench_key": f"{fam}_compact/{shape_tag}-k{size}",
+                "wall_s": t_c, "max_err": err, "round_geq": j,
+                "t_full_s": t_full, "ratio_vs_full": t_c / t_full,
+            })
+            print(f"kernel {fam}_compact {shape_tag} k={size} (round>={j}) "
+                  f"err={err:.2e} {t_c*1e3:.1f}ms vs full {t_full*1e3:.1f}ms "
+                  f"= {t_c / t_full:.2f}x", flush=True)
+
+    for (n, F, r) in (SS_SHAPES_SMOKE if smoke else SS_SHAPES):
+        W = jax.random.uniform(key, (n, F))
+        bench_objective("ss_divergence", FeatureCoverage(W=W, phi="sqrt"), r,
+                        {"n": n, "F": F, "r": r})
+    for (n, r) in (FL_SHAPES_SMOKE if smoke else FL_SHAPES):
+        X = jax.random.normal(jax.random.fold_in(key, 5), (n, 16))
+        bench_objective("fl_divergence",
+                        FacilityLocation.from_features(X, kernel="cosine"), r,
+                        {"n": n, "r": r})
+
+    # feature_gains compact-grid path (greedy's inner loop over a live subset)
+    for (n, F) in (FG_SHAPES_SMOKE if smoke else FG_SHAPES[:1]):
+        W = jax.random.uniform(key, (n, F))
+        c = jax.random.uniform(jax.random.fold_in(key, 3), (F,))
+        phic = jnp.sum(jnp.sqrt(c))
+        full, t_full = timed(lambda: jax.block_until_ready(
+            feature_gains_kernel(W, c, phic, phi="sqrt", interpret=True)),
+            repeat=3)
+        size = bucket_schedule(n, 8.0)[1] if n > 128 else n
+        cand_idx = jnp.sort(
+            jax.random.permutation(jax.random.fold_in(key, 13), n)[:size])
+        out, t_c = timed(lambda: jax.block_until_ready(
+            feature_gains_kernel(W, c, phic, None, None, cand_idx,
+                                 phi="sqrt", interpret=True)), repeat=3)
+        err = float(jnp.max(jnp.abs(out - full[cand_idx])))
+        assert err < 1e-3, f"feature_gains compact mismatch: {err}"
+        rows.append({
+            "kernel": "feature_gains_compact", "n": n, "F": F, "k": int(size),
+            "bench_key": f"feature_gains_compact/n{n}-F{F}-k{size}",
+            "wall_s": t_c, "max_err": err, "t_full_s": t_full,
+            "ratio_vs_full": t_c / t_full,
+        })
+        print(f"kernel feature_gains_compact n={n} F={F} k={size} "
+              f"err={err:.2e} {t_c / t_full:.2f}x vs full", flush=True)
+    save("kernel_compact", rows)
+    return {"rows": rows}
+
+
 def run_dispatch(seed: int = 0, smoke: bool = False) -> dict:
     """Backend dispatch parity: oracle vs pallas through repro.core.backend —
     the exact routing ss_sparsify/greedy use — on real objectives, covering
@@ -270,6 +360,7 @@ def run_all(seed: int = 0, smoke: bool = False) -> list[dict]:
     rows = []
     rows += run(seed, smoke)["rows"]
     rows += run_fl(seed, smoke)["rows"]
+    rows += run_compact(seed, smoke)["rows"]
     rows += run_dispatch(seed, smoke)["rows"]
     rows += run_flash(seed, smoke)["rows"]
     return rows
@@ -278,11 +369,14 @@ def run_all(seed: int = 0, smoke: bool = False) -> list[dict]:
 def check_regression(
     rows: list[dict], baseline_path: str, max_ratio: float = 2.0,
     abs_floor: float = 0.010,
-) -> int:
+) -> tuple[int, int]:
     """Compare fresh ``wall_s`` per ``bench_key`` against a committed baseline
-    JSON.  Returns the number of kernels slower than ``max_ratio`` x baseline
-    (missing baseline keys are informational — new kernels enter the
-    trajectory on the next baseline refresh).
+    JSON.  Returns ``(regressed, unmeasured)``: kernels slower than
+    ``max_ratio`` x baseline, and baseline keys the fresh run did not measure
+    at all (a partial local run, or a kernel/shape that was removed) — kept
+    separate so callers can report them honestly rather than as regressions.
+    New fresh keys with no baseline are informational — they enter the
+    trajectory on the next baseline refresh.
 
     A key fails only when it regresses both *relatively* (> max_ratio) and
     *absolutely* (> abs_floor seconds over baseline): sub-10ms interpret-mode
@@ -293,11 +387,13 @@ def check_regression(
         base = {row["bench_key"]: row for row in json.load(f)["rows"]}
     fresh = {row["bench_key"]: row for row in rows if "bench_key" in row}
     violations = 0
+    unmeasured = 0
     for key in sorted(base):
         if key not in fresh:
             print(f"regression-gate: baseline key {key} not measured "
-                  f"(kernel removed or shapes changed?)", flush=True)
-            violations += 1
+                  f"(partial run, or kernel removed / shapes changed?)",
+                  flush=True)
+            unmeasured += 1
             continue
         b, fr = base[key]["wall_s"], fresh[key]["wall_s"]
         ratio = fr / b if b > 0 else float("inf")
@@ -311,7 +407,7 @@ def check_regression(
     for key in sorted(set(fresh) - set(base)):
         print(f"regression-gate: new kernel {key} (no baseline yet)",
               flush=True)
-    return violations
+    return violations, unmeasured
 
 
 def main() -> int:
@@ -334,11 +430,12 @@ def main() -> int:
             json.dump({"smoke": args.smoke, "rows": rows}, f, indent=1)
         print(f"wrote {len(rows)} rows to {args.json}", flush=True)
     if args.baseline:
-        bad = check_regression(rows, args.baseline, args.max_ratio,
-                               args.abs_floor)
-        if bad:
+        bad, unmeasured = check_regression(rows, args.baseline,
+                                           args.max_ratio, args.abs_floor)
+        if bad or unmeasured:
             print(f"regression-gate: {bad} kernel(s) regressed "
-                  f">{args.max_ratio}x vs {args.baseline}", file=sys.stderr)
+                  f">{args.max_ratio}x and {unmeasured} baseline key(s) "
+                  f"unmeasured vs {args.baseline}", file=sys.stderr)
             return 1
         print("regression-gate: all kernels within "
               f"{args.max_ratio}x of baseline", flush=True)

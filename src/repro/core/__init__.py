@@ -18,7 +18,13 @@ from repro.core.functions import (
     FeatureCoverage,
     SubmodularFunction,
 )
-from repro.core.graph import divergence, edge_weights, full_edge_matrix
+from repro.core.graph import (
+    divergence,
+    divergence_compact,
+    edge_weights,
+    edge_weights_compact,
+    full_edge_matrix,
+)
 from repro.core.greedy import (
     GreedyResult,
     bidirectional_greedy,
@@ -29,6 +35,8 @@ from repro.core.greedy import (
 from repro.core.sieve import SieveResult, sieve_streaming
 from repro.core.sparsify import (
     SSResult,
+    bucket_schedule,
+    predicted_live_counts,
     preprune_mask,
     probe_count,
     ss_sparsify,
@@ -48,7 +56,9 @@ __all__ = [
     "FacilityLocation",
     "FeatureCoverage",
     "divergence",
+    "divergence_compact",
     "edge_weights",
+    "edge_weights_compact",
     "full_edge_matrix",
     "GreedyResult",
     "bidirectional_greedy",
@@ -58,6 +68,8 @@ __all__ = [
     "SieveResult",
     "sieve_streaming",
     "SSResult",
+    "bucket_schedule",
+    "predicted_live_counts",
     "preprune_mask",
     "probe_count",
     "ss_sparsify",

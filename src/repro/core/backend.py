@@ -90,6 +90,29 @@ class Backend(abc.ABC):
         """w_{U,v} = min_{u in U} [f(v|S+u) - f(u|V\\u)] for all v.  (n,)."""
         return graph.divergence(fn, probes, probe_mask, residual, state)
 
+    def divergence_compact(
+        self,
+        fn: SubmodularFunction,
+        probes: Array,
+        cand_idx: Array,
+        probe_mask: Array | None = None,
+        residual: Array | None = None,
+        state=None,
+        **kw,
+    ) -> Array:
+        """w_{U,v} for the compacted candidate buffer ``cand_idx`` (k,).
+
+        Returns (k,) divergences, elementwise equal to
+        ``divergence(...)[cand_idx]``.  The shrink-aware SS loop calls this
+        with a bucket-sized static buffer of live candidates so round cost
+        tracks the live count instead of n (see repro.core.sparsify).  The
+        base implementation routes through the objective's
+        ``pairwise_gains_compact`` (whose default is a full-width gather —
+        the always-correct oracle fallback)."""
+        return graph.divergence_compact(
+            fn, probes, cand_idx, probe_mask, residual, state
+        )
+
     # -- whole-loop entry points -------------------------------------------
     def sparsify(self, fn: SubmodularFunction, key: Array, **kw):
         """Run SS (Algorithm 1) under this backend.  Returns an SSResult.
@@ -150,6 +173,28 @@ class PallasBackend(Backend):
         )
         if out is None:
             return graph.divergence(fn, probes, probe_mask, residual, state)
+        return out
+
+    def divergence_compact(
+        self,
+        fn: SubmodularFunction,
+        probes: Array,
+        cand_idx: Array,
+        probe_mask: Array | None = None,
+        residual: Array | None = None,
+        state=None,
+        **kw,
+    ) -> Array:
+        if residual is None:
+            residual = fn.residual_gains()
+        out = fn.pallas_divergence(
+            probes, residual, state, probe_mask,
+            interpret=self._interpret(), cand_idx=cand_idx, **kw,
+        )
+        if out is None:
+            return graph.divergence_compact(
+                fn, probes, cand_idx, probe_mask, residual, state
+            )
         return out
 
 

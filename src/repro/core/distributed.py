@@ -50,7 +50,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.functions import NEG, FeatureCoverage, SubmodularFunction
 from repro.core.greedy import greedy
-from repro.core.sparsify import SSResult, max_rounds, probe_count
+from repro.core.sparsify import SSResult, bucket_schedule, max_rounds, probe_count
 
 Array = jax.Array
 INF = -NEG
@@ -75,6 +75,7 @@ def ss_sparsify_sharded(
     phi: str = "sqrt",
     bins: int = 512,
     alive: Array | None = None,
+    compact: bool = True,
 ) -> SSResult:
     """Distributed Algorithm 1 over any shard-capable objective.
 
@@ -83,6 +84,14 @@ def ss_sparsify_sharded(
     independently (collectives over ``data`` only).  Returns a full
     :class:`SSResult` (``alive_trace`` is only recorded for single-level
     meshes; with a pod hierarchy it is -1, since pods run independent loops).
+
+    ``compact`` (default, for objectives with ``supports_shard_compact``)
+    makes each shard gather its surviving candidates into a bucket-sized
+    static buffer (``lax.switch`` over the per-shard :func:`bucket_schedule`)
+    before evaluating payload gains — only the *grid* is rebalanced; the
+    objective's sharded arrays never move.  The bucket index comes from the
+    pmax of the per-shard live counts, so every shard of a pod takes the same
+    branch and the branches stay collective-free.
     """
     fn = _as_objective(fn, phi)
     n = fn.n
@@ -105,6 +114,10 @@ def ss_sparsify_sharded(
     m_loc = min(m, n_loc)
     rounds_cap = max_rounds(n_pod, r, c)
     shrink = 1.0 - 1.0 / math.sqrt(c)
+    # Per-shard compact buckets: jnp payload gains need no tile alignment, so
+    # a fine-grained tile keeps compaction effective on small shards too.
+    compact = compact and fn.supports_shard_compact
+    buckets = bucket_schedule(n_loc, c, tile=8) if compact else None
 
     arrays, specs, rebuild = fn.shard_pack(axes)
     arrays = tuple(
@@ -166,9 +179,44 @@ def ss_sparsify_sharded(
 
             # local divergence w_{U, v} for my candidates, via the per-shard
             # function view: f(v | U+u) from the replicated payload block.
-            pair = fn_loc.shard_payload_gains(payloads, ctx)  # (m, n_loc)
-            w = pair - resid_p[:, None]
-            div = jnp.minimum(div, jnp.min(w, axis=0))
+            # Compacted: gather my live candidates into the smallest static
+            # bucket that fits every shard's live count (pmax -> all shards
+            # take the same collective-free branch), evaluate the (m, k)
+            # block on the restricted view, scatter-min back.
+            if compact:
+                live_max = jax.lax.pmax(jnp.sum(alive), data_axis)
+                bidx = jnp.sum(jnp.asarray(buckets) >= live_max) - 1
+
+                def _make_branch(size):
+                    if size >= n_loc:
+                        def full(args):
+                            _, payloads_b, resid_b, div_b = args
+                            pair = fn_loc.shard_payload_gains(payloads_b, ctx)
+                            w = pair - resid_b[:, None]
+                            return jnp.minimum(div_b, jnp.min(w, axis=0))
+                        return full
+
+                    def branch(args):
+                        alive_b, payloads_b, resid_b, div_b = args
+                        cand_idx = jnp.where(alive_b, size=size, fill_value=0)[0]
+                        cand_mask = jnp.arange(size) < jnp.sum(alive_b)
+                        pair_c = fn_loc.shard_take(cand_idx).shard_payload_gains(
+                            payloads_b, ctx
+                        )                                     # (m, size)
+                        w_c = jnp.min(pair_c - resid_b[:, None], axis=0)
+                        w_c = jnp.where(cand_mask, w_c, INF)
+                        return div_b.at[cand_idx].min(w_c)
+                    return branch
+
+                div = jax.lax.switch(
+                    bidx,
+                    [_make_branch(s) for s in buckets],
+                    (alive, payloads, resid_p, div),
+                )
+            else:
+                pair = fn_loc.shard_payload_gains(payloads, ctx)  # (m, n_loc)
+                w = pair - resid_p[:, None]
+                div = jnp.minimum(div, jnp.min(w, axis=0))
 
             # distributed quantile: histogram of live divergences
             lo = jax.lax.pmin(

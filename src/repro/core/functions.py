@@ -126,6 +126,24 @@ class SubmodularFunction(abc.ABC):
         """f(v) for all v ( = gains on the empty state)."""
         return self.gains(self.empty_state())
 
+    # -- compaction (optional override, always correct) --------------------
+    # The SS loop's live set shrinks geometrically; the compacted execution
+    # path (see repro.core.sparsify) evaluates probe-conditioned gains only
+    # for a gathered buffer of surviving candidates.  The base implementation
+    # computes the full (r, n) block and gathers — correct for any objective;
+    # override it to actually skip the dead-candidate work (both shipped
+    # objectives do).
+
+    def pairwise_gains_compact(
+        self, probes: Array, cand_idx: Array, state: Any | None = None
+    ) -> Array:
+        """f(v | S + u) for u in probes (r,) and v = cand_idx (k,).  (r, k).
+
+        ``cand_idx`` holds ground indices of the compacted candidate buffer
+        (padding entries may repeat a valid index; callers mask them out).
+        """
+        return jnp.take(self.pairwise_gains(probes, state), cand_idx, axis=1)
+
     # -- pallas hooks (optional) -------------------------------------------
     # Returning None means "no fused kernel for this configuration"; the
     # pallas backend then falls back to the jnp oracle.  ``interpret`` selects
@@ -139,9 +157,16 @@ class SubmodularFunction(abc.ABC):
         probe_mask: Array | None = None,
         *,
         interpret: bool,
+        cand_idx: Array | None = None,
         **block_kw,
     ) -> Array | None:
-        """Fused divergence w_{U,v} (paper Def. 2) for all v, or None."""
+        """Fused divergence w_{U,v} (paper Def. 2) for all v, or None.
+
+        With ``cand_idx`` (k,) the output is restricted to the compacted
+        candidate buffer — shape (k,) instead of (n,) — and the kernel grid
+        should only cover the gathered candidates.  Returning None for a
+        non-None ``cand_idx`` drops the pallas backend to the oracle gather
+        path (always correct, never faster)."""
         return None
 
     def pallas_gains(
@@ -159,6 +184,11 @@ class SubmodularFunction(abc.ABC):
     #: whether per-pod hierarchical sharding (a standalone ground set per pod)
     #: is supported — requires the objective's arrays to be row-local.
     supports_pod_sharding: bool = False
+
+    #: whether the local view supports candidate restriction via
+    #: :meth:`shard_take` — required for the sharded loop's live-set
+    #: compaction (the loop silently runs uncompacted otherwise).
+    supports_shard_compact: bool = False
 
     def shard_pack(
         self, axes: Sequence[str]
@@ -198,6 +228,14 @@ class SubmodularFunction(abc.ABC):
         all local candidates v.  Shape (m, n_local)."""
         raise NotImplementedError
 
+    def shard_take(self, cand_idx: Array) -> "SubmodularFunction":
+        """Local view restricted to the local candidate subset ``cand_idx``
+        (k,) — ``shard_payload_gains`` on the returned view must produce the
+        (m, k) gather of the full view's (m, n_local) output.  Must be
+        collective-free (it runs inside data-dependent ``lax.switch``
+        branches).  Only required when ``supports_shard_compact``."""
+        raise NotImplementedError
+
 
 def _row_spec(axes: Sequence[str]) -> P:
     return P(tuple(axes) if len(axes) > 1 else axes[0], None)
@@ -223,6 +261,7 @@ class FeatureCoverage(SubmodularFunction):
     alpha: float = 0.2          # saturation fraction for phi="satcov"
 
     supports_pod_sharding = True
+    supports_shard_compact = True
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
@@ -299,6 +338,22 @@ class FeatureCoverage(SubmodularFunction):
             - _phi(self.phi, C[None, :] - self.W, cap)
         )
 
+    def pairwise_gains_compact(
+        self, probes: Array, cand_idx: Array, state: Array | None = None
+    ) -> Array:
+        """Compact (r, k, F) block — per-element identical arithmetic to the
+        full ``pairwise_gains`` restricted to ``cand_idx``, so the compacted
+        SS loop prunes bit-identically to the uncompacted one."""
+        base = self.empty_state() if state is None else state
+        cap = self._cap()
+        cu = base[None, :] + self.W[probes]                      # (r, F)
+        phi_cu = self._wsum(_phi(self.phi, cu, cap))             # (r,)
+        Wc = jnp.take(self.W, cand_idx, axis=0)                  # (k, F)
+        both = cu[:, None, :] + Wc[None, :, :]
+        out = self._wsum(_phi(self.phi, both, cap)) - phi_cu[:, None]
+        v_eq_u = probes[:, None] == cand_idx[None, :]
+        return jnp.where(v_eq_u, 0.0, out)
+
     # -- pallas hooks ------------------------------------------------------
     def pallas_divergence(
         self,
@@ -308,6 +363,7 @@ class FeatureCoverage(SubmodularFunction):
         probe_mask: Array | None = None,
         *,
         interpret: bool,
+        cand_idx: Array | None = None,
         **block_kw,
     ) -> Array | None:
         from repro.kernels.ss_weights import ss_divergence_kernel
@@ -325,7 +381,7 @@ class FeatureCoverage(SubmodularFunction):
             phi_cu = jnp.where(probe_mask, phi_cu, NEG)
             resid = jnp.where(probe_mask, resid, 0.0)
         return ss_divergence_kernel(
-            self.W, CU, phi_cu, resid, cap, self.feat_w,
+            self.W, CU, phi_cu, resid, cap, self.feat_w, cand_idx,
             phi=self.phi, interpret=interpret, **block_kw,
         )
 
@@ -375,6 +431,9 @@ class FeatureCoverage(SubmodularFunction):
         both = payloads[:, None, :] + self.W[None, :, :]         # (m, nl, F)
         return self._wsum(_phi(self.phi, both, cap)) - phi_cu[:, None]
 
+    def shard_take(self, cand_idx: Array) -> "FeatureCoverage":
+        return dataclasses.replace(self, W=jnp.take(self.W, cand_idx, axis=0))
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -390,6 +449,8 @@ class FacilityLocation(SubmodularFunction):
     """
 
     sim: Array  # (n, n)
+
+    supports_shard_compact = True
 
     def tree_flatten(self):
         return (self.sim,), ()
@@ -455,6 +516,18 @@ class FacilityLocation(SubmodularFunction):
         loss_per_row = jnp.where(tie, 0.0, jnp.maximum(best, 0.0) - jnp.maximum(second, 0.0))
         return jnp.sum(jnp.where(is_best, loss_per_row[:, None], 0.0), axis=0)
 
+    def pairwise_gains_compact(
+        self, probes: Array, cand_idx: Array, state: Array | None = None
+    ) -> Array:
+        """Compact hinge block: the served-row reduction still spans all n
+        rows (that is f's definition); only the candidate axis is gathered."""
+        base = self.empty_state() if state is None else state
+        mu = jnp.maximum(base[None, :], self.sim[:, probes].T)   # (r, n)
+        simc = jnp.take(self.sim, cand_idx, axis=1)              # (n, k)
+        return jnp.sum(
+            jnp.maximum(simc.T[None, :, :] - mu[:, None, :], 0.0), axis=-1
+        )
+
     # -- pallas hooks ------------------------------------------------------
     def pallas_divergence(
         self,
@@ -464,6 +537,7 @@ class FacilityLocation(SubmodularFunction):
         probe_mask: Array | None = None,
         *,
         interpret: bool,
+        cand_idx: Array | None = None,
         **block_kw,
     ) -> Array | None:
         from repro.kernels.fl_divergence import fl_divergence_kernel
@@ -476,7 +550,7 @@ class FacilityLocation(SubmodularFunction):
             # +INF, so masked probes never win the min.
             resid = jnp.where(probe_mask, resid, NEG)
         return fl_divergence_kernel(
-            self.sim, MU, resid, interpret=interpret, **block_kw
+            self.sim, MU, resid, cand_idx, interpret=interpret, **block_kw
         )
 
     def pallas_gains(
@@ -540,4 +614,10 @@ class FacilityLocation(SubmodularFunction):
         return jnp.sum(
             jnp.maximum(self.sim.T[None, :, :] - payloads[:, None, :], 0.0),
             axis=-1,
+        )
+
+    def shard_take(self, cand_idx: Array) -> "FacilityLocation":
+        # Candidates are columns; the served rows stay whole.
+        return dataclasses.replace(
+            self, sim=jnp.take(self.sim, cand_idx, axis=1)
         )

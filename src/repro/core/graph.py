@@ -56,6 +56,46 @@ def divergence(
     return jnp.min(w, axis=0)
 
 
+def edge_weights_compact(
+    fn: SubmodularFunction,
+    probes: Array,
+    cand_idx: Array,
+    residual: Array | None = None,
+    state: Array | None = None,
+) -> Array:
+    """w_{u->v|S} for probe tails u (r,) x compacted heads v = cand_idx (k,).
+
+    Shape (r, k).  The compacted analogue of :func:`edge_weights`: work scales
+    with the live count k, not the ground-set size n (via the objective's
+    ``pairwise_gains_compact`` — its base implementation is a full-width
+    gather, so this is always correct, merely not always faster).
+    """
+    if residual is None:
+        residual = fn.residual_gains()
+    pair = fn.pairwise_gains_compact(probes, cand_idx, state)    # (r, k)
+    return pair - residual[probes][:, None]
+
+
+def divergence_compact(
+    fn: SubmodularFunction,
+    probes: Array,
+    cand_idx: Array,
+    probe_mask: Array | None = None,
+    residual: Array | None = None,
+    state: Array | None = None,
+) -> Array:
+    """w_{U,v} = min_{u in U} w_{u->v|S} for v = cand_idx (k,).  Shape (k,).
+
+    Matches ``divergence(fn, probes, ...)[cand_idx]`` elementwise; padding
+    entries of ``cand_idx`` (repeated valid indices) compute the divergence of
+    whatever index they repeat — callers mask them before scattering back.
+    """
+    w = edge_weights_compact(fn, probes, cand_idx, residual, state)
+    if probe_mask is not None:
+        w = jnp.where(probe_mask[:, None], w, -NEG)
+    return jnp.min(w, axis=0)
+
+
 def divergence_update(
     fn: SubmodularFunction,
     current: Array,

@@ -77,6 +77,16 @@ def _greedy(
     return GreedyResult(sel.astype(jnp.int32), gains, fn.value(state), state)
 
 
+@jax.jit
+def _gain_at(fn: SubmodularFunction, state, v: Array) -> Array:
+    """f(v|S) for one candidate — lazy greedy's re-evaluation primitive.
+
+    Module-level so the trace cache is shared across ``lazy_greedy`` calls
+    (a per-call ``jax.jit(lambda ...)`` wrapper would be a fresh cache every
+    call and retrace on each one)."""
+    return fn.gains(state)[v]
+
+
 def lazy_greedy(
     fn: SubmodularFunction, k: int, alive: np.ndarray | None = None
 ) -> GreedyResult:
@@ -96,8 +106,6 @@ def lazy_greedy(
     heap = [(-ub[v], int(v), 0) for v in range(n) if alive[v]]  # (-gain, v, stamp)
     heapq.heapify(heap)
 
-    gain_one = jax.jit(lambda st, v: fn.gains(st)[v])
-
     sel, gains, stamp = [], [], 0
     while heap and len(sel) < k:
         neg_g, v, s = heapq.heappop(heap)
@@ -107,7 +115,7 @@ def lazy_greedy(
             state = fn.add(state, jnp.asarray(v))
             stamp += 1
         else:                                # stale: re-evaluate and push back
-            g = float(gain_one(state, jnp.asarray(v)))
+            g = float(_gain_at(fn, state, jnp.asarray(v)))
             heapq.heappush(heap, (-g, v, stamp))
     sel = np.asarray(sel + [0] * (k - len(sel)), np.int32)
     gains = np.asarray(gains + [0.0] * (k - len(gains)), np.float32)
@@ -159,12 +167,6 @@ def _stochastic_greedy(
         step, (fn.empty_state(), alive), jax.random.split(key, k)
     )
     return GreedyResult(sel.astype(jnp.int32), gains, fn.value(state), state)
-
-
-@partial(jax.jit, static_argnames=())
-def _h_objective(div: Array, vprime_mask: Array, eps: Array) -> Array:
-    """h(V') of paper Eq. 9 given precomputed divergences w_{V'v}."""
-    return jnp.sum((~vprime_mask) & (div <= eps))
 
 
 def bidirectional_greedy(

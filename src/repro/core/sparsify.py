@@ -59,6 +59,55 @@ def max_rounds(n: int, r: int = 8, c: float = 8.0) -> int:
     return max(1, int(math.ceil(math.log(max(n, 2)) / math.log(math.sqrt(c)))) + 2)
 
 
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def bucket_schedule(n: int, c: float = 8.0, tile: int = 128) -> tuple[int, ...]:
+    """Static compact-buffer sizes for the shrink-aware SS loop.
+
+    The live set shrinks by 1/sqrt(c) per round, so round j's divergence only
+    has ~ceil(n / c^{j/2}) live candidates.  Returns those sizes rounded up to
+    ``tile`` multiples (kernel-grid alignment), clamped to n, deduplicated,
+    descending — one ``lax.switch`` branch (one static shape) per bucket, so
+    the loop never recompiles and never syncs to the host.
+    """
+    if c <= 1.0:
+        raise ValueError(f"bucket_schedule needs c > 1 (got c={c}): the SS "
+                         "live set shrinks by 1 - 1/sqrt(c) per round")
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1 (got {tile})")
+    sizes: list[int] = []
+    j = 0
+    while True:
+        raw = math.ceil(n / (math.sqrt(c) ** j))
+        s = min(n, _round_up(raw, tile))
+        if not sizes or s < sizes[-1]:
+            sizes.append(s)
+        if raw <= tile:
+            return tuple(sizes)
+        j += 1
+
+
+def predicted_live_counts(
+    n: int, r: int = 8, c: float = 8.0, alive0: int | None = None
+) -> list[int]:
+    """The deterministic live-count-after-each-round sequence of Algorithm 1
+    (exactly what ``SSResult.alive_trace`` records): each round removes m
+    probes, then floor(live * (1 - 1/sqrt(c))) pruned elements."""
+    m = min(probe_count(n, r), n)
+    shrink = 1.0 - 1.0 / math.sqrt(c)
+    live = n if alive0 is None else alive0
+    out: list[int] = []
+    for _ in range(max_rounds(n, r, c)):
+        if live <= m:
+            break
+        live -= m
+        live -= math.floor(live * shrink)
+        out.append(live)
+    return out
+
+
 def ss_sparsify(
     fn: SubmodularFunction,
     key: Array,
@@ -68,6 +117,7 @@ def ss_sparsify(
     state: Array | None = None,
     importance: bool = False,
     backend: "str | Backend | None" = None,
+    compact: bool = True,
 ) -> SSResult:
     """Algorithm 1 (Submodular Sparsification).
 
@@ -82,14 +132,20 @@ def ss_sparsify(
         proportional to f(u) + f(u|V\\u) instead of uniformly.
       backend: execution backend — "oracle" (default), "pallas", "sharded",
         or a Backend instance (repro.core.backend).
+      compact: shrink-aware execution (default) — each round's divergence is
+        dispatched over a compacted live-candidate buffer whose static size
+        follows :func:`bucket_schedule`, so round cost tracks the live count
+        instead of n.  ``compact=False`` forces the full-width path (the two
+        produce identical ``vprime`` under the same key).
     """
     be = resolve_backend(backend)
     return be.sparsify(
-        fn, key, r=r, c=c, alive=alive, state=state, importance=importance
+        fn, key, r=r, c=c, alive=alive, state=state, importance=importance,
+        compact=compact,
     )
 
 
-@partial(jax.jit, static_argnames=("r", "c", "importance", "backend"))
+@partial(jax.jit, static_argnames=("r", "c", "importance", "backend", "compact"))
 def _sparsify_dense(
     fn: SubmodularFunction,
     key: Array,
@@ -99,14 +155,26 @@ def _sparsify_dense(
     state: Array | None = None,
     importance: bool = False,
     backend: Backend | None = None,
+    compact: bool = True,
 ) -> SSResult:
     """The dense single-process SS loop; ``backend`` (an already-resolved
-    Backend instance — callers go through ss_sparsify) supplies divergence."""
+    Backend instance — callers go through ss_sparsify) supplies divergence.
+
+    With ``compact`` (the default), each round gathers the surviving
+    candidates into a static bucket-sized index buffer (one ``lax.switch``
+    branch per :func:`bucket_schedule` size — no recompilation, no host
+    sync), dispatches ``divergence_compact`` over the buffer, and
+    scatter-mins the (k,) result back to ground indices.  Divergence entries
+    of probe/dead slots are then *stale* rather than refreshed — the loop
+    never reads them (pruning and eps_hat only consult live entries), so
+    ``vprime``/``eps_hat`` are identical to the full-width path.
+    """
     be = backend if backend is not None else resolve_backend(None)
     n = fn.n
     m = min(probe_count(n, r), n)  # tiny ground sets: everything is a probe
     rounds_cap = max_rounds(n, r, c)
     shrink = 1.0 - 1.0 / math.sqrt(c)
+    buckets = bucket_schedule(n, c) if compact else None
 
     alive0 = jnp.ones((n,), bool) if alive is None else alive
     residual = fn.residual_gains()
@@ -119,6 +187,32 @@ def _sparsify_dense(
 
     def _divergence(probes):
         return be.divergence(fn, probes, residual=residual, state=state)
+
+    def _make_branch(size: int):
+        if size >= n:
+            # Full-width bucket (round 1, before any shrink): the gather +
+            # scatter would be pure overhead over the plain divergence.
+            def full(args):
+                _, probes, div = args
+                return jnp.minimum(div, _divergence(probes))
+            return full
+
+        # One static compact width: gather live candidates into a (size,)
+        # buffer, compute their divergences, scatter-min back to ground.
+        def branch(args):
+            alive, probes, div = args
+            cand_idx = jnp.where(alive, size=size, fill_value=0)[0]
+            cand_mask = jnp.arange(size) < jnp.sum(alive)
+            w = be.divergence_compact(
+                fn, probes, cand_idx, residual=residual, state=state
+            )
+            # Padding slots repeat index 0 — masked to +INF, their
+            # scatter-min is a no-op.
+            w = jnp.where(cand_mask, w, INF)
+            return div.at[cand_idx].min(w)
+        return branch
+
+    branches = [_make_branch(s) for s in buckets] if compact else None
 
     def cond(carry):
         alive, vprime, div, eps_hat, key, rnd, trace = carry
@@ -138,8 +232,15 @@ def _sparsify_dense(
         vprime = vprime | probe_hot
         alive = alive & ~probe_hot
 
-        # (3) running divergence against the union of all probes so far.
-        div = jnp.minimum(div, _divergence(probes))
+        # (3) running divergence against the union of all probes so far —
+        # over the compacted live buffer (smallest bucket that fits the live
+        # count) or the full width.
+        if compact:
+            barr = jnp.asarray(buckets)
+            bidx = jnp.sum(barr >= jnp.sum(alive)) - 1
+            div = jax.lax.switch(bidx, branches, (alive, probes, div))
+        else:
+            div = jnp.minimum(div, _divergence(probes))
 
         # (4) drop the (1 - 1/sqrt(c)) fraction of live items with smallest
         # divergence.  Rank via masked argsort (dead -> +INF sorts last).
@@ -184,24 +285,48 @@ def postreduce(
     result: SSResult,
     eps: float,
     key: Array,
-    max_members: int | None = None,
+    max_members: "int | str | None" = None,
+    r: int = 8,
+    c: float = 8.0,
 ) -> Array:
     """§3.4 improvement 3: shrink V' further by (approximately) solving Eq. 9
     restricted to V' with bidirectional greedy.  Returns a new vprime mask.
 
     h(V') = |{v in V \\ V' : w_{V'v} <= eps}|  -  computed against the edge
     weights from V'-members to all pruned v.  Member bookkeeping is vectorized
-    over a static block of |V'|-sized slots (padded with -1) and scattered
-    back to ground indices in one masked scatter — no per-element host loop.
-    ``max_members`` is the static slot count; when None it is sized with one
-    host read of |V'| (pass an explicit bound to avoid that sync inside
-    larger traced pipelines).  Note the reduction itself (bidirectional
-    greedy) is a host-side loop by design — V' is polylog-sized after SS.
+    over a static block of slots (padded with -1) and scattered back to
+    ground indices in one masked scatter — no per-element host loop.
+
+    ``max_members`` is the static slot count.  The default (None) derives it
+    from the paper's O(log² n) retained-set size: SS adds at most m =
+    r·log2(n) probes per round for at most ``max_rounds`` rounds plus an
+    m-sized tail, so m·(max_rounds+1) slots always fit V' (pass ``r``/``c``
+    matching the SS run if non-default — a mismatch that would truncate V'
+    raises).  ``max_members="exact"`` opts into one host-sync read of |V'|
+    for the tightest block; an int pins the bound explicitly and is trusted
+    *unchecked* (no sync — the caller owns the fit).  The reduction itself
+    (bidirectional greedy) is a host-side loop by design — V' is
+    polylog-sized after SS.
     """
     n = fn.n
-    if max_members is None:
-        max_members = int(jnp.sum(result.vprime))  # one sizing sync
+    derived = max_members is None
+    if max_members == "exact":
+        max_members = int(jnp.sum(result.vprime))  # one sizing sync (opt-in)
+    elif derived:
+        m = min(probe_count(n, r), n)
+        max_members = m * (max_rounds(n, r, c) + 1)
     slots = max(1, min(n, max_members))
+    if derived and slots < n and int(jnp.sum(result.vprime)) > slots:
+        # jnp.where(..., size=slots) would silently drop V' members and the
+        # reduction would return a wrong mask — fail loudly instead.  (One
+        # host read, only on the derived-default path and only when the block
+        # is actually restrictive; an explicit int bound is trusted unchecked
+        # precisely so callers can avoid this sync.)
+        raise ValueError(
+            f"postreduce slot bound {slots} < |V'|: the SS run used a "
+            "different r/c than passed here — pass matching r/c, an explicit "
+            "max_members, or max_members='exact'"
+        )
     vp_idx = jnp.where(result.vprime, size=slots, fill_value=-1)[0]  # (slots,)
     valid = vp_idx >= 0
     members = jnp.where(valid, vp_idx, 0)
@@ -242,6 +367,7 @@ def summarize(
     preprune: bool = False,
     importance: bool = False,
     backend: "str | Backend | None" = None,
+    compact: bool = True,
 ):
     """End-to-end paper pipeline: (optional pre-prune) -> SS -> greedy on V'.
 
@@ -250,7 +376,8 @@ def summarize(
     """
     alive = preprune_mask(fn, k) if preprune else None
     ss = ss_sparsify(
-        fn, key, r=r, c=c, alive=alive, importance=importance, backend=backend
+        fn, key, r=r, c=c, alive=alive, importance=importance, backend=backend,
+        compact=compact,
     )
     res = greedy(fn, k, alive=ss.vprime, backend=backend)
     return res, ss

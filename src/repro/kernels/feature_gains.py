@@ -64,12 +64,17 @@ def feature_gains_kernel(
     phi_c_total: Array,  # scalar: sum_f w_f phi(c) (weighted when feat_w given)
     cap: Array | None = None,
     feat_w: Array | None = None,  # (F,) feature weights, None = unweighted
+    cand_idx: Array | None = None,  # (k,) compacted candidate buffer
     *,
     phi: str = "sqrt",
     bn: int = 512,
     bf: int = 512,
     interpret: bool = False,
 ) -> Array:
+    # Compact-candidate path: only the gathered candidate rows enter the
+    # grid; the output is the (k,) compacted gains buffer.
+    if cand_idx is not None:
+        W = jnp.take(W, cand_idx, axis=0)
     n, F = W.shape
     f32 = jnp.float32
     bn = min(bn, _round_up(n, 128))

@@ -111,6 +111,7 @@ def fl_divergence_kernel(
     sim: Array,       # (ni, n) similarity; sim[i, v] = service of row i by v
     MU: Array,        # (r, ni) probe coverage rows max(state, sim[:, u])
     resid: Array,     # (r,)  residual gains f(u | V \\ u); -INF masks a probe
+    cand_idx: Array | None = None,  # (k,) compacted candidate buffer
     *,
     bn: int = 256,
     bi: int = 512,
@@ -123,7 +124,15 @@ def fl_divergence_kernel(
     ``resid = -INF`` so their edge weight ``acc - resid`` is +INF and they
     never win the min.  Padded served rows are all-zero in both ``sim`` and
     ``MU``, so the hinge ``max(0 - 0, 0) = 0`` contributes nothing.
+
+    Compact-candidate path: with ``cand_idx`` (k,) only the gathered candidate
+    *columns* enter the grid (the served-row reduction still spans all ni rows
+    — that is f's definition) and the output is the (k,) compacted buffer.
+    The served-row blocking is unchanged, so per-candidate accumulation order
+    — and hence the output — matches the full grid bitwise.
     """
+    if cand_idx is not None:
+        sim = jnp.take(sim, cand_idx, axis=1)
     ni, n = sim.shape
     r = MU.shape[0]
     f32 = jnp.float32
@@ -166,11 +175,13 @@ def fl_divergence_kernel(
 def fl_gains_kernel(
     sim: Array,      # (n, n)
     state: Array,    # (n,) current coverage m_i = max(0, max_{s in S} sim[i, s])
+    cand_idx: Array | None = None,  # (k,) compacted candidate buffer
     *,
     interpret: bool = False,
     **block_kw,
 ) -> Array:
-    """Greedy gains f(v|S) = sum_i max(sim[i, v] - m_i, 0) for all v.  (n,).
+    """Greedy gains f(v|S) = sum_i max(sim[i, v] - m_i, 0) for all v.  (n,)
+    — or the (k,) compacted buffer when ``cand_idx`` is given.
 
     A single-probe instance of the divergence kernel: with MU = state (one
     row) and resid = 0 the fused output is exactly f(v|S) — same tiling, no
@@ -180,6 +191,7 @@ def fl_gains_kernel(
         sim,
         state.astype(jnp.float32)[None, :],
         jnp.zeros((1,), jnp.float32),
+        cand_idx,
         interpret=interpret,
         **block_kw,
     )

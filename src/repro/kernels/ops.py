@@ -39,6 +39,24 @@ def ss_divergence(
     )
 
 
+def ss_divergence_compact(
+    fn,
+    probes: Array,
+    cand_idx: Array,
+    residual: Array,
+    state: Array | None = None,
+    **block_kw,
+) -> Array:
+    """Kernel-backed compacted divergence over candidates ``cand_idx``.  (k,).
+
+    Elementwise equal to ``ss_divergence(...)[cand_idx]`` — the shrink-aware
+    SS loop's hot path (grid cost tracks the live count, not n).
+    """
+    return get_backend("pallas").divergence_compact(
+        fn, probes, cand_idx, residual=residual, state=state, **block_kw
+    )
+
+
 def feature_gains(fn, state: Array, **block_kw) -> Array:
     """Kernel-backed greedy gains f(v|S) for all v.  Shape (n,)."""
     return get_backend("pallas").gains(fn, state, **block_kw)

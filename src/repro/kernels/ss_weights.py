@@ -118,6 +118,7 @@ def ss_divergence_kernel(
     resid: Array,     # (r,)
     cap: Array | None = None,
     feat_w: Array | None = None,  # (F,) feature weights, None = unweighted
+    cand_idx: Array | None = None,  # (k,) compacted candidate buffer
     *,
     phi: str = "sqrt",
     bn: int = 256,
@@ -125,7 +126,16 @@ def ss_divergence_kernel(
     probe_chunk: int = 8,
     interpret: bool = False,
 ) -> Array:
-    """Padded + tiled pallas_call wrapper.  Returns (n,) divergences."""
+    """Padded + tiled pallas_call wrapper.  Returns (n,) divergences.
+
+    Compact-candidate path: with ``cand_idx`` (k,) the kernel grid covers only
+    the gathered k candidate rows — dead candidates cost neither HBM reads nor
+    grid cells — and the output is the (k,) compacted divergence buffer.
+    Per-candidate arithmetic (feature blocking, accumulation order) is
+    identical to the full grid, so compacted and full outputs match bitwise.
+    """
+    if cand_idx is not None:
+        W = jnp.take(W, cand_idx, axis=0)
     n, F = W.shape
     r = CU.shape[0]
     f32 = jnp.float32

@@ -1,0 +1,321 @@
+"""Shrink-aware SS execution: the bucket schedule, the compacted divergence
+dispatch (`divergence_compact` through every backend), and compacted-vs-
+uncompacted SSResult parity on oracle / pallas / sharded.
+
+The contract under test (docs/backends.md "Live-set compaction"): compaction
+is a pure execution-strategy change — under the same PRNG key the compacted
+loop must produce the *identical* retained set (``vprime``) and certificate
+(``eps_hat``) as the full-width loop, on every backend, including ground-set
+sizes that are not multiples of the kernel tile.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacilityLocation,
+    FeatureCoverage,
+    PallasBackend,
+    bucket_schedule,
+    divergence,
+    divergence_compact,
+    get_backend,
+    predicted_live_counts,
+    probe_count,
+    ss_sparsify,
+)
+from repro.core.sparsify import max_rounds
+
+
+def make_fc(seed=0, n=300, F=48, phi="sqrt", feat_w=False):
+    key = jax.random.PRNGKey(seed)
+    W = jax.random.uniform(key, (n, F))
+    fw = jnp.linspace(0.5, 1.5, F) if feat_w else None
+    return FeatureCoverage(W=W, feat_w=fw, phi=phi)
+
+
+def make_fl(seed=0, n=300, d=12):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return FacilityLocation.from_features(X, kernel="cosine")
+
+
+# ------------------------------------------------------- bucket schedule ----
+def test_bucket_schedule_shape_properties():
+    for n in (128, 300, 2048, 65536):
+        buckets = bucket_schedule(n, c=8.0, tile=128)
+        assert buckets[0] == n                       # full width first
+        assert list(buckets) == sorted(set(buckets), reverse=True)
+        for b in buckets:
+            assert b == n or b % 128 == 0            # tile-aligned (or full)
+            assert 0 < b <= n
+
+
+def test_bucket_schedule_tracks_geometric_shrink():
+    import math
+
+    n, c = 65536, 8.0
+    buckets = bucket_schedule(n, c=c, tile=128)
+    # every geometric live width ceil(n / c^{j/2}) has a bucket that fits it
+    # with at most one tile of slack (the round-up) — the schedule never
+    # forces a round onto a grossly oversized grid
+    j = 0
+    while True:
+        raw = math.ceil(n / (math.sqrt(c) ** j))
+        fit = min(b for b in buckets if b >= raw)
+        assert fit <= min(n, ((raw + 127) // 128) * 128)
+        if raw <= 128:
+            break
+        j += 1
+
+
+def test_bucket_schedule_rejects_degenerate_params():
+    """c <= 1 means no shrink (the schedule would never terminate) and a
+    non-positive tile can't align a grid — both must fail loudly."""
+    with pytest.raises(ValueError):
+        bucket_schedule(1024, c=1.0)
+    with pytest.raises(ValueError):
+        bucket_schedule(1024, c=0.5)
+    with pytest.raises(ValueError):
+        bucket_schedule(1024, c=8.0, tile=0)
+
+
+def test_alive_trace_matches_predicted_live_counts():
+    """The bucket schedule is sized from the same deterministic shrink
+    recurrence the loop executes — alive_trace must match it exactly."""
+    for n, r, c in ((2048, 8, 8.0), (1024, 6, 8.0), (512, 8, 4.0)):
+        fn = make_fc(1, n=n, F=16)
+        ss = ss_sparsify(fn, jax.random.PRNGKey(0), r=r, c=c)
+        trace = [int(t) for t in np.asarray(ss.alive_trace) if t >= 0]
+        assert trace == predicted_live_counts(n, r, c)
+
+
+def test_bucket_schedule_covers_every_round_width():
+    """Round j's compact buffer holds live_{j-1} - m candidates; the chosen
+    bucket (smallest >= count) must always exist."""
+    n, r, c = 4096, 8, 8.0
+    buckets = bucket_schedule(n, c=c)
+    m = min(probe_count(n, r), n)
+    counts = [n] + predicted_live_counts(n, r, c)
+    for prev in counts[:-1]:
+        width = prev - m                      # live set at divergence time
+        assert any(b >= width for b in buckets)
+
+
+# ------------------------------------------- divergence_compact dispatch ----
+@pytest.mark.parametrize("mk", [make_fc, make_fl])
+@pytest.mark.parametrize("backend", ["oracle", "pallas"])
+def test_divergence_compact_matches_full_gather(mk, backend):
+    fn = mk()
+    be = (PallasBackend(interpret=True) if backend == "pallas"
+          else get_backend("oracle"))
+    probes = jnp.asarray([3, 50, 111, 166])
+    residual = fn.residual_gains()
+    cand_idx = jnp.asarray([0, 7, 64, 65, 128, 200, 299])
+    full = divergence(fn, probes, residual=residual)
+    out = be.divergence_compact(fn, probes, cand_idx, residual=residual)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(full)[np.asarray(cand_idx)],
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_divergence_compact_state_and_probe_mask():
+    fn = make_fc(2)
+    state = fn.add_many(fn.empty_state(), jnp.arange(fn.n) < 7)
+    probes = jnp.asarray([20, 90, 150])
+    mask = jnp.asarray([True, False, True])
+    cand_idx = jnp.asarray([1, 33, 77, 240])
+    residual = fn.residual_gains()
+    ref = divergence(fn, probes, probe_mask=mask, residual=residual,
+                     state=state)
+    for be in (get_backend("oracle"), PallasBackend(interpret=True)):
+        out = be.divergence_compact(
+            fn, probes, cand_idx, probe_mask=mask, residual=residual,
+            state=state,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref)[np.asarray(cand_idx)],
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_pairwise_gains_compact_default_is_gather():
+    """The base-class fallback (full-width compute + gather) keeps
+    out-of-tree objectives correct on the compacted path, and the shipped
+    overrides agree with it."""
+    from repro.core.functions import SubmodularFunction
+
+    fn = make_fc(3, n=120, F=16)
+    probes = jnp.asarray([5, 60])
+    cand_idx = jnp.asarray([2, 50, 119])
+    ref = fn.pairwise_gains(probes)[:, np.asarray(cand_idx)]
+    out = SubmodularFunction.pairwise_gains_compact(fn, probes, cand_idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+    np.testing.assert_allclose(
+        np.asarray(fn.pairwise_gains_compact(probes, cand_idx)),
+        np.asarray(ref), rtol=1e-5, atol=1e-5,
+    )
+
+
+# ------------------------------------------- compact vs full loop parity ----
+OBJECTIVES = {
+    "fc": lambda n: make_fc(0, n=n, F=32),
+    "fc_featw": lambda n: make_fc(1, n=n, F=32, feat_w=True),
+    "fc_satcov": lambda n: FeatureCoverage(
+        W=jax.random.uniform(jax.random.PRNGKey(2), (n, 32)),
+        phi="satcov", alpha=0.3),
+    "fl": lambda n: make_fl(3, n=n),
+}
+
+
+@pytest.mark.parametrize("name", sorted(OBJECTIVES))
+@pytest.mark.parametrize("backend", ["oracle", "pallas", "sharded"])
+def test_compact_and_full_vprime_identical(name, backend):
+    """Acceptance: compacted and uncompacted SS produce identical vprime
+    masks (and eps_hat) under the same PRNG key on all three backends."""
+    fn = OBJECTIVES[name](256)
+    be = (PallasBackend(interpret=True) if backend == "pallas" else backend)
+    key = jax.random.PRNGKey(7)
+    ss_c = ss_sparsify(fn, key, r=6, c=8.0, backend=be, compact=True)
+    ss_u = ss_sparsify(fn, key, r=6, c=8.0, backend=be, compact=False)
+    assert bool(jnp.all(ss_c.vprime == ss_u.vprime))
+    assert int(ss_c.rounds) == int(ss_u.rounds)
+    np.testing.assert_allclose(
+        float(ss_c.eps_hat), float(ss_u.eps_hat), rtol=1e-6
+    )
+    assert 0 < int(jnp.sum(ss_c.vprime)) < fn.n
+
+
+@pytest.mark.parametrize("n", [200, 300, 333])
+@pytest.mark.parametrize("backend", ["oracle", "pallas"])
+def test_compact_parity_non_tile_multiple_sizes(n, backend):
+    """Ground sets that are not multiples of the 128 tile: the first bucket
+    is clamped to n, later ones are tile-rounded — parity must still be
+    exact."""
+    fn = make_fc(5, n=n, F=24)
+    assert bucket_schedule(n)[0] == n
+    be = (PallasBackend(interpret=True) if backend == "pallas" else backend)
+    key = jax.random.PRNGKey(9)
+    ss_c = ss_sparsify(fn, key, r=6, c=8.0, backend=be, compact=True)
+    ss_u = ss_sparsify(fn, key, r=6, c=8.0, backend=be, compact=False)
+    assert bool(jnp.all(ss_c.vprime == ss_u.vprime))
+
+
+def test_compact_importance_and_conditional_state():
+    """The compacted loop composes with §3.4 importance sampling and
+    conditional SS (state != empty)."""
+    fn = make_fc(6, n=256, F=32)
+    key = jax.random.PRNGKey(3)
+    for kw in (dict(importance=True),
+               dict(state=fn.add_many(fn.empty_state(),
+                                      jnp.arange(fn.n) < 5))):
+        ss_c = ss_sparsify(fn, key, r=6, c=8.0, compact=True, **kw)
+        ss_u = ss_sparsify(fn, key, r=6, c=8.0, compact=False, **kw)
+        assert bool(jnp.all(ss_c.vprime == ss_u.vprime))
+
+
+def test_compact_respects_initial_alive():
+    fn = make_fc(8, n=256, F=16)
+    alive = jnp.arange(256) < 100
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0), alive=alive, compact=True)
+    assert not bool(jnp.any(ss.vprime[100:]))
+
+
+# --------------------------------------------------- compact kernel path ----
+def test_kernel_cand_idx_paths_match_full():
+    """The three kernel families' compact-candidate grids equal the gathered
+    full grid (interpret mode)."""
+    from repro.kernels.feature_gains import feature_gains_kernel
+    from repro.kernels.fl_divergence import fl_divergence_kernel
+    from repro.kernels.ss_weights import ss_divergence_kernel
+
+    key = jax.random.PRNGKey(0)
+    n, F, r, k = 384, 64, 12, 150          # k deliberately not tile-aligned
+    cand_idx = jax.random.permutation(jax.random.fold_in(key, 1), n)[:k]
+
+    W = jax.random.uniform(key, (n, F))
+    CU = jax.random.uniform(jax.random.fold_in(key, 2), (r, F))
+    phi_cu = jnp.sum(jnp.sqrt(CU), axis=-1)
+    resid = jax.random.uniform(jax.random.fold_in(key, 3), (r,))
+    full = ss_divergence_kernel(W, CU, phi_cu, resid, interpret=True)
+    out = ss_divergence_kernel(W, CU, phi_cu, resid, None, None, cand_idx,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(full)[np.asarray(cand_idx)])
+
+    sim = jnp.maximum(jax.random.normal(jax.random.fold_in(key, 4), (n, n)),
+                      0.0)
+    MU = jnp.maximum(sim[:, :r].T, 0.0)
+    fl_full = fl_divergence_kernel(sim, MU, resid, interpret=True)
+    fl_out = fl_divergence_kernel(sim, MU, resid, cand_idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(fl_out),
+                               np.asarray(fl_full)[np.asarray(cand_idx)])
+
+    c = jax.random.uniform(jax.random.fold_in(key, 5), (F,))
+    phic = jnp.sum(jnp.sqrt(c))
+    fg_full = feature_gains_kernel(W, c, phic, interpret=True)
+    fg_out = feature_gains_kernel(W, c, phic, None, None, cand_idx,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(fg_out),
+                               np.asarray(fg_full)[np.asarray(cand_idx)])
+
+
+# ------------------------------------------------- postreduce static bound --
+def test_postreduce_static_bound_fits_vprime():
+    """The O(log^2 n) slot bound (m * (max_rounds + 1)) always covers |V'|,
+    so the default postreduce needs no host sync."""
+    from repro.core.sparsify import postreduce
+
+    for n, r, c in ((300, 8, 8.0), (1024, 6, 8.0)):
+        fn = make_fc(10, n=n, F=24)
+        ss = ss_sparsify(fn, jax.random.PRNGKey(0), r=r, c=c)
+        m = min(probe_count(n, r), n)
+        bound = m * (max_rounds(n, r, c) + 1)
+        assert int(jnp.sum(ss.vprime)) <= bound
+        new_vp = postreduce(fn, ss, float(ss.eps_hat) + 1e-3,
+                            jax.random.PRNGKey(1), r=r, c=c)
+        assert bool(jnp.all(~new_vp | ss.vprime))
+        assert 0 < int(jnp.sum(new_vp)) <= int(jnp.sum(ss.vprime))
+
+
+def test_postreduce_raises_on_truncating_derived_bound():
+    """When the derived default slot bound (sized from postreduce's r/c, not
+    the SS run's) is smaller than |V'|, jnp.where would silently drop V'
+    members — the default path must fail loudly instead.  An explicit int
+    bound stays trusted/unchecked (the documented no-sync contract)."""
+    from repro.core.sparsify import SSResult, postreduce
+
+    n = 32768
+    fn = make_fc(12, n=n, F=4)
+    m = min(probe_count(n, 8), n)
+    bound = m * (max_rounds(n, 8, 8.0) + 1)
+    assert bound < n
+    # An SSResult whose V' exceeds the default-r/c bound (as a run with much
+    # larger r would produce).
+    big = SSResult(
+        vprime=jnp.arange(n) < bound + 7,
+        divergence=jnp.zeros((n,)),
+        eps_hat=jnp.float32(0.0),
+        rounds=jnp.int32(1),
+        alive_trace=jnp.full((1,), -1, jnp.int32),
+    )
+    with pytest.raises(ValueError, match="slot bound"):
+        postreduce(fn, big, 0.1, jax.random.PRNGKey(1))
+
+
+def test_postreduce_exact_optin_matches_default():
+    from repro.core.sparsify import postreduce
+
+    fn = make_fc(11, n=200, F=24)
+    ss = ss_sparsify(fn, jax.random.PRNGKey(0), r=6, c=8.0)
+    eps = float(ss.eps_hat) + 1e-3
+    vp_static = postreduce(fn, ss, eps, jax.random.PRNGKey(2), r=6, c=8.0)
+    vp_exact = postreduce(fn, ss, eps, jax.random.PRNGKey(2),
+                          max_members="exact")
+    # both paths must return valid nonempty subsets of V' (the slot counts
+    # differ, so the randomized reductions need not pick identical members)
+    assert bool(jnp.all(~vp_static | ss.vprime))
+    assert bool(jnp.all(~vp_exact | ss.vprime))
+    assert int(jnp.sum(vp_static)) > 0 and int(jnp.sum(vp_exact)) > 0
