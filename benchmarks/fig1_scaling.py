@@ -5,13 +5,16 @@ lazy greedy, sieve-streaming, and SS(+greedy).  Synthetic NYT-like corpus.
 unified dispatch layer (repro.core.backend): "oracle" (default), "pallas",
 or "sharded".
 
-CLI: ``python -m benchmarks.fig1_scaling --json PATH`` emits one row per
-(n, backend) with a stable ``bench_key`` and a *warm* SS wall time
+CLI: ``python -m benchmarks.fig1_scaling --json PATH`` emits, per
+(n, backend), a ``fig1/...`` row with a *warm* SS(+greedy) wall time
 (``wall_s`` — best of ``--repeat`` runs, so jit tracing is amortized out of
-the gated metric).  ``--baseline PATH`` gates the fresh rows against a
-committed JSON (``BENCH_e2e.json`` at the repo root is the CI baseline,
-sharing the regression logic of ``benchmarks.kernel_bench``) and exits
-nonzero on a wall-time regression.
+the gated metric) plus ``greedy/...`` and ``stochastic_greedy/...`` rows
+whose ``wall_s`` is the *post-SS selection stage alone* (the compact
+selection engine's gated metric — each row also records which path the
+engine took).  ``--baseline PATH`` gates every fresh row against a committed
+JSON (``BENCH_e2e.json`` at the repo root is the CI baseline, sharing the
+regression logic of ``benchmarks.kernel_bench``) and exits nonzero on a
+wall-time regression.
 """
 
 from __future__ import annotations
@@ -24,7 +27,14 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import save, timed
-from repro.core import FeatureCoverage, greedy, lazy_greedy, sieve_streaming
+from repro.core import (
+    FeatureCoverage,
+    greedy,
+    lazy_greedy,
+    selection_bucket,
+    sieve_streaming,
+    stochastic_greedy,
+)
 from repro.core.sparsify import ss_sparsify
 from repro.data import news_day
 
@@ -40,7 +50,7 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
         W = jnp.asarray(news_day(seed + n, n, n_features))
         fn = FeatureCoverage(W=W, phi="sqrt")
 
-        res_g, t_g = timed(lambda: jax.block_until_ready(
+        res_g, t_full_g = timed(lambda: jax.block_until_ready(
             greedy(fn, K, backend=backend)))
         _, t_lazy = timed(lambda: lazy_greedy(fn, K))
 
@@ -54,6 +64,19 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
             lambda: jax.block_until_ready(sieve_streaming(fn, K))
         )
 
+        # Post-SS selection stage alone — the compact selection engine's
+        # gated metric (SS already shrank the live set to |V'| ≪ n; per-step
+        # selection cost must track |V'|, not n).
+        live = int(jnp.sum(ss.vprime))
+        bucket = selection_bucket(n, live)
+        path = "full" if bucket is None else f"compact-{bucket}"
+        _, t_sel = timed(lambda: jax.block_until_ready(
+            greedy(fn, K, alive=ss.vprime, backend=backend)), repeat=repeat)
+        sg_key = jax.random.fold_in(key, 1)
+        _, t_sg = timed(lambda: jax.block_until_ready(
+            stochastic_greedy(fn, K, sg_key, alive=ss.vprime,
+                              backend=backend)), repeat=repeat)
+
         fg = float(res_g.value)
         rows.append({
             "n": int(n),
@@ -63,16 +86,30 @@ def run(sizes=(512, 1024, 2048, 4096, 8192), n_features=512, seed=0,
             "f_greedy": fg,
             "rel_ss": float(res_ss.value) / fg,
             "rel_sieve": float(res_sv.value) / fg,
-            "vprime": int(jnp.sum(ss.vprime)),
-            "t_greedy_s": t_g,
+            "vprime": live,
+            "selection_path": path,
+            "t_greedy_s": t_sel,
+            "t_sgreedy_s": t_sg,
+            "t_full_greedy_s": t_full_g,
             "t_lazy_s": t_lazy,
             "t_ss_s": t_ss,
             "t_sieve_s": t_sv,
         })
-        print(f"fig1 n={n:6d} rel_ss={rows[-1]['rel_ss']:.4f} "
-              f"rel_sieve={rows[-1]['rel_sieve']:.4f} |V'|={rows[-1]['vprime']:5d} "
-              f"t(greedy/lazy/ss/sieve)="
-              f"{t_g:.2f}/{t_lazy:.2f}/{t_ss:.2f}/{t_sv:.2f}s", flush=True)
+        rows.append({
+            "n": int(n), "backend": backend,
+            "bench_key": f"greedy/{backend}-n{n}", "wall_s": t_sel,
+            "vprime": live, "selection_path": path,
+        })
+        rows.append({
+            "n": int(n), "backend": backend,
+            "bench_key": f"stochastic_greedy/{backend}-n{n}", "wall_s": t_sg,
+            "vprime": live, "selection_path": path,
+        })
+        print(f"fig1 n={n:6d} rel_ss={rows[-3]['rel_ss']:.4f} "
+              f"rel_sieve={rows[-3]['rel_sieve']:.4f} |V'|={live:5d} "
+              f"sel={path} t(greedy/lazy/ss/sel/sg/sieve)="
+              f"{t_full_g:.2f}/{t_lazy:.2f}/{t_ss:.2f}/{t_sel:.2f}/"
+              f"{t_sg:.2f}/{t_sv:.2f}s", flush=True)
     save("fig1_scaling", rows)
     return {"rows": rows}
 

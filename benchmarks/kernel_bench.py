@@ -173,13 +173,15 @@ def run_fl(seed: int = 0, smoke: bool = False) -> dict:
 
 
 def run_compact(seed: int = 0, smoke: bool = False) -> dict:
-    """Shrink-aware compacted divergence: wall time must track the live count
-    (the bucket size), not the ground-set size n.
+    """Shrink-aware compacted divergence + compact selection gains: wall time
+    must track the live count (the bucket size), not the ground-set size n.
 
     For every bucket of the SS shrink schedule, gathers a live set of that
     size and times the compact-candidate kernel path through the backend
-    dispatch (``divergence_compact``), asserting elementwise parity against
-    the full-n kernel output.  The ``*-full`` row is the same-process full-n
+    dispatch (``divergence_compact`` for the SS round, ``gains_compact`` for
+    the per-step cost of the compact selection engine — greedy and
+    stochastic greedy share that primitive), asserting elementwise parity
+    against the full-n output.  The ``*-full`` row is the same-process full-n
     reference the compacted ratios are taken against; at c = 8 the round-2+
     buckets (live <= n/sqrt(c)) are the acceptance shapes."""
     key = jax.random.PRNGKey(seed)
@@ -219,6 +221,40 @@ def run_compact(seed: int = 0, smoke: bool = False) -> dict:
                   f"err={err:.2e} {t_c*1e3:.1f}ms vs full {t_full*1e3:.1f}ms "
                   f"= {t_c / t_full:.2f}x", flush=True)
 
+    def bench_gains(fam: str, fn, extra: dict):
+        """Per-step selection cost: ``gains_compact`` vs full ``gains``
+        through the backend dispatch — the exact call greedy/stochastic
+        greedy issue every step on the compact path."""
+        n = fn.n
+        state = fn.add_many(fn.empty_state(), jnp.arange(n) < 8)
+        full, t_full = timed(lambda: jax.block_until_ready(
+            be.gains(fn, state)), repeat=3)
+        shape_tag = "-".join(f"{k}{v}" for k, v in extra.items())
+        rows.append({
+            "kernel": "gains_compact", "objective": fam, **extra, "k": n,
+            "bench_key": f"gains_compact/{fam}-{shape_tag}-full",
+            "wall_s": t_full, "ratio_vs_full": 1.0,
+        })
+        perm = jax.random.permutation(jax.random.fold_in(key, 17), n)
+        for j, size in enumerate(bucket_schedule(n, 8.0)):
+            if size >= n:
+                continue
+            cand_idx = jnp.sort(perm[:size])
+            out, t_c = timed(lambda: jax.block_until_ready(
+                be.gains_compact(fn, state, cand_idx)), repeat=3)
+            err = float(jnp.max(jnp.abs(out - full[cand_idx])))
+            assert err < 1e-3, f"{fam} gains compact/full mismatch (k={size}): {err}"
+            rows.append({
+                "kernel": "gains_compact", "objective": fam, **extra,
+                "k": int(size),
+                "bench_key": f"gains_compact/{fam}-{shape_tag}-k{size}",
+                "wall_s": t_c, "max_err": err, "round_geq": j,
+                "t_full_s": t_full, "ratio_vs_full": t_c / t_full,
+            })
+            print(f"kernel gains_compact [{fam}] {shape_tag} k={size} "
+                  f"err={err:.2e} {t_c*1e3:.1f}ms vs full {t_full*1e3:.1f}ms "
+                  f"= {t_c / t_full:.2f}x", flush=True)
+
     for (n, F, r) in (SS_SHAPES_SMOKE if smoke else SS_SHAPES):
         W = jax.random.uniform(key, (n, F))
         bench_objective("ss_divergence", FeatureCoverage(W=W, phi="sqrt"), r,
@@ -228,6 +264,14 @@ def run_compact(seed: int = 0, smoke: bool = False) -> dict:
         bench_objective("fl_divergence",
                         FacilityLocation.from_features(X, kernel="cosine"), r,
                         {"n": n, "r": r})
+
+    for (n, F) in (FG_SHAPES_SMOKE if smoke else FG_SHAPES):
+        W = jax.random.uniform(jax.random.fold_in(key, 19), (n, F))
+        bench_gains("fc", FeatureCoverage(W=W, phi="sqrt"), {"n": n, "F": F})
+    for (n, _) in (FL_SHAPES_SMOKE if smoke else FL_SHAPES):
+        X = jax.random.normal(jax.random.fold_in(key, 23), (n, 16))
+        bench_gains("fl", FacilityLocation.from_features(X, kernel="cosine"),
+                    {"n": n})
 
     # feature_gains compact-grid path (greedy's inner loop over a live subset)
     for (n, F) in (FG_SHAPES_SMOKE if smoke else FG_SHAPES[:1]):

@@ -15,7 +15,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
-from repro.core import FeatureCoverage, greedy, sieve_streaming
+from repro.core import FeatureCoverage, greedy, selection_bucket, sieve_streaming
 from repro.core.sparsify import ss_sparsify, summarize
 from repro.data import news_day
 
@@ -31,12 +31,16 @@ full = greedy(fn, K, backend=BACKEND)
 print(f"greedy on V:        f(S) = {float(full.value):.4f}")
 
 # --- the paper: SS (c=8, r=8) then greedy on V' -----------------------------
+# greedy auto-compacts: V' is sparse, so the per-step gains/argmax run over a
+# static |V'|-sized bucket instead of all n (repro.core.greedy).
 key = jax.random.PRNGKey(0)
 ss = ss_sparsify(fn, key, r=8, c=8.0, backend=BACKEND)
 reduced = greedy(fn, K, alive=ss.vprime, backend=BACKEND)
 nv = int(jnp.sum(ss.vprime))
+bucket = selection_bucket(N, nv)
+sel_path = "full-width" if bucket is None else f"compact bucket={bucket}"
 print(f"SS -> |V'| = {nv} ({100 * nv / N:.1f}% of V, "
-      f"{int(ss.rounds)} rounds, backend={BACKEND})")
+      f"{int(ss.rounds)} rounds, backend={BACKEND}, selection={sel_path})")
 print(f"greedy on V':       f(S) = {float(reduced.value):.4f}  "
       f"(relative = {float(reduced.value / full.value):.4f})")
 print(f"certificate eps^ = {float(ss.eps_hat):.4f}  "

@@ -27,9 +27,11 @@ from repro.core.graph import (
 )
 from repro.core.greedy import (
     GreedyResult,
+    auto_sample_size,
     bidirectional_greedy,
     greedy,
     lazy_greedy,
+    selection_bucket,
     stochastic_greedy,
 )
 from repro.core.sieve import SieveResult, sieve_streaming
@@ -61,9 +63,11 @@ __all__ = [
     "edge_weights_compact",
     "full_edge_matrix",
     "GreedyResult",
+    "auto_sample_size",
     "bidirectional_greedy",
     "greedy",
     "lazy_greedy",
+    "selection_bucket",
     "stochastic_greedy",
     "SieveResult",
     "sieve_streaming",

@@ -1,9 +1,11 @@
 """Execution backends for the submodular-maximization hot paths.
 
-Every algorithm in :mod:`repro.core` evaluates the same three primitives —
-``gains`` (greedy's inner loop), ``pairwise_gains`` and ``divergence`` (the SS
-round, paper Def. 2) — but *how* those are executed depends on where the code
-runs.  This module is the single dispatch point:
+Every algorithm in :mod:`repro.core` evaluates the same few primitives —
+``gains`` / ``gains_compact`` (greedy's inner loop, full-width and restricted
+to a compacted candidate buffer), ``pairwise_gains`` and ``divergence`` /
+``divergence_compact`` (the SS round, paper Def. 2) — but *how* those are
+executed depends on where the code runs.  This module is the single dispatch
+point:
 
 - ``oracle``  — plain jnp (XLA) on whatever the default device is.  The
   reference semantics; always available.
@@ -72,6 +74,19 @@ class Backend(abc.ABC):
         """f(v|S) for all v.  Shape (n,)."""
         return fn.gains(state)
 
+    def gains_compact(
+        self, fn: SubmodularFunction, state, cand_idx: Array, **kw
+    ) -> Array:
+        """f(v|S) for the compacted candidate buffer ``cand_idx`` (k,).
+
+        Returns (k,) gains, elementwise equal to ``gains(...)[cand_idx]``.
+        The compact selection engine (repro.core.greedy) calls this once per
+        greedy step with a bucket-sized static buffer of post-SS survivors so
+        per-step cost tracks |V'| instead of n.  The base implementation
+        routes through the objective's ``gains_compact`` (whose default is a
+        full-width gather — the always-correct oracle fallback)."""
+        return fn.gains_compact(state, cand_idx)
+
     def pairwise_gains(
         self, fn: SubmodularFunction, probes: Array, state=None, **kw
     ) -> Array:
@@ -124,6 +139,18 @@ class Backend(abc.ABC):
 
         return _sparsify_dense(fn, key, backend=self, **kw)
 
+    def stochastic_greedy(self, fn: SubmodularFunction, k: int, key: Array, **kw):
+        """Run stochastic greedy [Mirzasoleiman et al.] under this backend.
+
+        The default runs the dense single-process loop (compact candidate
+        buffer when ``alive`` is sparse) with this backend's ``gains`` /
+        ``gains_compact``; the sharded backend overrides the whole loop with
+        the distributed sampler.  Returns a GreedyResult.
+        """
+        from repro.core.greedy import _stochastic_greedy_dense
+
+        return _stochastic_greedy_dense(fn, k, key, backend=self, **kw)
+
 
 @dataclasses.dataclass(frozen=True)
 class OracleBackend(Backend):
@@ -155,6 +182,14 @@ class PallasBackend(Backend):
     def gains(self, fn: SubmodularFunction, state, **kw) -> Array:
         out = fn.pallas_gains(state, interpret=self._interpret(), **kw)
         return fn.gains(state) if out is None else out
+
+    def gains_compact(
+        self, fn: SubmodularFunction, state, cand_idx: Array, **kw
+    ) -> Array:
+        out = fn.pallas_gains(
+            state, interpret=self._interpret(), cand_idx=cand_idx, **kw
+        )
+        return fn.gains_compact(state, cand_idx) if out is None else out
 
     def divergence(
         self,
@@ -242,6 +277,18 @@ class ShardedBackend(Backend):
             fn, key, self._mesh(),
             data_axis=self.data_axis, pod_axis=self.pod_axis,
             bins=self.bins, **kw,
+        )
+
+    def stochastic_greedy(self, fn: SubmodularFunction, k: int, key: Array, **kw):
+        from repro.core import distributed
+
+        if self.pod_axis:
+            raise NotImplementedError(
+                "sharded stochastic greedy is single-level (the selection "
+                "stage is global); use a data-axis-only ShardedBackend"
+            )
+        return distributed.stochastic_greedy_sharded(
+            fn, k, key, self._mesh(), data_axis=self.data_axis, **kw
         )
 
 

@@ -45,11 +45,17 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.functions import NEG, FeatureCoverage, SubmodularFunction
-from repro.core.greedy import greedy
+from repro.core.greedy import (
+    GreedyResult,
+    auto_sample_size,
+    greedy,
+    selection_bucket,
+)
 from repro.core.sparsify import SSResult, bucket_schedule, max_rounds, probe_count
 
 Array = jax.Array
@@ -287,6 +293,172 @@ def ss_sparsify_sharded(
     else:
         trace_out = trace
     return SSResult(vprime, div, eps_hat, rounds_out, trace_out)
+
+
+def stochastic_greedy_sharded(
+    fn,                        # SubmodularFunction or legacy (n, F) array
+    k: int,
+    key: Array,
+    mesh: Mesh,
+    *,
+    s: int | None = None,
+    alive: Array | None = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+    data_axis: str = "data",
+    c: float = 8.0,
+    eps: float = 0.1,
+    phi: str = "sqrt",
+) -> GreedyResult:
+    """Distributed stochastic greedy [Mirzasoleiman et al.] over the mesh —
+    the selection-stage counterpart of :func:`ss_sparsify_sharded`.
+
+    The sampler works in the same *frame* the dense path
+    (:mod:`repro.core.greedy`) would pick for the same inputs, so the two are
+    selection-for-selection identical under the same key in every case: when
+    the live count fits a sub-n bucket (and ``compact`` is not False), the
+    compact frame — candidates addressed by their rank among the
+    initially-alive set, gathered once per shard into a static bucket-sized
+    local buffer; otherwise the ground frame — candidates addressed by ground
+    index, matching the dense full-width loop.  Each step:
+
+    1. every shard draws the **identical** (B,)-sized Gumbel vector (the key
+       is replicated and never folded with the shard id — this is what makes
+       the sharded sampler selection-for-selection identical to the dense
+       path under the same key) and computes the replicated top-s sample
+       mask;
+    2. each shard evaluates gains for its own sampled candidates only, via
+       ``shard_take`` + ``shard_gains`` on the replicated summary state —
+       compact per-shard work, embarrassingly parallel;
+    3. the winner is a psum'd argmax: ``pmax`` of per-shard best gains, ties
+       broken to the lowest compact position via ``pmin`` (matching the dense
+       argmax tie order), and the replicated state advances by a one-hot
+       ``psum`` of the winning shard's ``shard_add``.
+
+    ``alive`` must be a *concrete* mask (the live count sizes the static
+    buffers).  ``s=None`` derives the sample size from the live count.
+    Requires the objective's ``supports_shard_greedy`` hooks.
+    """
+    fn = _as_objective(fn, phi)
+    if not fn.supports_shard_greedy:
+        raise NotImplementedError(
+            f"{type(fn).__name__} does not implement the sharded selection "
+            "hooks (shard_gains / shard_add)"
+        )
+    n = fn.n
+    ndata = mesh.shape[data_axis]
+    assert n % ndata == 0, f"n={n} must divide {ndata} shards (pad rows)"
+    n_loc = n // ndata
+
+    alive0 = jnp.ones((n,), bool) if alive is None else jnp.asarray(alive)
+    alive_host = np.asarray(alive0)
+    live = int(alive_host.sum())
+    # Frame selection mirrors the dense plan exactly: compact frame iff the
+    # dense path would compact (alive is concrete here, so an int ``compact``
+    # bound reduces to the auto decision).
+    bucket = None if compact is False else selection_bucket(n, live, c)
+    compact_frame = bucket is not None
+    B = bucket if compact_frame else n
+    if compact_frame:
+        # Static per-shard buffer: smallest fine-grained bucket holding every
+        # shard's local live count (jnp gains need no tile alignment — tile=8
+        # matches the sharded SS loop's compaction).
+        loc_max = int(alive_host.reshape(ndata, n_loc).sum(axis=1).max())
+        loc_fits = [
+            b for b in bucket_schedule(n_loc, c, tile=8) if b >= loc_max
+        ]
+        loc_size = min(loc_fits) if loc_fits else n_loc
+    else:
+        loc_size = n_loc
+    if s is None:
+        s = auto_sample_size(n, k, eps, live=live)
+    s = max(1, int(min(s, B)))
+    state0 = fn.empty_state() if state is None else state
+
+    arrays, specs, rebuild = fn.shard_pack((data_axis,))
+    arrays = tuple(
+        jax.device_put(a, NamedSharding(mesh, sp)) for a, sp in zip(arrays, specs)
+    )
+    mask_spec = P(data_axis)
+    alive0 = jax.device_put(alive0, NamedSharding(mesh, mask_spec))
+    BIG = jnp.int32(2**30)
+
+    def kernel(alive_loc: Array, st0, *arrs):
+        fn_loc = rebuild(*arrs)
+        didx = jax.lax.axis_index(data_axis)
+        if compact_frame:
+            cnt = jnp.sum(alive_loc)
+            counts = jax.lax.all_gather(cnt, data_axis)          # (S,)
+            offset = jnp.sum(jnp.where(jnp.arange(ndata) < didx, counts, 0))
+            # Local candidates and their global compact-frame positions:
+            # shards own contiguous ground ranges, so ascending (shard, slot)
+            # order is ascending ground order — position = alive-rank =
+            # offset + slot.
+            lidx = jnp.where(alive_loc, size=loc_size, fill_value=0)[0]
+            lvalid = jnp.arange(loc_size) < cnt
+            pos = (offset + jnp.arange(loc_size)).astype(jnp.int32)
+            view = fn_loc.shard_take(lidx)
+            avail0 = jnp.arange(B) < jax.lax.psum(cnt, data_axis)
+        else:
+            # Ground frame (the dense full-width loop's addressing): every
+            # local slot is a candidate; dead slots are masked by the
+            # replicated availability mask, exactly like the dense path.
+            lidx = jnp.arange(loc_size)
+            lvalid = jnp.ones((loc_size,), bool)
+            pos = (didx * n_loc + jnp.arange(loc_size)).astype(jnp.int32)
+            view = fn_loc
+            avail0 = jax.lax.all_gather(alive_loc, data_axis).reshape(-1)
+        pos_c = jnp.minimum(pos, B - 1)                          # safe gather
+        ctx = fn_loc.shard_init(data_axis)
+
+        def step(carry, key_i):
+            st, avail = carry
+            # (1) replicated Gumbel top-s over the compact frame.
+            gumb = jax.random.gumbel(key_i, (B,)) + jnp.where(avail, 0.0, NEG)
+            cand = jax.lax.top_k(gumb, s)[1]
+            sub = jnp.zeros((B,), bool).at[cand].set(True) & avail
+            # (2) compact per-shard gains on the replicated state.
+            g_loc = view.shard_gains(st, ctx)                    # (loc_size,)
+            sub_loc = sub[pos_c] & lvalid
+            g = jnp.where(sub_loc, g_loc, NEG)
+            i_loc = jnp.argmax(g)
+            gbest = g[i_loc]
+            # (3) psum'd argmax: max gain, ties to the lowest position.
+            gmax = jax.lax.pmax(gbest, data_axis)
+            ok = gmax > NEG * 0.5
+            pos_best = jnp.where(gbest >= gmax, pos[i_loc], BIG)
+            pos_win = jax.lax.pmin(pos_best, data_axis)
+            win = ok & (gbest >= gmax) & (pos[i_loc] == pos_win)
+            ground = didx.astype(jnp.int32) * n_loc + lidx[i_loc]
+            v = jax.lax.psum(jnp.where(win, ground, 0), data_axis)
+            cand_state = fn_loc.shard_add(st, lidx[i_loc], ctx)
+            summed = jax.tree.map(
+                lambda x: jax.lax.psum(
+                    jnp.where(win, x, jnp.zeros_like(x)), data_axis
+                ),
+                cand_state,
+            )
+            new_state = jax.tree.map(
+                lambda sm, old: jnp.where(ok, sm, old), summed, st
+            )
+            avail = avail.at[jnp.where(ok, pos_win, B)].set(False, mode="drop")
+            return (new_state, avail), (
+                v.astype(jnp.int32), jnp.where(ok, gmax, 0.0),
+            )
+
+        (st_f, _), (sel, gains) = jax.lax.scan(
+            step, (st0, avail0), jax.random.split(key, k)
+        )
+        return sel, gains, st_f
+
+    fn_sm = shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(mask_spec, P()) + specs,
+        out_specs=(P(), P(), P()),
+    )
+    sel, gains, st_f = fn_sm(alive0, state0, *arrays)
+    return GreedyResult(sel, gains, fn.value(st_f), st_f)
 
 
 def summarize_sharded(

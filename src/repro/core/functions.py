@@ -144,6 +144,17 @@ class SubmodularFunction(abc.ABC):
         """
         return jnp.take(self.pairwise_gains(probes, state), cand_idx, axis=1)
 
+    def gains_compact(self, state: Any, cand_idx: Array) -> Array:
+        """f(v|S) for v = cand_idx (k,).  Shape (k,).
+
+        The selection-engine analogue of ``pairwise_gains_compact``: greedy's
+        per-step gains restricted to the compacted candidate buffer (ground
+        indices; padding entries may repeat a valid index — callers mask).
+        The base implementation is a full-width compute + gather — always
+        correct; override it so per-step cost scales with k, not n (both
+        shipped objectives do)."""
+        return jnp.take(self.gains(state), cand_idx)
+
     # -- pallas hooks (optional) -------------------------------------------
     # Returning None means "no fused kernel for this configuration"; the
     # pallas backend then falls back to the jnp oracle.  ``interpret`` selects
@@ -170,9 +181,20 @@ class SubmodularFunction(abc.ABC):
         return None
 
     def pallas_gains(
-        self, state: Any, *, interpret: bool, **block_kw
+        self,
+        state: Any,
+        *,
+        interpret: bool,
+        cand_idx: Array | None = None,
+        **block_kw,
     ) -> Array | None:
-        """Fused greedy gains f(v|S) for all v, or None."""
+        """Fused greedy gains f(v|S) for all v, or None.
+
+        With ``cand_idx`` (k,) the output is restricted to the compacted
+        candidate buffer — shape (k,) — and the kernel grid should only
+        cover the gathered candidates.  Returning None for a non-None
+        ``cand_idx`` drops the pallas backend to the oracle
+        ``gains_compact`` path (always correct, never faster)."""
         return None
 
     # -- shard hooks (optional) --------------------------------------------
@@ -189,6 +211,12 @@ class SubmodularFunction(abc.ABC):
     #: :meth:`shard_take` — required for the sharded loop's live-set
     #: compaction (the loop silently runs uncompacted otherwise).
     supports_shard_compact: bool = False
+
+    #: whether the local view supports the sharded *selection* stage
+    #: (:func:`repro.core.distributed.stochastic_greedy_sharded`) — requires
+    #: :meth:`shard_gains` / :meth:`shard_add` over a *replicated* summary
+    #: state, plus :meth:`shard_take`.
+    supports_shard_greedy: bool = False
 
     def shard_pack(
         self, axes: Sequence[str]
@@ -236,6 +264,23 @@ class SubmodularFunction(abc.ABC):
         branches).  Only required when ``supports_shard_compact``."""
         raise NotImplementedError
 
+    def shard_gains(self, state: Any, ctx: Any) -> Array:
+        """f(v|S) for the local candidates, from a *replicated* summary state.
+
+        Must be elementwise identical arithmetic to the dense ``gains`` /
+        ``gains_compact`` (the sharded selection loop asserts same-key
+        selection parity against the dense compact path).  ``ctx`` is the
+        ``shard_init`` context (pod-global quantities such as the satcov
+        cap).  Shape (n_local,).  Only required when
+        ``supports_shard_greedy``."""
+        raise NotImplementedError
+
+    def shard_add(self, state: Any, v: Array, ctx: Any) -> Any:
+        """Replicated state for S + v, ``v`` a *local* candidate index.
+        Must match the dense ``add`` on the corresponding ground index
+        bitwise.  Only required when ``supports_shard_greedy``."""
+        raise NotImplementedError
+
 
 def _row_spec(axes: Sequence[str]) -> P:
     return P(tuple(axes) if len(axes) > 1 else axes[0], None)
@@ -262,6 +307,7 @@ class FeatureCoverage(SubmodularFunction):
 
     supports_pod_sharding = True
     supports_shard_compact = True
+    supports_shard_greedy = True
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
@@ -354,6 +400,17 @@ class FeatureCoverage(SubmodularFunction):
         v_eq_u = probes[:, None] == cand_idx[None, :]
         return jnp.where(v_eq_u, 0.0, out)
 
+    def gains_compact(self, state: Array, cand_idx: Array) -> Array:
+        """Per-step greedy gains over the gathered candidate rows only —
+        per-element identical arithmetic to ``gains`` restricted to
+        ``cand_idx``, so compact and full selection pick identical sets."""
+        cap = self._cap()
+        Wc = jnp.take(self.W, cand_idx, axis=0)                  # (k, F)
+        return self._wsum(
+            _phi(self.phi, state[None, :] + Wc, cap)
+            - _phi(self.phi, state[None, :], cap)
+        )
+
     # -- pallas hooks ------------------------------------------------------
     def pallas_divergence(
         self,
@@ -386,14 +443,19 @@ class FeatureCoverage(SubmodularFunction):
         )
 
     def pallas_gains(
-        self, state: Array, *, interpret: bool, **block_kw
+        self,
+        state: Array,
+        *,
+        interpret: bool,
+        cand_idx: Array | None = None,
+        **block_kw,
     ) -> Array | None:
         from repro.kernels.feature_gains import feature_gains_kernel
 
         cap = self._cap()
         phi_c = self._wsum(_phi(self.phi, state.astype(jnp.float32), cap))
         return feature_gains_kernel(
-            self.W, state, phi_c, cap, self.feat_w,
+            self.W, state, phi_c, cap, self.feat_w, cand_idx,
             phi=self.phi, interpret=interpret, **block_kw,
         )
 
@@ -434,6 +496,18 @@ class FeatureCoverage(SubmodularFunction):
     def shard_take(self, cand_idx: Array) -> "FeatureCoverage":
         return dataclasses.replace(self, W=jnp.take(self.W, cand_idx, axis=0))
 
+    def shard_gains(self, state: Array, ctx) -> Array:
+        # Same expression as the dense gains, with the pod-global satcov cap
+        # from ctx (the local W slice would under-saturate it).
+        _, cap, _ = ctx
+        return self._wsum(
+            _phi(self.phi, state[None, :] + self.W, cap)
+            - _phi(self.phi, state[None, :], cap)
+        )
+
+    def shard_add(self, state: Array, v: Array, ctx) -> Array:
+        return state + self.W[v]
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -451,6 +525,7 @@ class FacilityLocation(SubmodularFunction):
     sim: Array  # (n, n)
 
     supports_shard_compact = True
+    supports_shard_greedy = True
 
     def tree_flatten(self):
         return (self.sim,), ()
@@ -528,6 +603,12 @@ class FacilityLocation(SubmodularFunction):
             jnp.maximum(simc.T[None, :, :] - mu[:, None, :], 0.0), axis=-1
         )
 
+    def gains_compact(self, state: Array, cand_idx: Array) -> Array:
+        """f(v|S) over the gathered candidate columns only (the served-row
+        reduction still spans all n rows — that is f's definition)."""
+        simc = jnp.take(self.sim, cand_idx, axis=1)              # (n, k)
+        return jnp.sum(jnp.maximum(simc - state[:, None], 0.0), axis=0)
+
     # -- pallas hooks ------------------------------------------------------
     def pallas_divergence(
         self,
@@ -554,12 +635,17 @@ class FacilityLocation(SubmodularFunction):
         )
 
     def pallas_gains(
-        self, state: Array, *, interpret: bool, **block_kw
+        self,
+        state: Array,
+        *,
+        interpret: bool,
+        cand_idx: Array | None = None,
+        **block_kw,
     ) -> Array | None:
         from repro.kernels.fl_divergence import fl_gains_kernel
 
         return fl_gains_kernel(
-            self.sim, state, interpret=interpret, **block_kw
+            self.sim, state, cand_idx, interpret=interpret, **block_kw
         )
 
     # -- shard hooks (column-sharded: each device owns a block of candidate
@@ -621,3 +707,12 @@ class FacilityLocation(SubmodularFunction):
         return dataclasses.replace(
             self, sim=jnp.take(self.sim, cand_idx, axis=1)
         )
+
+    def shard_gains(self, state: Array, ctx) -> Array:
+        # The replicated state is the (n,) served-row coverage; the local sim
+        # slice holds this shard's candidate columns over all served rows, so
+        # this is exactly the dense gains reduction on the local columns.
+        return jnp.sum(jnp.maximum(self.sim - state[:, None], 0.0), axis=0)
+
+    def shard_add(self, state: Array, v: Array, ctx) -> Array:
+        return jnp.maximum(state, self.sim[:, v])

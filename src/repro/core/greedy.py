@@ -9,11 +9,23 @@ a masked argmax.  The per-step gains call is dispatched through the execution
 backend layer (``backend="pallas"`` routes it to the fused Pallas kernel; the
 default oracle is plain jnp — see repro.core.backend).  Lazy greedy is still
 provided (host/numpy) because it is the paper's wall-clock baseline on CPU.
+
+Compact selection engine: after SS the live set is |V'| = O(log² n) ≪ n, yet
+a full-width step would still pay n gains + an n argmax.  When ``alive`` is a
+concrete sparse mask (the post-SS default), ``greedy`` / ``stochastic_greedy``
+gather the live set once into a static bucket-sized candidate buffer (the SS
+shrink schedule's :func:`repro.core.sparsify.bucket_schedule` sizes), run
+every per-step gain / argmax / Gumbel draw in compact index space via the
+``gains_compact`` backend primitive, and map selections back to ground
+indices — so per-step cost tracks |V'|, not n.  Compact and full-width
+selection pick identical sets under the same key (tests/test_compact_greedy).
 """
 
 from __future__ import annotations
 
 import heapq
+import logging
+import math
 from functools import partial
 from typing import NamedTuple
 
@@ -26,6 +38,8 @@ from repro.core.functions import NEG, SubmodularFunction
 
 Array = jax.Array
 
+logger = logging.getLogger("repro.core.greedy")
+
 
 class GreedyResult(NamedTuple):
     selected: Array      # (k,) int32 indices, in selection order
@@ -34,48 +48,215 @@ class GreedyResult(NamedTuple):
     state: Array         # final summary state
 
 
+# ------------------------------------------------------- selection planning --
+
+def selection_bucket(
+    n: int, live: int, c: float = 8.0, tile: int = 128
+) -> int | None:
+    """Static compact candidate-buffer size for the selection stage.
+
+    The smallest :func:`repro.core.sparsify.bucket_schedule` size that holds
+    ``live`` candidates, or None when only the full-width bucket fits —
+    compaction would then be pure gather/scatter overhead.  Reusing the SS
+    schedule means the selection grids share the SS compaction grid shapes
+    (same kernel specializations, no extra compile cache pressure).
+    """
+    from repro.core.sparsify import bucket_schedule
+
+    size = min(b for b in bucket_schedule(n, c, tile) if b >= live)
+    return None if size >= n else size
+
+
+def auto_sample_size(
+    n: int, k: int, eps: float = 0.1, live: int | None = None
+) -> int:
+    """Stochastic-greedy sample size s = ceil((n'/k)·ln(1/eps)) — the
+    "lazier than lazy greedy" heuristic [Mirzasoleiman et al. 2015] — with
+    n' the live count (post-SS |V'|) when known, else the ground-set size."""
+    base = (n if live is None else live) / max(k, 1)
+    return max(1, int(math.ceil(base * math.log(1.0 / eps))))
+
+
+_PATHS_LOGGED: set[tuple[str, bool]] = set()
+
+
+def _log_path(kind: str, n: int, live: int | None, size: int | None) -> None:
+    """One log line per (entry point, path) pair — benchmarks and long
+    pipelines see which engine their selection stage actually ran on."""
+    tag = (kind, size is not None)
+    if tag in _PATHS_LOGGED:
+        return
+    _PATHS_LOGGED.add(tag)
+    if size is None:
+        logger.info("%s: full-width selection (n=%d, live=%s)", kind, n, live)
+    else:
+        logger.info(
+            "%s: compact selection, bucket=%d (n=%d, live=%d)",
+            kind, size, n, live,
+        )
+
+
+def _compact_plan(
+    n: int, alive, compact, kind: str
+) -> tuple[int | None, int | None]:
+    """Resolve the compact-selection decision outside the jit boundary.
+
+    Returns ``(bucket_size, live)``: the static compact buffer size (None =
+    full-width path) and the best-known live count (None when ``alive`` is a
+    tracer and no bound was given — the s=None heuristic then falls back to
+    n).  ``compact`` semantics:
+
+    - None / True — auto: compact when ``alive`` is a *concrete* mask whose
+      live count (one host read) fits a sub-n bucket;
+    - False — force the full-width path;
+    - int — a static upper bound on the live count, usable when ``alive`` is
+      a tracer (greedy under jit/vmap, where the mask cannot be host-read) —
+      e.g. the O(log² n) SS retained-set bound m·(max_rounds+1).
+    """
+    if compact is False or alive is None:
+        # Full-width path — but still report the live count when the mask is
+        # host-readable, so the s=None sample-size heuristic (and the sharded
+        # sampler, which resolves the same plan) sees |alive|, not n.
+        live = (
+            None
+            if alive is None or isinstance(alive, jax.core.Tracer)
+            else int(jnp.sum(alive))
+        )
+        _log_path(kind, n, live, None)
+        return None, live
+    if compact is None or isinstance(compact, bool):
+        if isinstance(alive, jax.core.Tracer):
+            # No host-readable live count inside jit/vmap: stay full-width
+            # (pass an int live bound via ``compact`` to opt in under
+            # tracing).
+            _log_path(kind, n, None, None)
+            return None, None
+        live = int(jnp.sum(alive))
+        size = selection_bucket(n, live)
+        _log_path(kind, n, live, size)
+        return size, live
+    bound = int(compact)
+    if not 0 <= bound <= n:
+        raise ValueError(
+            f"compact live bound must be in [0, n={n}]; got {bound}"
+        )
+    if not isinstance(alive, jax.core.Tracer):
+        live = int(jnp.sum(alive))
+        if live > bound:
+            # A bucket sized from the bound would silently truncate the
+            # candidate buffer (jnp.where(..., size=...) drops overflow) and
+            # selections would be wrong — fail loudly instead.
+            raise ValueError(
+                f"compact live bound {bound} < |alive| = {live}; pass a "
+                "correct bound (or compact=True to derive it from the mask)"
+            )
+        # The mask is host-readable: size the bucket from the exact live
+        # count, not the (possibly loose) bound — we already paid the read.
+        bound = live
+    size = selection_bucket(n, bound)
+    _log_path(kind, n, bound, size)
+    return size, bound
+
+
+# ------------------------------------------------------------------ greedy --
+
 def greedy(
     fn: SubmodularFunction,
     k: int,
     alive: Array | None = None,
     backend: "str | Backend | None" = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
 ) -> GreedyResult:
     """Standard greedy under a cardinality constraint, restricted to ``alive``.
 
-    Runs exactly k steps (static).  If fewer than k alive elements exist the
-    remaining slots select the best dead element with gain forced to 0 — the
-    returned value is still f of the alive selections only, because dead
-    elements are never added to the state.  ``backend`` selects the execution
+    Runs exactly k steps (static).  Once the alive set is exhausted the
+    remaining slots record index 0 with gain forced to 0 — the returned value
+    is still f of the alive selections only, because exhausted steps never
+    touch the state.  ``state`` starts the run conditionally from an existing
+    summary state (S ≠ ∅); recorded gains are marginals on top of it and
+    ``value`` is f of the combined set.  ``backend`` selects the execution
     path for the per-step gains (repro.core.backend); it is resolved here,
     outside the jit boundary, so the env-var default is honored per call
     rather than baked into the first trace.
+
+    ``compact`` controls the compact selection engine (see module docstring):
+    None/True auto-compacts when ``alive`` is a concrete sparse mask (one
+    host read of the live count), False forces the full-width path, and an
+    int supplies a static live-count bound so tracer masks (greedy under
+    jit/vmap) can compact too.  Compact and full-width runs select identical
+    sets.
     """
-    return _greedy(fn, k, alive, resolve_backend(backend))
+    be = resolve_backend(backend)
+    size, _ = _compact_plan(fn.n, alive, compact, "greedy")
+    if size is None:
+        return _greedy(fn, k, alive, state, be)
+    return _greedy_compact(fn, k, size, alive, state, be)
 
 
 @partial(jax.jit, static_argnames=("k", "backend"))
 def _greedy(
-    fn: SubmodularFunction, k: int, alive: Array | None, backend: Backend
+    fn: SubmodularFunction, k: int, alive: Array | None, state: Array | None,
+    backend: Backend,
 ) -> GreedyResult:
     be = backend
     n = fn.n
     alive = jnp.ones((n,), bool) if alive is None else alive
+    state0 = fn.empty_state() if state is None else state
 
     def step(carry, _):
-        state, avail = carry
-        g = jnp.where(avail, be.gains(fn, state), NEG)
+        st, avail = carry
+        g = jnp.where(avail, be.gains(fn, st), NEG)
         v = jnp.argmax(g)
         ok = avail[v]
         new_state = jax.tree.map(
-            lambda a, b: jnp.where(ok, a, b), fn.add(state, v), state
+            lambda a, b: jnp.where(ok, a, b), fn.add(st, v), st
         )
         return (new_state, avail.at[v].set(False)), (v, jnp.where(ok, g[v], 0.0))
 
-    (state, _), (sel, gains) = jax.lax.scan(
-        step, (fn.empty_state(), alive), None, length=k
+    (final, _), (sel, gains) = jax.lax.scan(
+        step, (state0, alive), None, length=k
     )
-    return GreedyResult(sel.astype(jnp.int32), gains, fn.value(state), state)
+    return GreedyResult(sel.astype(jnp.int32), gains, fn.value(final), final)
 
+
+@partial(jax.jit, static_argnames=("k", "size", "backend"))
+def _greedy_compact(
+    fn: SubmodularFunction, k: int, size: int, alive: Array,
+    state: Array | None, backend: Backend,
+) -> GreedyResult:
+    """Compact-engine greedy: gains/argmax in (size,)-slot index space.
+
+    ``cand_idx`` (ascending ground indices — the same order the full-width
+    argmax breaks ties in) is gathered once; every step dispatches the
+    ``gains_compact`` backend primitive over it.  Exhausted steps record
+    ground index 0 / gain 0, exactly like the full-width path.
+    """
+    be = backend
+    cand_idx = jnp.where(alive, size=size, fill_value=0)[0]
+    avail0 = jnp.arange(size) < jnp.sum(alive)       # padding slots are dead
+    state0 = fn.empty_state() if state is None else state
+
+    def step(carry, _):
+        st, avail = carry
+        g = jnp.where(avail, be.gains_compact(fn, st, cand_idx), NEG)
+        vc = jnp.argmax(g)
+        v = cand_idx[vc]
+        ok = avail[vc]
+        new_state = jax.tree.map(
+            lambda a, b: jnp.where(ok, a, b), fn.add(st, v), st
+        )
+        return (new_state, avail.at[vc].set(False)), (
+            jnp.where(ok, v, 0), jnp.where(ok, g[vc], 0.0),
+        )
+
+    (final, _), (sel, gains) = jax.lax.scan(
+        step, (state0, avail0), None, length=k
+    )
+    return GreedyResult(sel.astype(jnp.int32), gains, fn.value(final), final)
+
+
+# ------------------------------------------------------------- lazy greedy --
 
 @jax.jit
 def _gain_at(fn: SubmodularFunction, state, v: Array) -> Array:
@@ -122,52 +303,141 @@ def lazy_greedy(
     return GreedyResult(jnp.asarray(sel), jnp.asarray(gains), fn.value(state), state)
 
 
+# ------------------------------------------------------- stochastic greedy --
+
 def stochastic_greedy(
     fn: SubmodularFunction,
     k: int,
     key: Array,
-    s: int,
+    s: int | None = None,
     alive: Array | None = None,
     backend: "str | Backend | None" = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+    eps: float = 0.1,
 ) -> GreedyResult:
-    """"Lazier than lazy greedy" [Mirzasoleiman et al. 2015]: per step, take the
-    best element of a uniform random subset of size ``s`` (≈ (n/k) log(1/eps)).
+    """"Lazier than lazy greedy" [Mirzasoleiman et al. 2015]: per step, take
+    the best element of a uniform random subset of size ``s``.
+
+    ``s=None`` derives the sample size from the live count:
+    s = ceil((|alive|/k)·ln(1/eps)) (:func:`auto_sample_size`) — post-SS this
+    scales with |V'|, not n.  On the compact path (``compact``, same
+    semantics as :func:`greedy`) the Gumbel noise is sampled directly in
+    compact index space, so sampling cost also tracks |V'|.  The whole loop
+    dispatches through the backend (``backend="sharded"`` runs the
+    distributed sampler of :mod:`repro.core.distributed`, which matches this
+    dense compact path selection-for-selection under the same key).
     """
-    return _stochastic_greedy(fn, k, key, s, alive, resolve_backend(backend))
+    be = resolve_backend(backend)
+    return be.stochastic_greedy(
+        fn, k, key, s=s, alive=alive, state=state, compact=compact, eps=eps
+    )
+
+
+def _stochastic_greedy_dense(
+    fn: SubmodularFunction,
+    k: int,
+    key: Array,
+    s: int | None = None,
+    alive: Array | None = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+    eps: float = 0.1,
+    backend: Backend | None = None,
+) -> GreedyResult:
+    """Dense stochastic-greedy entry (Backend.stochastic_greedy default):
+    resolves the compact plan and sample size outside jit, then runs the
+    full-width or compact loop."""
+    be = backend if backend is not None else resolve_backend(None)
+    n = fn.n
+    size, live = _compact_plan(n, alive, compact, "stochastic_greedy")
+    if s is None:
+        s = auto_sample_size(n, k, eps, live=live)
+    s = int(min(s, n if size is None else size))
+    if s < 1:
+        raise ValueError(f"sample size must be >= 1; got {s}")
+    if size is None:
+        return _stochastic_greedy_full(fn, k, key, s, alive, state, be)
+    return _stochastic_greedy_compact(fn, k, key, s, size, alive, state, be)
 
 
 @partial(jax.jit, static_argnames=("k", "s", "backend"))
-def _stochastic_greedy(
+def _stochastic_greedy_full(
     fn: SubmodularFunction,
     k: int,
     key: Array,
     s: int,
     alive: Array | None,
+    state: Array | None,
     backend: Backend,
 ) -> GreedyResult:
     be = backend
     n = fn.n
     alive = jnp.ones((n,), bool) if alive is None else alive
+    state0 = fn.empty_state() if state is None else state
 
     def step(carry, key_i):
-        state, avail = carry
+        st, avail = carry
         # Sample s candidates without replacement via Gumbel top-k on avail.
         gumb = jax.random.gumbel(key_i, (n,)) + jnp.where(avail, 0.0, NEG)
         cand = jax.lax.top_k(gumb, s)[1]
         sub_mask = jnp.zeros((n,), bool).at[cand].set(True) & avail
-        g = jnp.where(sub_mask, be.gains(fn, state), NEG)
+        g = jnp.where(sub_mask, be.gains(fn, st), NEG)
         v = jnp.argmax(g)
         ok = avail[v]
         new_state = jax.tree.map(
-            lambda a, b: jnp.where(ok, a, b), fn.add(state, v), state
+            lambda a, b: jnp.where(ok, a, b), fn.add(st, v), st
         )
         return (new_state, avail.at[v].set(False)), (v, jnp.where(ok, g[v], 0.0))
 
-    (state, _), (sel, gains) = jax.lax.scan(
-        step, (fn.empty_state(), alive), jax.random.split(key, k)
+    (final, _), (sel, gains) = jax.lax.scan(
+        step, (state0, alive), jax.random.split(key, k)
     )
-    return GreedyResult(sel.astype(jnp.int32), gains, fn.value(state), state)
+    return GreedyResult(sel.astype(jnp.int32), gains, fn.value(final), final)
 
+
+@partial(jax.jit, static_argnames=("k", "s", "size", "backend"))
+def _stochastic_greedy_compact(
+    fn: SubmodularFunction,
+    k: int,
+    key: Array,
+    s: int,
+    size: int,
+    alive: Array,
+    state: Array | None,
+    backend: Backend,
+) -> GreedyResult:
+    """Compact-engine stochastic greedy: the Gumbel draw, top-k sampling,
+    gains, and argmax all live in (size,)-slot index space — sampling noise
+    is never materialized over the n dead candidates."""
+    be = backend
+    cand_idx = jnp.where(alive, size=size, fill_value=0)[0]
+    avail0 = jnp.arange(size) < jnp.sum(alive)
+    state0 = fn.empty_state() if state is None else state
+
+    def step(carry, key_i):
+        st, avail = carry
+        gumb = jax.random.gumbel(key_i, (size,)) + jnp.where(avail, 0.0, NEG)
+        cand = jax.lax.top_k(gumb, s)[1]
+        sub = jnp.zeros((size,), bool).at[cand].set(True) & avail
+        g = jnp.where(sub, be.gains_compact(fn, st, cand_idx), NEG)
+        vc = jnp.argmax(g)
+        v = cand_idx[vc]
+        ok = avail[vc]
+        new_state = jax.tree.map(
+            lambda a, b: jnp.where(ok, a, b), fn.add(st, v), st
+        )
+        return (new_state, avail.at[vc].set(False)), (
+            jnp.where(ok, v, 0), jnp.where(ok, g[vc], 0.0),
+        )
+
+    (final, _), (sel, gains) = jax.lax.scan(
+        step, (state0, avail0), jax.random.split(key, k)
+    )
+    return GreedyResult(sel.astype(jnp.int32), gains, fn.value(final), final)
+
+
+# ----------------------------------------------------- bidirectional greedy --
 
 def bidirectional_greedy(
     gain_fn, n: int, key: Array, randomized: bool = True
@@ -177,23 +447,33 @@ def bidirectional_greedy(
 
     ``gain_fn(mask_lo, mask_hi, v) -> (a, b)`` must return the marginal gains
     a = h(v | X) with X = {i : mask_lo[i]} and b = -h(v | Y - v) with
-    Y = {i : mask_hi[i]}.  Host loop (n is small post-SS).
-    Returns the selected mask (n,) bool.
+    Y = {i : mask_hi[i]}; it must be jax-traceable in all three arguments
+    (``v`` arrives as a traced int32).  The n steps run as one
+    ``lax.scan`` — a single compiled loop instead of n host iterations with
+    two device round-trips each.  Returns the selected mask (n,) bool.
     """
-    lo = np.zeros((n,), bool)
-    hi = np.ones((n,), bool)
     keys = jax.random.split(key, n)
-    for v in range(n):
-        a, b = gain_fn(jnp.asarray(lo), jnp.asarray(hi), v)
-        a, b = float(a), float(b)
+
+    def step(carry, inp):
+        lo, hi = carry
+        v, key_v = inp
+        a, b = gain_fn(lo, hi, v)
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
         if randomized:
-            ap, bp = max(a, 0.0), max(b, 0.0)
-            p = 1.0 if ap + bp == 0.0 else ap / (ap + bp)
-            take = bool(jax.random.bernoulli(keys[v], p))
+            ap, bp = jnp.maximum(a, 0.0), jnp.maximum(b, 0.0)
+            tot = ap + bp
+            p = jnp.where(tot == 0.0, 1.0, ap / jnp.where(tot == 0.0, 1.0, tot))
+            take = jax.random.bernoulli(key_v, p)
         else:
             take = a >= b
-        if take:
-            lo[v] = True
-        else:
-            hi[v] = False
-    return jnp.asarray(lo)
+        lo = jnp.where(take, lo.at[v].set(True), lo)
+        hi = jnp.where(take, hi, hi.at[v].set(False))
+        return (lo, hi), None
+
+    (lo, _), _ = jax.lax.scan(
+        step,
+        (jnp.zeros((n,), bool), jnp.ones((n,), bool)),
+        (jnp.arange(n), keys),
+    )
+    return lo

@@ -371,13 +371,16 @@ def summarize(
 ):
     """End-to-end paper pipeline: (optional pre-prune) -> SS -> greedy on V'.
 
-    ``backend`` selects the execution path for both stages.  Returns
-    (GreedyResult, SSResult).
+    ``backend`` selects the execution path for both stages.  ``compact``
+    covers both stages too: shrink-aware SS rounds *and* the compact
+    selection engine for the downstream greedy (post-SS |V'| ≪ n always fits
+    a sub-n bucket, so the selection stage runs at |V'| cost by default).
+    Returns (GreedyResult, SSResult).
     """
     alive = preprune_mask(fn, k) if preprune else None
     ss = ss_sparsify(
         fn, key, r=r, c=c, alive=alive, importance=importance, backend=backend,
         compact=compact,
     )
-    res = greedy(fn, k, alive=ss.vprime, backend=backend)
+    res = greedy(fn, k, alive=ss.vprime, backend=backend, compact=compact)
     return res, ss

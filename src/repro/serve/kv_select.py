@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FacilityLocation, FeatureCoverage, greedy
-from repro.core.sparsify import ss_sparsify
+from repro.core.sparsify import max_rounds, probe_count, ss_sparsify
 
 Array = jax.Array
 
@@ -77,9 +77,17 @@ def select_positions(
     else:
         raise ValueError(kv.objective)
     alive = None
+    compact: "bool | int | None" = None
     if kv.use_ss:
         alive = ss_sparsify(fn, key, r=kv.r, c=kv.c, backend=kv.backend).vprime
-    res = greedy(fn, kv.budget, alive=alive, backend=kv.backend)
+        # This runs under vmap, so ``alive`` is a tracer and the compact
+        # selection engine cannot host-read the live count — pass the static
+        # O(log² n) SS retained-set bound instead (same bound postreduce
+        # uses), so the per-step greedy still runs at |V'| cost per row.
+        n = fn.n
+        m = min(probe_count(n, kv.r), n)
+        compact = min(n, m * (max_rounds(n, kv.r, kv.c) + 1))
+    res = greedy(fn, kv.budget, alive=alive, backend=kv.backend, compact=compact)
     return jnp.sort(res.selected)
 
 
