@@ -2,6 +2,12 @@
 the KV cache to a budget with submodular selection of representative
 positions, keep decoding, and compare fidelity against random pruning.
 
+The selection runs through the summarization *service*
+(repro.serve.summarize_service): the decode batch's pooled key-features are
+one micro-batched lane of SS + compact greedy, executed as a single compiled
+loop — ``prune_cache`` rides the same execution core, so the explicit
+service round-trip below selects the identical positions.
+
     PYTHONPATH=src python examples/serve_kv_pruning.py
 """
 
@@ -11,7 +17,14 @@ import numpy as np
 
 from repro import configs
 from repro.models import decode_step, init_params, prefill
-from repro.serve import KVSelectConfig, prune_cache
+from repro.serve import (
+    KVSelectConfig,
+    ServiceConfig,
+    SummarizeRequest,
+    SummarizeService,
+    prune_cache,
+)
+from repro.serve.kv_select import pooled_keys
 
 
 def main() -> int:
@@ -25,11 +38,29 @@ def main() -> int:
     nxt = jnp.argmax(logits, -1).astype(jnp.int32)
     ref, _ = decode_step(cfg, params, nxt, cache, jnp.int32(S))
 
-    # SS pruning
+    # SS pruning — prune_cache drives the service's batched execution core.
     pruned, clen, kept = prune_cache(
         cfg, cache, S, KVSelectConfig(budget=budget), key
     )
     out_ss, _ = decode_step(cfg, params, nxt, pruned, clen, pos=jnp.int32(S))
+
+    # The same selection as an explicit service round-trip: one request per
+    # decode row, same per-row keys — the queue micro-batches them into one
+    # lane and must pick the identical positions.
+    svc = SummarizeService(ServiceConfig(backend="oracle", max_batch=8))
+    feats = pooled_keys(cache, S)
+    row_keys = jax.random.split(key, B)
+    responses = svc.run([
+        SummarizeRequest(k=budget, key=row_keys[i], features=feats[i])
+        for i in range(B)
+    ])
+    kept_svc = jnp.stack([jnp.sort(r.selected) for r in responses])
+    assert bool(jnp.all(kept_svc == kept)), "service/prune_cache must agree"
+    st = svc.stats()
+    print(f"service round-trip: {st['queries']} queries in {st['batches']} "
+          f"micro-batch(es), padding waste {st['padding_waste_frac']:.0%}, "
+          f"|V'|={responses[0].vprime_size}, "
+          f"eps^={responses[0].eps_hat:.4f}")
 
     # random pruning baseline
     rng = np.random.default_rng(0)

@@ -30,6 +30,7 @@ from repro.core.greedy import (
     auto_sample_size,
     bidirectional_greedy,
     greedy,
+    greedy_batched,
     lazy_greedy,
     selection_bucket,
     stochastic_greedy,
@@ -41,7 +42,9 @@ from repro.core.sparsify import (
     predicted_live_counts,
     preprune_mask,
     probe_count,
+    ss_live_bound,
     ss_sparsify,
+    ss_sparsify_batched,
     summarize,
 )
 
@@ -66,6 +69,7 @@ __all__ = [
     "auto_sample_size",
     "bidirectional_greedy",
     "greedy",
+    "greedy_batched",
     "lazy_greedy",
     "selection_bucket",
     "stochastic_greedy",
@@ -76,6 +80,8 @@ __all__ = [
     "predicted_live_counts",
     "preprune_mask",
     "probe_count",
+    "ss_live_bound",
     "ss_sparsify",
+    "ss_sparsify_batched",
     "summarize",
 ]

@@ -128,6 +128,41 @@ class Backend(abc.ABC):
             fn, probes, cand_idx, probe_mask, residual, state
         )
 
+    # -- batched primitives (micro-batched serving) ------------------------
+    def divergence_batched(
+        self,
+        fn: SubmodularFunction,
+        probes: Array,
+        cand_idx: Array | None = None,
+        residual: Array | None = None,
+        state=None,
+        **kw,
+    ) -> Array:
+        """w_{U_b,v} per batch row for a *stacked* objective.  Shape (B, k).
+
+        ``probes`` is (B, r), ``cand_idx`` (B, k) (full width when None),
+        ``residual`` the stacked (B, n) block.  Row b is elementwise equal
+        to the *oracle* ``divergence(...)`` / ``divergence_compact(...)`` on
+        that row alone — the batched SS loop (repro.core.sparsify) is built
+        on this invariance.  The base implementation routes through the
+        objective's ``pairwise_gains_batched`` (cache-blocked probe-chunk
+        scans on both shipped objectives; the always-correct ``lax.map``
+        fallback otherwise).  No backend overrides it yet: a native
+        batch-grid pallas kernel is an open ROADMAP item, and on CPU the
+        blocked jnp formulation is already the fastest execution of this
+        arithmetic.  The interpret-mode kernels happen to match it bitwise
+        at shipped feature widths (the parity tests compare exactly);
+        compiled-kernel sequential runs are only guaranteed fp-close."""
+        return graph.divergence_batched(fn, probes, cand_idx, residual, state)
+
+    def gains_batched(
+        self, fn: SubmodularFunction, state, cand_idx: Array | None, **kw
+    ) -> Array:
+        """f(v|S_b) per batch row for a *stacked* objective and stacked
+        states.  Shape (B, k); row b equals ``gains_compact(state[b],
+        cand_idx[b])`` (full-width ``gains`` when ``cand_idx`` is None)."""
+        return fn.gains_batched(state, cand_idx)
+
     # -- whole-loop entry points -------------------------------------------
     def sparsify(self, fn: SubmodularFunction, key: Array, **kw):
         """Run SS (Algorithm 1) under this backend.  Returns an SSResult.
@@ -138,6 +173,28 @@ class Backend(abc.ABC):
         from repro.core.sparsify import _sparsify_dense
 
         return _sparsify_dense(fn, key, backend=self, **kw)
+
+    def sparsify_batched(self, fn: SubmodularFunction, keys: Array, **kw):
+        """Run SS for B same-shape queries (a *stacked* objective) as one
+        compiled loop.  Returns a batched SSResult (leading B axis on every
+        field); row b is identical to ``sparsify`` on that query alone under
+        the same key.  The sharded backend owns the whole mesh per query and
+        does not batch."""
+        from repro.core.sparsify import _sparsify_batched
+
+        return _sparsify_batched(fn, keys, backend=self, **kw)
+
+    def greedy(self, fn: SubmodularFunction, k: int, **kw):
+        """Run exact greedy under this backend.  Returns a GreedyResult.
+
+        The default resolves the compact-selection plan and runs the dense
+        per-step loop with this backend's ``gains`` / ``gains_compact``; the
+        sharded backend overrides the whole loop with the distributed argmax
+        (see repro.core.distributed.greedy_sharded).
+        """
+        from repro.core.greedy import _greedy_dense
+
+        return _greedy_dense(fn, k, backend=self, **kw)
 
     def stochastic_greedy(self, fn: SubmodularFunction, k: int, key: Array, **kw):
         """Run stochastic greedy [Mirzasoleiman et al.] under this backend.
@@ -263,20 +320,38 @@ class ShardedBackend(Backend):
     def sparsify(self, fn: SubmodularFunction, key: Array, **kw):
         from repro.core import distributed
 
-        state = kw.pop("state", None)
-        if state is not None:
-            raise NotImplementedError(
-                "sharded SS does not support conditional state yet; "
-                "use backend='oracle' or 'pallas' for G(V, E|S)"
-            )
-        if kw.pop("importance", False):
-            raise NotImplementedError(
-                "sharded SS does not support importance sampling yet"
-            )
         return distributed.ss_sparsify_sharded(
             fn, key, self._mesh(),
             data_axis=self.data_axis, pod_axis=self.pod_axis,
             bins=self.bins, **kw,
+        )
+
+    def sparsify_batched(self, fn: SubmodularFunction, keys: Array, **kw):
+        raise NotImplementedError(
+            "the sharded backend owns the whole mesh per query and does not "
+            "micro-batch; use backend='oracle' or 'pallas' for the batched "
+            "serving path"
+        )
+
+    def greedy(self, fn: SubmodularFunction, k: int, **kw):
+        from repro.core import distributed
+
+        alive = kw.get("alive")
+        mesh = None if self.pod_axis else self._mesh()
+        if (
+            mesh is None
+            or not fn.supports_shard_greedy
+            or fn.n % mesh.shape[self.data_axis] != 0
+            or isinstance(alive, jax.core.Tracer)
+        ):
+            # Distributed exact greedy needs the shard selection hooks, a
+            # shard-divisible ground set, and a concrete mask (the live count
+            # sizes its static buffers), and is single-level; otherwise fall
+            # back to the dense loop — the pre-distributed behavior, always
+            # correct.
+            return super().greedy(fn, k, **kw)
+        return distributed.greedy_sharded(
+            fn, k, mesh, data_axis=self.data_axis, **kw
         )
 
     def stochastic_greedy(self, fn: SubmodularFunction, k: int, key: Array, **kw):

@@ -81,6 +81,8 @@ def ss_sparsify_sharded(
     phi: str = "sqrt",
     bins: int = 512,
     alive: Array | None = None,
+    state: Array | None = None,
+    importance: bool = False,
     compact: bool = True,
 ) -> SSResult:
     """Distributed Algorithm 1 over any shard-capable objective.
@@ -91,6 +93,14 @@ def ss_sparsify_sharded(
     :class:`SSResult` (``alive_trace`` is only recorded for single-level
     meshes; with a pod hierarchy it is -1, since pods run independent loops).
 
+    ``state`` runs *conditional* SS on G(V, E|S): the replicated summary
+    state is folded into each probe's payload (``shard_payloads(idx,
+    state)``), so every shard evaluates f(v | S + u) with the exact dense
+    arithmetic — residuals stay unconditional, matching the dense loop.
+    ``importance`` (§3.4 improvement 2) weights each shard's Gumbel draws by
+    log(f(u) + f(u|V\\u)) of its local candidates, computed via the
+    ``shard_gains`` selection hook (requires ``supports_shard_greedy``).
+
     ``compact`` (default, for objectives with ``supports_shard_compact``)
     makes each shard gather its surviving candidates into a bucket-sized
     static buffer (``lax.switch`` over the per-shard :func:`bucket_schedule`)
@@ -100,6 +110,11 @@ def ss_sparsify_sharded(
     branch and the branches stay collective-free.
     """
     fn = _as_objective(fn, phi)
+    if importance and not fn.supports_shard_greedy:
+        raise NotImplementedError(
+            f"{type(fn).__name__} does not implement shard_gains — sharded "
+            "importance sampling needs the per-shard singleton gains"
+        )
     n = fn.n
     axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
     nshards = 1
@@ -132,6 +147,7 @@ def ss_sparsify_sharded(
     mask_spec = P(axes if len(axes) > 1 else axes[0])
     alive0 = jnp.ones((n,), bool) if alive is None else jnp.asarray(alive)
     alive0 = jax.device_put(alive0, NamedSharding(mesh, mask_spec))
+    has_state = state is not None
 
     keys = jax.random.split(key, npods)      # per-pod independent streams
     keys_spec = P(pod_axis) if pod_axis else P()
@@ -140,16 +156,24 @@ def ss_sparsify_sharded(
     else:
         keys = keys[0]
 
-    def kernel(key_loc: Array, alive_loc: Array, *arrs):
+    def kernel(key_loc: Array, alive_loc: Array, state_rep, *arrs):
         # All collectives bind data_axis only: pods run independently.
         fn_loc = rebuild(*arrs)
         if pod_axis:
             key_loc = key_loc[0]             # (1, 2) -> (2,)
         assert fn_loc.local_n() == n_loc
         didx = jax.lax.axis_index(data_axis)
+        st = state_rep if has_state else None
 
         ctx = fn_loc.shard_init(data_axis)
         resid_loc = fn_loc.shard_residuals(ctx)       # (n_loc,)
+        if importance:
+            # §3.4: probe u with probability ∝ f(u) + f(u|V\u) — the same
+            # logit expression as the dense loop, over local candidates.
+            sing_loc = fn_loc.shard_gains(fn_loc.empty_state(), ctx)
+            logits_loc = jnp.log(jnp.maximum(sing_loc + resid_loc, 1e-12))
+        else:
+            logits_loc = jnp.zeros((n_loc,))
 
         def cond(carry):
             alive, vprime, div, eps, k, rnd, trace = carry
@@ -163,10 +187,11 @@ def ss_sparsify_sharded(
             # distinct local gumbel draws
             g = (
                 jax.random.gumbel(jax.random.fold_in(k1, didx), (n_loc,))
+                + logits_loc
                 + jnp.where(alive, 0.0, NEG)
             )
             loc_val, loc_idx = jax.lax.top_k(g, m_loc)
-            loc_pay = fn_loc.shard_payloads(loc_idx)          # (m_loc, D)
+            loc_pay = fn_loc.shard_payloads(loc_idx, st)      # (m_loc, D)
             loc_res = resid_loc[loc_idx]                      # (m_loc,)
             all_val = jax.lax.all_gather(loc_val, data_axis).reshape(-1)
             all_pay = jax.lax.all_gather(loc_pay, data_axis)
@@ -277,13 +302,14 @@ def ss_sparsify_sharded(
 
     scalar_spec = P(pod_axis) if pod_axis else P()
     trace_spec = P(pod_axis, None) if pod_axis else P()
+    state_in = state if has_state else jnp.zeros((1,), jnp.float32)
     fn_sm = shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(keys_spec, mask_spec) + specs,
+        in_specs=(keys_spec, mask_spec, P()) + specs,
         out_specs=(mask_spec, mask_spec, scalar_spec, scalar_spec, trace_spec),
     )
-    vprime, div, eps, rounds, trace = fn_sm(keys, alive0, *arrays)
+    vprime, div, eps, rounds, trace = fn_sm(keys, alive0, state_in, *arrays)
     eps_hat = jnp.max(eps)
     rounds_out = jnp.max(rounds)
     if pod_axis:
@@ -339,6 +365,65 @@ def stochastic_greedy_sharded(
     buffers).  ``s=None`` derives the sample size from the live count.
     Requires the objective's ``supports_shard_greedy`` hooks.
     """
+    return _select_sharded(
+        fn, k, key, mesh, s=s, alive=alive, state=state, compact=compact,
+        data_axis=data_axis, c=c, eps=eps, phi=phi, exact=False,
+    )
+
+
+def greedy_sharded(
+    fn,                        # SubmodularFunction or legacy (n, F) array
+    k: int,
+    mesh: Mesh,
+    *,
+    alive: Array | None = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+    data_axis: str = "data",
+    c: float = 8.0,
+    phi: str = "sqrt",
+) -> GreedyResult:
+    """Distributed *exact* greedy over the mesh: the same compact frame and
+    psum'd argmax as :func:`stochastic_greedy_sharded`, with every available
+    candidate considered each step (no sampling, no PRNG key) — so
+    ``greedy(backend="sharded")`` no longer evaluates gains on one process.
+
+    Each step every shard evaluates gains for its own candidates on the
+    replicated summary state (``shard_take`` + ``shard_gains``), the winner
+    is the ``pmax`` of per-shard best gains (ties to the lowest frame
+    position via ``pmin`` — the dense argmax tie order), and the replicated
+    state advances by a one-hot ``psum`` of the winning shard's
+    ``shard_add``.  Deterministic, and *selection-identical* to the dense
+    ``greedy`` on the same inputs (pinned in tests/test_distributed.py).
+
+    ``alive`` must be a concrete mask (the live count sizes the static
+    buffers); requires the objective's ``supports_shard_greedy`` hooks.
+    """
+    return _select_sharded(
+        fn, k, None, mesh, s=None, alive=alive, state=state, compact=compact,
+        data_axis=data_axis, c=c, eps=0.1, phi=phi, exact=True,
+    )
+
+
+def _select_sharded(
+    fn,
+    k: int,
+    key: Array | None,
+    mesh: Mesh,
+    *,
+    s: int | None,
+    alive: Array | None,
+    state: Array | None,
+    compact: "bool | int | None",
+    data_axis: str,
+    c: float,
+    eps: float,
+    phi: str,
+    exact: bool,
+) -> GreedyResult:
+    """Shared distributed selection loop: exact greedy (``exact=True`` —
+    every available candidate is a sample) and Gumbel-top-s stochastic
+    greedy ride the identical frame/gains/argmax collectives."""
     fn = _as_objective(fn, phi)
     if not fn.supports_shard_greedy:
         raise NotImplementedError(
@@ -370,7 +455,9 @@ def stochastic_greedy_sharded(
         loc_size = min(loc_fits) if loc_fits else n_loc
     else:
         loc_size = n_loc
-    if s is None:
+    if exact:
+        s = B
+    elif s is None:
         s = auto_sample_size(n, k, eps, live=live)
     s = max(1, int(min(s, B)))
     state0 = fn.empty_state() if state is None else state
@@ -413,10 +500,17 @@ def stochastic_greedy_sharded(
 
         def step(carry, key_i):
             st, avail = carry
-            # (1) replicated Gumbel top-s over the compact frame.
-            gumb = jax.random.gumbel(key_i, (B,)) + jnp.where(avail, 0.0, NEG)
-            cand = jax.lax.top_k(gumb, s)[1]
-            sub = jnp.zeros((B,), bool).at[cand].set(True) & avail
+            if exact:
+                # Exact greedy: every available candidate is "sampled".
+                sub = avail
+            else:
+                # (1) replicated Gumbel top-s over the compact frame.
+                gumb = (
+                    jax.random.gumbel(key_i, (B,))
+                    + jnp.where(avail, 0.0, NEG)
+                )
+                cand = jax.lax.top_k(gumb, s)[1]
+                sub = jnp.zeros((B,), bool).at[cand].set(True) & avail
             # (2) compact per-shard gains on the replicated state.
             g_loc = view.shard_gains(st, ctx)                    # (loc_size,)
             sub_loc = sub[pos_c] & lvalid
@@ -446,9 +540,8 @@ def stochastic_greedy_sharded(
                 v.astype(jnp.int32), jnp.where(ok, gmax, 0.0),
             )
 
-        (st_f, _), (sel, gains) = jax.lax.scan(
-            step, (st0, avail0), jax.random.split(key, k)
-        )
+        xs = jnp.zeros((k, 2), jnp.uint32) if exact else jax.random.split(key, k)
+        (st_f, _), (sel, gains) = jax.lax.scan(step, (st0, avail0), xs)
         return sel, gains, st_f
 
     fn_sm = shard_map(

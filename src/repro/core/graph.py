@@ -96,6 +96,28 @@ def divergence_compact(
     return jnp.min(w, axis=0)
 
 
+def divergence_batched(
+    fn: SubmodularFunction,
+    probes: Array,
+    cand_idx: Array | None = None,
+    residual: Array | None = None,
+    state: Array | None = None,
+) -> Array:
+    """w_{U_b, v} per batch row b, for probes (B, r) and candidates
+    cand_idx (B, k) (the full ground set when None).  Shape (B, k).
+
+    ``fn`` is a *stacked* objective (leading batch axis on array leaves —
+    see the micro-batching hooks in repro.core.functions); ``residual`` is
+    the stacked (B, n) residual block.  Row b matches
+    ``divergence_compact(fn[b], probes[b], cand_idx[b], ...)`` elementwise.
+    """
+    if residual is None:
+        residual = jax.vmap(lambda f: f.residual_gains())(fn)
+    pair = fn.pairwise_gains_batched(probes, cand_idx, state)    # (B, r, k)
+    resid_p = jnp.take_along_axis(residual, probes, axis=1)      # (B, r)
+    return jnp.min(pair - resid_p[:, :, None], axis=1)
+
+
 def divergence_update(
     fn: SubmodularFunction,
     current: Array,

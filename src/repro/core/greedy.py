@@ -186,8 +186,27 @@ def greedy(
     int supplies a static live-count bound so tracer masks (greedy under
     jit/vmap) can compact too.  Compact and full-width runs select identical
     sets.
+
+    The whole loop dispatches through the backend: ``backend="sharded"``
+    runs the distributed exact argmax of
+    :func:`repro.core.distributed.greedy_sharded` (selection-identical to
+    the dense path) when the objective implements the shard selection hooks.
     """
     be = resolve_backend(backend)
+    return be.greedy(fn, k, alive=alive, state=state, compact=compact)
+
+
+def _greedy_dense(
+    fn: SubmodularFunction,
+    k: int,
+    alive: Array | None = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+    backend: Backend | None = None,
+) -> GreedyResult:
+    """Dense greedy entry (Backend.greedy default): resolves the compact
+    plan outside jit, then runs the full-width or compact loop."""
+    be = backend if backend is not None else resolve_backend(None)
     size, _ = _compact_plan(fn.n, alive, compact, "greedy")
     if size is None:
         return _greedy(fn, k, alive, state, be)
@@ -254,6 +273,126 @@ def _greedy_compact(
         step, (state0, avail0), None, length=k
     )
     return GreedyResult(sel.astype(jnp.int32), gains, fn.value(final), final)
+
+
+# --------------------------------------------------------- batched greedy --
+
+def greedy_batched(
+    fn: SubmodularFunction,
+    k: int,
+    alive: Array | None = None,
+    backend: "str | Backend | None" = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+) -> GreedyResult:
+    """Exact greedy for B same-shape queries as **one** compiled loop.
+
+    ``fn`` is a *stacked* objective (the same pytree class with a leading
+    batch axis on every array leaf — see the micro-batching hooks in
+    repro.core.functions); ``alive`` is (B, n) (or None = everything live)
+    and ``state`` a stacked conditional start.  Returns a batched
+    GreedyResult (leading B axis on every field).
+
+    Row b selects *identically* to ``greedy(fn_b, k, alive=alive_b, ...)`` —
+    batching is a pure execution strategy (tests/test_serve_service.py pins
+    this).  ``compact`` mirrors :func:`greedy`: None/True host-reads the
+    per-row live counts of a concrete mask and compacts every row into one
+    shared bucket sized by the batch max (per-row parity holds for any
+    bucket that fits — the compact-selection contract), False forces
+    full-width, an int supplies a static shared live-count bound for tracer
+    masks.
+    """
+    be = resolve_backend(backend)
+    if alive is not None and alive.ndim != 2:
+        raise ValueError(f"greedy_batched needs a (B, n) alive mask; "
+                         f"got shape {alive.shape}")
+    n = jax.tree.map(lambda x: x[0], fn).n
+    size = None
+    if alive is not None and compact is not False:
+        if isinstance(compact, (bool, type(None))):
+            if not isinstance(alive, jax.core.Tracer):
+                live_max = int(jnp.max(jnp.sum(alive, axis=1)))
+                size = selection_bucket(n, live_max)
+        else:
+            bound = int(compact)
+            if not 0 <= bound <= n:
+                raise ValueError(
+                    f"compact live bound must be in [0, n={n}]; got {bound}"
+                )
+            if not isinstance(alive, jax.core.Tracer):
+                live_max = int(jnp.max(jnp.sum(alive, axis=1)))
+                if live_max > bound:
+                    raise ValueError(
+                        f"compact live bound {bound} < max row |alive| = "
+                        f"{live_max}; pass a correct bound (or compact=True "
+                        "to derive it from the mask)"
+                    )
+                bound = live_max
+            size = selection_bucket(n, bound)
+    return _greedy_batched(fn, k, size, alive, state, be)
+
+
+@partial(jax.jit, static_argnames=("k", "size", "backend"))
+def _greedy_batched(
+    fn: SubmodularFunction,
+    k: int,
+    size: int | None,
+    alive: Array | None,
+    state: Array | None,
+    backend: Backend,
+) -> GreedyResult:
+    """The batched selection loop: every per-step gains/argmax runs over the
+    whole (B, bucket) frame at once via the ``gains_batched`` backend
+    primitive — one argmax launch for the batch instead of B."""
+    be = backend
+    B = jax.tree.leaves(fn)[0].shape[0]
+    n = jax.tree.map(lambda x: x[0], fn).n
+    if alive is None:
+        cand_idx = None
+        avail0 = jnp.ones((B, n), bool)
+    elif size is None:
+        cand_idx = None
+        avail0 = alive
+    else:
+        cand_idx = jax.vmap(
+            lambda a: jnp.where(a, size=size, fill_value=0)[0]
+        )(alive)                                                  # (B, size)
+        avail0 = jnp.arange(size)[None, :] < jnp.sum(alive, axis=1)[:, None]
+    state0 = (
+        jax.vmap(lambda f: f.empty_state())(fn) if state is None else state
+    )
+    rows = jnp.arange(B)
+
+    def step(carry, _):
+        st, avail = carry
+        g = jnp.where(avail, be.gains_batched(fn, st, cand_idx), NEG)
+        vc = jnp.argmax(g, axis=1)                                # (B,)
+        v = (
+            vc
+            if cand_idx is None
+            else jnp.take_along_axis(cand_idx, vc[:, None], axis=1)[:, 0]
+        )
+        ok = avail[rows, vc]
+        new_state = jax.vmap(lambda f, s, vv: f.add(s, vv))(fn, st, v)
+        st = jax.tree.map(
+            lambda a, b: jnp.where(
+                ok.reshape((B,) + (1,) * (a.ndim - 1)), a, b
+            ),
+            new_state,
+            st,
+        )
+        return (st, avail.at[rows, vc].set(False)), (
+            jnp.where(ok, v, 0),
+            jnp.where(ok, g[rows, vc], 0.0),
+        )
+
+    (final, _), (sel, gains) = jax.lax.scan(
+        step, (state0, avail0), None, length=k
+    )
+    value = jax.vmap(lambda f, s: f.value(s))(fn, final)
+    return GreedyResult(
+        sel.T.astype(jnp.int32), gains.T, value, final
+    )
 
 
 # ------------------------------------------------------------- lazy greedy --

@@ -63,6 +63,16 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def ss_live_bound(n: int, r: int = 8, c: float = 8.0) -> int:
+    """Static upper bound on the SS retained-set size |V'| — the paper's
+    O(log² n): at most m = r·log2(n) probes per round for at most
+    ``max_rounds`` rounds plus an m-sized tail.  Shared by postreduce's slot
+    sizing, the vmapped KV-cache selection, and the serving engine's
+    compact-greedy bound (anywhere a tracer mask needs a static |V'|)."""
+    m = min(probe_count(n, r), n)
+    return min(n, m * (max_rounds(n, r, c) + 1))
+
+
 def bucket_schedule(n: int, c: float = 8.0, tile: int = 128) -> tuple[int, ...]:
     """Static compact-buffer sizes for the shrink-aware SS loop.
 
@@ -272,6 +282,210 @@ def _sparsify_dense(
     return SSResult(vprime, div, jnp.maximum(eps_hat, 0.0), rnd, trace)
 
 
+def ss_sparsify_batched(
+    fn: SubmodularFunction,
+    keys: Array,
+    r: int = 8,
+    c: float = 8.0,
+    alive: Array | None = None,
+    state: Array | None = None,
+    importance: bool = False,
+    backend: "str | Backend | None" = None,
+    compact: bool = True,
+) -> SSResult:
+    """Algorithm 1 for B same-shape queries as **one** compiled loop.
+
+    ``fn`` is a *stacked* objective (the same pytree class with a leading
+    batch axis on every array leaf — see the micro-batching hooks in
+    repro.core.functions), ``keys`` the (B, 2) per-query PRNG keys, ``alive``
+    an optional (B, n) mask and ``state`` an optional stacked conditional
+    state.  Returns a batched SSResult (leading B axis on every field).
+
+    Row b is *identical* to ``ss_sparsify(fn_b, keys[b], ...)`` on that
+    query alone — same ``vprime``, ``eps_hat``, ``rounds`` and
+    ``alive_trace`` under the same per-query key (micro-batching is a pure
+    execution strategy; tests/test_serve_service.py pins this).  Rows that
+    exhaust early freeze in place while the rest keep iterating.  As with
+    the compacted single-query loop, ``divergence`` entries of probe/dead
+    slots are stale by design; additionally the batched loop shares one
+    bucket (the batch max) per round, so stale entries may differ from the
+    single-query run — never read them at non-live indices.
+    """
+    be = resolve_backend(backend)
+    return be.sparsify_batched(
+        fn, keys, r=r, c=c, alive=alive, state=state, importance=importance,
+        compact=compact,
+    )
+
+
+@partial(jax.jit, static_argnames=("r", "c", "importance", "backend", "compact"))
+def _sparsify_batched(
+    fn: SubmodularFunction,
+    keys: Array,
+    r: int = 8,
+    c: float = 8.0,
+    alive: Array | None = None,
+    state: Array | None = None,
+    importance: bool = False,
+    backend: Backend | None = None,
+    compact: bool = True,
+) -> SSResult:
+    """The batched dense SS loop (Backend.sparsify_batched default).
+
+    Structure mirrors :func:`_sparsify_dense` exactly, with every per-query
+    op vmapped over the batch and two shared pieces of control flow: one
+    global round counter (rows that finish freeze via a per-row ``active``
+    mask — their carry is reselected unchanged, so a frozen row's result
+    cannot drift from its single-query run), and one compact bucket per
+    round chosen from the max live count over *active* rows (per-row
+    results are bucket-size-invariant by the compaction contract, so
+    sharing the branch preserves row-for-row parity while keeping a single
+    ``lax.switch`` — under vmapped control flow every branch would run).
+    Divergence dispatches through the ``divergence_batched`` backend
+    primitive: one cache-blocked launch for the whole batch per round.
+    """
+    be = backend if backend is not None else resolve_backend(None)
+    fn0 = jax.tree.map(lambda x: x[0], fn)
+    n = fn0.n
+    B = keys.shape[0]
+    m = min(probe_count(n, r), n)
+    rounds_cap = max_rounds(n, r, c)
+    shrink = 1.0 - 1.0 / math.sqrt(c)
+    buckets = bucket_schedule(n, c) if compact else None
+
+    alive0 = jnp.ones((B, n), bool) if alive is None else alive
+    residual = jax.vmap(lambda f: f.residual_gains())(fn)        # (B, n)
+
+    if importance:
+        score = jax.vmap(lambda f: f.singleton_gains())(fn) + residual
+        logits = jnp.log(jnp.maximum(score, 1e-12))
+    else:
+        logits = jnp.zeros((B, n))
+
+    def _divergence(probes, cand_idx):
+        return be.divergence_batched(
+            fn, probes, cand_idx, residual=residual, state=state
+        )
+
+    def _make_branch(size: int):
+        if size >= n:
+            def full(args):
+                _, probes, div = args
+                return jnp.minimum(div, _divergence(probes, None))
+            return full
+
+        def branch(args):
+            alive_b, probes, div = args
+            cand_idx = jax.vmap(
+                lambda a: jnp.where(a, size=size, fill_value=0)[0]
+            )(alive_b)                                           # (B, size)
+            cand_mask = (
+                jnp.arange(size)[None, :] < jnp.sum(alive_b, axis=1)[:, None]
+            )
+            w = _divergence(probes, cand_idx)                    # (B, size)
+            w = jnp.where(cand_mask, w, INF)
+            return jax.vmap(lambda d, ci, ww: d.at[ci].min(ww))(
+                div, cand_idx, w
+            )
+        return branch
+
+    branches = [_make_branch(s) for s in buckets] if compact else None
+
+    def row_active(alive_b, rnd_b):
+        return (jnp.sum(alive_b, axis=1) > m) & (rnd_b < rounds_cap)
+
+    def cond(carry):
+        alive_b, vprime, div, eps, keys_b, rnd_b, trace = carry
+        return jnp.any(row_active(alive_b, rnd_b))
+
+    def body(carry):
+        alive_b, vprime, div, eps, keys_b, rnd_b, trace = carry
+        active = row_active(alive_b, rnd_b)                      # (B,)
+        new_keys, k1 = jax.vmap(
+            lambda kk: tuple(jax.random.split(kk))
+        )(keys_b)
+
+        # (1) per-row probe sampling — identical draws to the single-query
+        # loop under the same per-row key.
+        g = (
+            jax.vmap(lambda kk: jax.random.gumbel(kk, (n,)))(k1)
+            + logits
+            + jnp.where(alive_b, 0.0, NEG)
+        )
+        probes = jax.lax.top_k(g, m)[1]                          # (B, m)
+        probe_hot = (
+            jnp.zeros((B, n), bool)
+            .at[jnp.arange(B)[:, None], probes]
+            .set(True)
+            & alive_b
+        )
+
+        # (2) U moves from V to V'.
+        new_vprime = vprime | probe_hot
+        new_alive = alive_b & ~probe_hot
+
+        # (3) running divergence over the shared bucket (batch max of the
+        # active rows' live counts; inactive rows' results are discarded).
+        if compact:
+            barr = jnp.asarray(buckets)
+            live_max = jnp.max(
+                jnp.where(active, jnp.sum(new_alive, axis=1), 0)
+            )
+            bidx = jnp.sum(barr >= live_max) - 1
+            new_div = jax.lax.switch(
+                bidx, branches, (new_alive, probes, div)
+            )
+        else:
+            new_div = jnp.minimum(div, _divergence(probes, None))
+
+        # (4) per-row prune of the smallest-divergence fraction.
+        live = jnp.sum(new_alive, axis=1)
+        n_remove = jnp.floor(live * shrink).astype(jnp.int32)
+        keyed = jnp.where(new_alive, new_div, INF)
+        order = jnp.argsort(keyed, axis=1)
+        pos = jnp.zeros((B, n), jnp.int32).at[
+            jnp.arange(B)[:, None], order
+        ].set(jnp.arange(n, dtype=jnp.int32)[None, :])
+        removed = new_alive & (pos < n_remove[:, None])
+        new_eps = jnp.maximum(
+            eps, jnp.max(jnp.where(removed, new_div, NEG), axis=1)
+        )
+        new_alive = new_alive & ~removed
+        new_trace = jax.vmap(
+            lambda t, rr, a: t.at[rr].set(jnp.sum(a).astype(jnp.int32))
+        )(trace, rnd_b, new_alive)
+
+        # Frozen rows keep their entire carry — bit-identical to having
+        # exited the single-query loop.
+        sel = lambda new, old: jnp.where(
+            active.reshape((B,) + (1,) * (new.ndim - 1)), new, old
+        )
+        return (
+            sel(new_alive, alive_b),
+            sel(new_vprime, vprime),
+            sel(new_div, div),
+            sel(new_eps, eps),
+            sel(new_keys, keys_b),
+            rnd_b + active.astype(jnp.int32),
+            sel(new_trace, trace),
+        )
+
+    carry = (
+        alive0,
+        jnp.zeros((B, n), bool),
+        jnp.full((B, n), INF),
+        jnp.full((B,), NEG, jnp.float32),
+        keys,
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B, rounds_cap), -1, jnp.int32),
+    )
+    alive_b, vprime, div, eps, _, rnd_b, trace = jax.lax.while_loop(
+        cond, body, carry
+    )
+    vprime = vprime | alive_b
+    return SSResult(vprime, div, jnp.maximum(eps, 0.0), rnd_b, trace)
+
+
 def preprune_mask(fn: SubmodularFunction, k: int) -> Array:
     """Wei-et-al pre-pruning (§3.4 improvement 1): drop u whose singleton gain
     f(u) is below the k-th largest residual f(v|V\\v) — provably safe."""
@@ -313,8 +527,7 @@ def postreduce(
     if max_members == "exact":
         max_members = int(jnp.sum(result.vprime))  # one sizing sync (opt-in)
     elif derived:
-        m = min(probe_count(n, r), n)
-        max_members = m * (max_rounds(n, r, c) + 1)
+        max_members = ss_live_bound(n, r, c)
     slots = max(1, min(n, max_members))
     if derived and slots < n and int(jnp.sum(result.vprime)) > slots:
         # jnp.where(..., size=slots) would silently drop V' members and the

@@ -1,5 +1,19 @@
-"""Serving substrate: batched prefill/decode engine and SS-based KV-cache
-pruning for long contexts."""
+"""Serving substrate: batched prefill/decode engine, SS-based KV-cache
+pruning for long contexts, and the micro-batched multi-query summarization
+service (repro.serve.summarize_service)."""
 
 from repro.serve.engine import Engine, ServeConfig
-from repro.serve.kv_select import KVSelectConfig, prune_cache, select_positions
+from repro.serve.kv_select import (
+    KVSelectConfig,
+    prune_cache,
+    select_positions,
+    select_positions_batched,
+)
+from repro.serve.summarize_service import (
+    ServiceConfig,
+    SummarizeRequest,
+    SummarizeResponse,
+    SummarizeService,
+    batch_buckets,
+    summarize_batch,
+)

@@ -14,11 +14,14 @@ Objectives:
   * ``fl``: FacilityLocation on cosine similarity of pooled keys — O(L²),
     higher fidelity for short contexts.
 
-This is the serving-side twin of the training-data coreset stage: the same
-core algorithms (ss_sparsify + greedy) run inside the engine, unchanged, and
-``KVSelectConfig.backend`` selects their execution backend ("oracle" or
-"pallas"; the per-row selection is vmapped, so the sharded backend — which
-owns the whole mesh — does not apply here).
+This is the serving-side twin of the training-data coreset stage: the decode
+batch's rows are **one lane of the summarization service** — the same
+batched execution core (:func:`repro.serve.summarize_service.summarize_batch`,
+i.e. ``ss_sparsify_batched`` + ``greedy_batched``) that serves standalone
+summarization queries selects the kept positions for every row in one
+compiled loop.  ``KVSelectConfig.backend`` selects the execution backend
+("oracle" or "pallas"; the batched engine runs per-query ground sets, so
+the sharded backend — which owns the whole mesh — does not apply here).
 """
 
 from __future__ import annotations
@@ -28,8 +31,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import FacilityLocation, FeatureCoverage, greedy
-from repro.core.sparsify import max_rounds, probe_count, ss_sparsify
+from repro.core import FacilityLocation, FeatureCoverage
 
 Array = jax.Array
 
@@ -42,11 +44,11 @@ class KVSelectConfig:
     c: float = 8.0
     use_ss: bool = True        # False: greedy on the full ground set (ablation)
     backend: str = "oracle"    # execution backend (repro.core.backend); the
-    #                            per-row selection is vmapped, so only dense
-    #                            backends (oracle / pallas) are valid here
+    #                            batched engine runs per-query ground sets, so
+    #                            only dense backends (oracle / pallas) apply
 
 
-def _pooled_keys(cache: dict, seq_len: int) -> Array:
+def pooled_keys(cache: dict, seq_len: int) -> Array:
     """Mean |key| features over all attention layers & kv heads.
 
     Returns (B, seq_len, head_dim)."""
@@ -63,32 +65,46 @@ def _pooled_keys(cache: dict, seq_len: int) -> Array:
     return pooled[:, :seq_len]
 
 
+def _batch_objective(feats: Array, kv: KVSelectConfig):
+    """Stacked objective over the (B, L, F) pooled features — one service
+    lane per decode batch."""
+    if kv.objective == "coverage":
+        return FeatureCoverage(W=feats, phi="sqrt")
+    if kv.objective == "fl":
+        sims = jax.vmap(
+            lambda X: FacilityLocation.from_features(X, kernel="cosine").sim
+        )(feats)
+        return FacilityLocation(sim=sims)
+    raise ValueError(kv.objective)
+
+
+def select_positions_batched(
+    feats: Array,              # (B, L, F) nonnegative features per row
+    kv: KVSelectConfig,
+    keys: Array,               # (B, 2) per-row PRNG keys
+) -> Array:
+    """SS + greedy position selection for the whole decode batch through the
+    summarization service's execution core — one compiled loop, row results
+    identical to per-row single-query runs under the same keys.  Returns
+    sorted (B, budget) int32 indices."""
+    from repro.serve.summarize_service import summarize_batch
+
+    fn = _batch_objective(feats, kv)
+    res, _ = summarize_batch(
+        fn, kv.budget, keys, r=kv.r, c=kv.c, use_ss=kv.use_ss,
+        backend=kv.backend,
+    )
+    return jnp.sort(res.selected, axis=1)
+
+
 def select_positions(
     feats: Array,              # (L, F) nonnegative features for one row
     kv: KVSelectConfig,
     key: Array,
 ) -> Array:
-    """SS + greedy position selection for one batch row.  Returns sorted
-    (budget,) int32 indices."""
-    if kv.objective == "coverage":
-        fn = FeatureCoverage(W=feats, phi="sqrt")
-    elif kv.objective == "fl":
-        fn = FacilityLocation.from_features(feats, kernel="cosine")
-    else:
-        raise ValueError(kv.objective)
-    alive = None
-    compact: "bool | int | None" = None
-    if kv.use_ss:
-        alive = ss_sparsify(fn, key, r=kv.r, c=kv.c, backend=kv.backend).vprime
-        # This runs under vmap, so ``alive`` is a tracer and the compact
-        # selection engine cannot host-read the live count — pass the static
-        # O(log² n) SS retained-set bound instead (same bound postreduce
-        # uses), so the per-step greedy still runs at |V'| cost per row.
-        n = fn.n
-        m = min(probe_count(n, kv.r), n)
-        compact = min(n, m * (max_rounds(n, kv.r, kv.c) + 1))
-    res = greedy(fn, kv.budget, alive=alive, backend=kv.backend, compact=compact)
-    return jnp.sort(res.selected)
+    """Single-row convenience wrapper over the batched service path.
+    Returns sorted (budget,) int32 indices."""
+    return select_positions_batched(feats[None], kv, key[None])[0]
 
 
 def prune_cache(
@@ -103,10 +119,10 @@ def prune_cache(
     Returns (new_cache, new_cache_len (= budget), kept (B, budget) positions).
     Non-attention state (SSM/RG-LRU) is untouched — it is already O(1).
     """
-    feats = _pooled_keys(cache, seq_len)              # (B, L, hd)
+    feats = pooled_keys(cache, seq_len)              # (B, L, hd)
     B = feats.shape[0]
     keys = jax.random.split(key, B)
-    kept = jax.vmap(lambda f, k: select_positions(f, kv, k))(feats, keys)
+    kept = select_positions_batched(feats, kv, keys)
 
     def compact(leaf_path, leaf):
         names = [p.key for p in leaf_path if hasattr(p, "key")]

@@ -1,0 +1,394 @@
+"""Micro-batched multi-query summarization service: the request-level layer
+over SS + greedy.
+
+Every caller so far invoked ``ss_sparsify``/``greedy`` one ground set at a
+time.  This module is the serving engine the ROADMAP north star asks for: it
+accepts per-query requests (a feature or similarity payload, a budget k, an
+objective config, a per-query PRNG key), admits them into a queue,
+micro-batches compatible queries into **bucketed static shapes** — the
+``bucket_schedule`` idea applied to the batch dimension (and optionally the
+ground-set dimension), so each (n, B-bucket, k) signature compiles once and
+stays warm — and executes the full SS → compact-greedy pipeline for the
+whole batch as one compiled loop via the first-class batched entry points
+``ss_sparsify_batched`` / ``greedy_batched`` (repro.core).
+
+Correctness contract: micro-batching is a pure execution strategy.  Each
+query's ``selected`` / ``gains`` / ``value`` (and SS ``vprime`` /
+``eps_hat``) are *identical* to a sequential single-query
+``ss_sparsify(fn, key)`` + ``greedy(fn, k, alive=vprime)`` run under the
+same per-query key — regardless of which queries it was batched with, the
+batch bucket padding, or mixed n / k in the same flush
+(tests/test_serve_service.py pins this query-for-query).
+
+Accounting: the service tracks queue delay per query (submit → execution
+start), per-batch execution wall time, and padding waste (slots burned
+rounding a lane chunk up to its batch bucket) — the numbers a capacity
+planner needs to tune ``max_batch`` against traffic.
+
+Optional ground-set padding (``ServiceConfig.n_buckets``): queries whose n
+is not in the bucket list are zero-padded up to the next bucket with the
+padding rows dead-masked, collapsing many distinct-n compile signatures
+into a few.  Padding changes the PRNG frame of SS (an (n_bucket,) Gumbel
+draw), so a padded query matches the sequential run *on the padded ground
+set*, not on the raw one — exact-n lanes (the default) keep the strict
+contract.  Pure-greedy queries (``use_ss=False``) are padding-invariant
+either way: dead rows can never win an argmax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FacilityLocation,
+    FeatureCoverage,
+    GreedyResult,
+    SSResult,
+    bucket_schedule,
+    greedy_batched,
+    resolve_backend,
+    ss_live_bound,
+    ss_sparsify_batched,
+)
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------- request API ----
+
+@dataclasses.dataclass(frozen=True)
+class SummarizeRequest:
+    """One summarization query.
+
+    ``features`` is the (n, F) nonnegative row-feature payload (FeatureCoverage
+    for ``objective="coverage"``; the similarity kernel input for
+    ``objective="fl"``).  ``sim`` passes a precomputed (n, n) similarity for
+    ``objective="fl"`` instead.  ``key`` is the query's PRNG key (an int seed
+    is accepted); ``use_ss=False`` skips SS and greedy-selects on the full
+    ground set.
+    """
+
+    k: int
+    key: Any
+    features: Array | None = None
+    sim: Array | None = None
+    objective: str = "coverage"     # coverage | fl
+    phi: str = "sqrt"               # FeatureCoverage concave transform
+    kernel: str = "cosine"          # FacilityLocation feature kernel
+    use_ss: bool = True
+
+    def prng_key(self) -> Array:
+        if isinstance(self.key, int):
+            return jax.random.PRNGKey(self.key)
+        return jnp.asarray(self.key)
+
+
+@dataclasses.dataclass(frozen=True)
+class SummarizeResponse:
+    """Per-query result + serving metadata.
+
+    Results are query-for-query identical to the sequential single-query
+    pipeline under the same key.  ``queue_delay_s`` is submit → execution
+    start; ``exec_s`` the wall time of the micro-batch this query rode in
+    (shared by its batch mates); ``batch_size``/``batch_bucket`` how full
+    that batch was vs its padded static shape.
+    """
+
+    selected: Array                 # (k,) int32 ground indices
+    gains: Array                    # (k,) marginal gains
+    value: float                    # f(S)
+    vprime_size: int | None         # |V'| after SS (None when use_ss=False)
+    eps_hat: float | None           # SS certificate (None when use_ss=False)
+    rounds: int | None              # SS rounds executed
+    lane: tuple                     # static signature this query batched under
+    batch_size: int                 # real queries in the micro-batch
+    batch_bucket: int               # padded static batch dimension
+    queue_delay_s: float
+    exec_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service-level knobs (per-query knobs live on the request)."""
+
+    backend: Any = None             # str | Backend | None (repro.core.backend)
+    r: int = 8                      # SS probe multiplier
+    c: float = 8.0                  # SS accuracy/speed tradeoff
+    max_batch: int = 8              # admission cap per micro-batch
+    batch_c: float = 4.0            # B-bucket shrink factor (buckets =
+    #                                 bucket_schedule(max_batch, batch_c, 1))
+    n_buckets: tuple[int, ...] | None = None  # opt-in ground-set padding
+
+
+def batch_buckets(max_batch: int, c: float = 4.0) -> tuple[int, ...]:
+    """Static batch-dimension buckets — ``bucket_schedule`` applied to B
+    (tile=1: the batch axis needs no kernel-grid alignment).  A lane chunk
+    of j queries pads up to the smallest bucket >= j, so each (lane,
+    B-bucket) signature compiles once and stays warm."""
+    return bucket_schedule(max_batch, c, tile=1)
+
+
+# ------------------------------------------------------- functional core ----
+
+def build_batch_objective(requests: list[SummarizeRequest], n_pad: int | None):
+    """Stack one lane's payloads into a batched objective (+ alive mask when
+    ground-set padding is active).  All requests must share a lane."""
+    req0 = requests[0]
+    if req0.objective == "coverage":
+        Ws = [jnp.asarray(r.features) for r in requests]
+        if n_pad is not None:
+            Ws = [
+                jnp.zeros((n_pad, W.shape[1]), W.dtype).at[: W.shape[0]].set(W)
+                for W in Ws
+            ]
+        fn = FeatureCoverage(W=jnp.stack(Ws), phi=req0.phi)
+    elif req0.objective == "fl":
+        if req0.sim is not None:
+            sims = [jnp.asarray(r.sim) for r in requests]
+            if n_pad is not None:
+                sims = [
+                    jnp.zeros((n_pad, n_pad), s.dtype)
+                    .at[: s.shape[0], : s.shape[1]].set(s)
+                    for s in sims
+                ]
+            sim_b = jnp.stack(sims)
+        else:
+            Xs = [jnp.asarray(r.features) for r in requests]
+            if n_pad is not None:
+                Xs = [
+                    jnp.zeros((n_pad, X.shape[1]), X.dtype)
+                    .at[: X.shape[0]].set(X)
+                    for X in Xs
+                ]
+            sim_b = jax.vmap(
+                lambda X: FacilityLocation.from_features(
+                    X, kernel=req0.kernel
+                ).sim
+            )(jnp.stack(Xs))
+            if n_pad is not None:
+                # Zero the padded rows/columns of the *similarity*: zero sim
+                # is inert for any kernel, while e.g. the rbf similarity of
+                # a zero feature row is not.
+                valid = jnp.stack([
+                    jnp.arange(n_pad) < r.features.shape[0] for r in requests
+                ])
+                sim_b = sim_b * (
+                    valid[:, :, None] & valid[:, None, :]
+                ).astype(sim_b.dtype)
+        fn = FacilityLocation(sim=sim_b)
+    else:
+        raise ValueError(f"unknown objective {req0.objective!r}")
+    if n_pad is None:
+        return fn, None
+    # Per-row dead-padding mask: one padded lane can mix different real n.
+    n_reals = [
+        (r.features if r.sim is None else r.sim).shape[0] for r in requests
+    ]
+    alive = jnp.stack(
+        [jnp.arange(n_pad) < n_real for n_real in n_reals]
+    )
+    return fn, alive
+
+
+def summarize_batch(
+    fn,
+    k: int,
+    keys: Array,
+    *,
+    r: int = 8,
+    c: float = 8.0,
+    use_ss: bool = True,
+    alive: Array | None = None,
+    backend=None,
+) -> tuple[GreedyResult, SSResult | None]:
+    """The service's execution core: batched SS → batched compact greedy on
+    a stacked objective.  Row b is identical to the sequential single-query
+    pipeline under ``keys[b]``.  Shared with the KV-cache pruning path
+    (repro.serve.kv_select), which feeds it one lane per decode batch."""
+    be = resolve_backend(backend)
+    ss = None
+    sel_alive = alive
+    compact: "bool | int | None" = None
+    if use_ss:
+        ss = ss_sparsify_batched(fn, keys, r=r, c=c, alive=alive, backend=be)
+        sel_alive = ss.vprime
+        # Static O(log² n) bound on |V'|: with a concrete mask the engine
+        # still host-reads the exact live count, but under jit/vmap (tracer
+        # vprime — e.g. a compiled decode loop pruning its KV cache) this
+        # keeps the post-SS greedy on the compact path instead of silently
+        # degrading to full-width O(n) steps.
+        n = jax.tree.map(lambda x: x[0], fn).n
+        compact = ss_live_bound(n, r, c)
+    res = greedy_batched(fn, k, alive=sel_alive, backend=be, compact=compact)
+    return res, ss
+
+
+# ------------------------------------------------------------ the service ----
+
+class Ticket:
+    """Handle returned by :meth:`SummarizeService.submit`; ``result`` is
+    populated by the flush that executes the query."""
+
+    __slots__ = ("index", "result", "_submit_t")
+
+    def __init__(self, index: int, submit_t: float):
+        self.index = index
+        self.result: SummarizeResponse | None = None
+        self._submit_t = submit_t
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class SummarizeService:
+    """Queue-fed micro-batching engine over :func:`summarize_batch`.
+
+    ``submit`` enqueues a request and returns a :class:`Ticket`; ``flush``
+    drains the queue — grouping queries by *lane* (the static compile
+    signature: ground-set size, payload shape, k, objective config, use_ss),
+    chunking each lane at ``max_batch``, padding each chunk up to its batch
+    bucket (padding rows repeat row 0 and are discarded) — and executes one
+    batched pipeline per chunk.  ``run`` is submit-all + flush.
+
+    The service is deliberately synchronous: admission policy (when to
+    flush) belongs to the caller's event loop; everything below — lane
+    formation, bucketing, padding accounting, warm compile caches — lives
+    here.
+    """
+
+    def __init__(self, config: ServiceConfig = ServiceConfig()):
+        self.config = config
+        self._queue: list[tuple[Ticket, SummarizeRequest]] = []
+        self._buckets = batch_buckets(config.max_batch, config.batch_c)
+        self._stats = {
+            "queries": 0,
+            "batches": 0,
+            "padded_slots": 0,
+            "slots": 0,
+            "queue_delay_s_sum": 0.0,
+            "queue_delay_s_max": 0.0,
+            "exec_s_sum": 0.0,
+            "lanes": set(),
+        }
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, request: SummarizeRequest) -> Ticket:
+        ticket = Ticket(len(self._queue), time.perf_counter())
+        self._queue.append((ticket, request))
+        return ticket
+
+    def _lane(self, req: SummarizeRequest) -> tuple:
+        payload = req.sim if req.sim is not None else req.features
+        if payload is None:
+            raise ValueError("request needs a features or sim payload")
+        kind = "sim" if req.sim is not None else "features"
+        shape = tuple(payload.shape)
+        n = shape[0]
+        n_pad = None
+        if self.config.n_buckets is not None:
+            fits = [b for b in self.config.n_buckets if b >= n]
+            if not fits:
+                raise ValueError(
+                    f"query n={n} exceeds every configured n bucket "
+                    f"{self.config.n_buckets}"
+                )
+            n_pad = min(fits)
+            shape = (n_pad,) + shape[1:] if req.sim is None else (n_pad, n_pad)
+        # ``kind`` keeps sim-payload and feature-payload queries in separate
+        # lanes: a (n, n) feature matrix must not stack with a (n, n) sim.
+        return (
+            req.objective, kind, shape, req.k, req.phi, req.kernel,
+            req.use_ss, n_pad,
+        )
+
+    # -- execution ---------------------------------------------------------
+    def flush(self) -> list[SummarizeResponse]:
+        """Drain the queue; returns responses in submission order."""
+        pending, self._queue = self._queue, []
+        lanes: dict[tuple, list[tuple[Ticket, SummarizeRequest]]] = {}
+        for ticket, req in pending:
+            lanes.setdefault(self._lane(req), []).append((ticket, req))
+
+        for lane, items in lanes.items():
+            for lo in range(0, len(items), self.config.max_batch):
+                self._run_chunk(lane, items[lo: lo + self.config.max_batch])
+        return [t.result for t, _ in pending]
+
+    def run(self, requests: list[SummarizeRequest]) -> list[SummarizeResponse]:
+        tickets = [self.submit(r) for r in requests]
+        self.flush()
+        return [t.result for t in tickets]
+
+    def _run_chunk(
+        self, lane: tuple, items: list[tuple[Ticket, SummarizeRequest]]
+    ) -> None:
+        cfg = self.config
+        reqs = [r for _, r in items]
+        n_real = len(reqs)
+        bucket = min(b for b in self._buckets if b >= n_real)
+        # Pad the batch dimension by repeating row 0 (results discarded) so
+        # the (lane, bucket) signature is the only thing that compiles.
+        padded = reqs + [reqs[0]] * (bucket - n_real)
+        _, _, _, k, _, _, use_ss, n_pad = lane
+
+        t_start = time.perf_counter()
+        fn, alive = build_batch_objective(padded, n_pad)
+        keys = jnp.stack([r.prng_key() for r in padded])
+        res, ss = summarize_batch(
+            fn, k, keys, r=cfg.r, c=cfg.c, use_ss=use_ss, alive=alive,
+            backend=cfg.backend,
+        )
+        jax.block_until_ready(res.value)
+        t_end = time.perf_counter()
+        exec_s = t_end - t_start
+
+        vp_sizes = (
+            None if ss is None else jnp.sum(ss.vprime, axis=1)
+        )
+        st = self._stats
+        st["batches"] += 1
+        st["queries"] += n_real
+        st["slots"] += bucket
+        st["padded_slots"] += bucket - n_real
+        st["exec_s_sum"] += exec_s
+        st["lanes"].add((lane, bucket))
+        for i, (ticket, _) in enumerate(items):
+            delay = t_start - ticket._submit_t
+            st["queue_delay_s_sum"] += delay
+            st["queue_delay_s_max"] = max(st["queue_delay_s_max"], delay)
+            ticket.result = SummarizeResponse(
+                selected=res.selected[i],
+                gains=res.gains[i],
+                value=float(res.value[i]),
+                vprime_size=None if ss is None else int(vp_sizes[i]),
+                eps_hat=None if ss is None else float(ss.eps_hat[i]),
+                rounds=None if ss is None else int(ss.rounds[i]),
+                lane=lane,
+                batch_size=n_real,
+                batch_bucket=bucket,
+                queue_delay_s=delay,
+                exec_s=exec_s,
+            )
+
+    # -- accounting --------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate serving counters: query/batch totals, padding waste
+        (fraction of executed slots burned on bucket padding), queue-delay
+        mean/max, and the number of distinct compiled signatures."""
+        st = self._stats
+        q = max(st["queries"], 1)
+        return {
+            "queries": st["queries"],
+            "batches": st["batches"],
+            "padding_waste_frac": st["padded_slots"] / max(st["slots"], 1),
+            "queue_delay_s_mean": st["queue_delay_s_sum"] / q,
+            "queue_delay_s_max": st["queue_delay_s_max"],
+            "exec_s_total": st["exec_s_sum"],
+            "compiled_signatures": len(st["lanes"]),
+        }

@@ -223,13 +223,17 @@ def test_sharded_backend_matches_oracle_value(mk, kw):
     assert abs(v_s - v_o) / v_o < 1e-3, (v_s, v_o)
 
 
-def test_sharded_backend_unsupported_options():
+def test_sharded_backend_conditional_and_importance_run():
+    """Conditional state and importance sampling are supported in the
+    sharded SS loop as of PR 5 (quality-parity pins live in
+    tests/test_distributed.py; here a 1-device mesh checks the plumbing)."""
     fn = make_fc(n=64, F=16)
     key = jax.random.PRNGKey(0)
-    with pytest.raises(NotImplementedError):
-        ss_sparsify(fn, key, backend="sharded", importance=True)
-    with pytest.raises(NotImplementedError):
-        ss_sparsify(fn, key, backend="sharded", state=fn.empty_state())
+    ss = ss_sparsify(fn, key, backend="sharded", importance=True)
+    assert 0 < int(jnp.sum(ss.vprime)) <= 64
+    state = fn.add_many(fn.empty_state(), jnp.arange(64) < 3)
+    ss2 = ss_sparsify(fn, key, backend="sharded", state=state)
+    assert 0 < int(jnp.sum(ss2.vprime)) <= 64
 
 
 def test_sharded_backend_respects_alive():

@@ -1,0 +1,396 @@
+"""Micro-batched summarization service + the batched core entry points.
+
+The contract under test (docs/serving.md): micro-batching is a pure
+execution strategy.  Each query's results — SS ``vprime`` / ``eps_hat`` /
+``rounds`` / ``alive_trace`` and greedy ``selected`` / ``gains`` / ``value``
+— are *identical* to a sequential single-query ``ss_sparsify`` + ``greedy``
+run under the same per-query key, regardless of batch composition (mixed n
+and k in one flush), batch-bucket padding (non-bucket-multiple batch
+sizes), or backend (oracle / pallas)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacilityLocation,
+    FeatureCoverage,
+    PallasBackend,
+    greedy,
+    greedy_batched,
+    ss_live_bound,
+    ss_sparsify,
+    ss_sparsify_batched,
+)
+from repro.data import news_day
+from repro.serve import (
+    ServiceConfig,
+    SummarizeRequest,
+    SummarizeService,
+    batch_buckets,
+    summarize_batch,
+)
+
+BACKENDS = {
+    "oracle": lambda: "oracle",
+    "pallas": lambda: PallasBackend(interpret=True),
+}
+
+
+def make_fc_batch(B=3, n=256, F=64, seed=0):
+    Ws = jnp.stack([jnp.asarray(news_day(seed + i, n, F)) for i in range(B)])
+    return FeatureCoverage(W=Ws, phi="sqrt"), [
+        FeatureCoverage(W=Ws[i], phi="sqrt") for i in range(B)
+    ]
+
+
+def _assert_rows_equal_sequential(ssb, gb, fns, keys, k, be):
+    for i, fn in enumerate(fns):
+        ss = ss_sparsify(fn, keys[i], backend=be)
+        res = greedy(fn, k, alive=ss.vprime, backend=be)
+        assert (np.asarray(ssb.vprime[i]) == np.asarray(ss.vprime)).all(), i
+        assert float(ssb.eps_hat[i]) == float(ss.eps_hat), i
+        assert int(ssb.rounds[i]) == int(ss.rounds), i
+        assert (
+            np.asarray(ssb.alive_trace[i]) == np.asarray(ss.alive_trace)
+        ).all(), i
+        assert (
+            np.asarray(gb.selected[i]) == np.asarray(res.selected)
+        ).all(), i
+        np.testing.assert_allclose(
+            np.asarray(gb.gains[i]), np.asarray(res.gains),
+            rtol=1e-5, atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            float(gb.value[i]), float(res.value), rtol=1e-5)
+
+
+# ------------------------------------------------- batched core entry points --
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_batched_ss_and_greedy_match_sequential(backend):
+    """Acceptance: row b of the batched pipeline is identical to the
+    sequential single-query pipeline under the same key, on every dense
+    backend."""
+    be = BACKENDS[backend]()
+    fnb, fns = make_fc_batch(B=3, n=256, F=64)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    ssb = ss_sparsify_batched(fnb, keys, backend=be)
+    gb = greedy_batched(fnb, 8, alive=ssb.vprime, backend=be)
+    _assert_rows_equal_sequential(ssb, gb, fns, keys, 8, be)
+
+
+def test_batched_ss_facility_location():
+    Xs = jnp.stack([
+        jax.random.normal(jax.random.PRNGKey(10 + i), (200, 12))
+        for i in range(3)
+    ])
+    sims = jax.vmap(
+        lambda X: FacilityLocation.from_features(X, kernel="cosine").sim
+    )(Xs)
+    fnb = FacilityLocation(sim=sims)
+    fns = [FacilityLocation(sim=sims[i]) for i in range(3)]
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    ssb = ss_sparsify_batched(fnb, keys)
+    gb = greedy_batched(fnb, 6, alive=ssb.vprime)
+    _assert_rows_equal_sequential(ssb, gb, fns, keys, 6, "oracle")
+
+
+def test_batched_ss_rows_freeze_independently():
+    """Rows with very different live counts finish at different rounds; the
+    early-finishing row's result must not drift while the rest iterate."""
+    fnb, fns = make_fc_batch(B=2, n=256, F=32, seed=7)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    # Row 0 starts with a tiny alive set (finishes immediately); row 1 full.
+    alive = jnp.stack([jnp.arange(256) < 20, jnp.ones((256,), bool)])
+    ssb = ss_sparsify_batched(fnb, keys, alive=alive)
+    for i in range(2):
+        ss = ss_sparsify(fns[i], keys[i], alive=alive[i])
+        assert (np.asarray(ssb.vprime[i]) == np.asarray(ss.vprime)).all(), i
+        assert int(ssb.rounds[i]) == int(ss.rounds), i
+
+
+def test_batched_ss_importance_and_state():
+    fnb, fns = make_fc_batch(B=2, n=200, F=32, seed=11)
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    states = jnp.stack([
+        fns[i].add_many(fns[i].empty_state(), jnp.arange(200) < 3)
+        for i in range(2)
+    ])
+    ssb = ss_sparsify_batched(fnb, keys, state=states, importance=True)
+    for i in range(2):
+        ss = ss_sparsify(fns[i], keys[i], state=states[i], importance=True)
+        assert (np.asarray(ssb.vprime[i]) == np.asarray(ss.vprime)).all(), i
+        assert float(ssb.eps_hat[i]) == float(ss.eps_hat), i
+
+
+def test_greedy_batched_edge_cases():
+    """Exhausted rows (k > |alive|), conditional state, and the loud bound
+    check all mirror the single-query engine."""
+    fnb, fns = make_fc_batch(B=2, n=128, F=24, seed=21)
+    # row 0 exhausts after 3 selections, row 1 has plenty
+    alive = jnp.stack([jnp.arange(128) < 3, jnp.arange(128) < 60])
+    gb = greedy_batched(fnb, 6, alive=alive)
+    for i in range(2):
+        ref = greedy(fns[i], 6, alive=alive[i])
+        assert (np.asarray(gb.selected[i]) == np.asarray(ref.selected)).all()
+        np.testing.assert_allclose(
+            np.asarray(gb.gains[i]), np.asarray(ref.gains),
+            rtol=1e-5, atol=1e-6)
+    assert (np.asarray(gb.selected[0])[3:] == 0).all()
+    assert np.allclose(np.asarray(gb.gains[0])[3:], 0.0)
+
+    states = jnp.stack([
+        fns[i].add_many(fns[i].empty_state(), jnp.arange(128) < 2)
+        for i in range(2)
+    ])
+    gbs = greedy_batched(fnb, 4, alive=alive, state=states)
+    for i in range(2):
+        ref = greedy(fns[i], 4, alive=alive[i], state=states[i])
+        assert (np.asarray(gbs.selected[i]) == np.asarray(ref.selected)).all()
+
+    with pytest.raises(ValueError, match="live bound"):
+        greedy_batched(fnb, 4, alive=alive, compact=10)
+    with pytest.raises(ValueError, match="alive mask"):
+        greedy_batched(fnb, 4, alive=alive[0])
+
+
+def test_greedy_batched_full_width_and_bound():
+    """alive=None runs full width; an int bound compacts under a tracer mask
+    (the jit/vmap service case) with unchanged selections."""
+    fnb, fns = make_fc_batch(B=2, n=128, F=24, seed=31)
+    gb = greedy_batched(fnb, 5)
+    for i in range(2):
+        ref = greedy(fns[i], 5)
+        assert (np.asarray(gb.selected[i]) == np.asarray(ref.selected)).all()
+
+    alive = jnp.stack([jnp.arange(128) < 40, jnp.arange(128) < 25])
+    bound = ss_live_bound(128)
+    sel_auto = greedy_batched(fnb, 5, alive=alive).selected
+    sel_jit = jax.jit(
+        lambda a: greedy_batched(fnb, 5, alive=a, compact=bound).selected
+    )(alive)
+    np.testing.assert_array_equal(np.asarray(sel_auto), np.asarray(sel_jit))
+
+
+# ---------------------------------------------------------------- service ----
+def test_service_mixed_lanes_match_sequential():
+    """Acceptance: one flush with mixed n and k (two lanes) and a
+    non-bucket-multiple batch size — every response identical to the
+    sequential public-API pipeline under its own key."""
+    svc = SummarizeService(ServiceConfig(backend="oracle", max_batch=8))
+    reqs = [
+        SummarizeRequest(
+            k=8, key=i, features=jnp.asarray(news_day(i, 256, 64)))
+        for i in range(5)                       # 5 -> B-bucket 8 (3 padded)
+    ] + [
+        SummarizeRequest(
+            k=5, key=100 + i, features=jnp.asarray(news_day(50 + i, 200, 48)))
+        for i in range(3)                       # second lane: different n, k
+    ]
+    out = svc.run(reqs)
+    for i, (req, resp) in enumerate(zip(reqs, out)):
+        fn = FeatureCoverage(W=jnp.asarray(req.features), phi="sqrt")
+        ss = ss_sparsify(fn, req.prng_key())
+        ref = greedy(fn, req.k, alive=ss.vprime)
+        assert (np.asarray(resp.selected) == np.asarray(ref.selected)).all(), i
+        np.testing.assert_allclose(
+            np.asarray(resp.gains), np.asarray(ref.gains),
+            rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(resp.value, float(ref.value), rtol=1e-5)
+        assert resp.vprime_size == int(jnp.sum(ss.vprime))
+        assert resp.eps_hat == float(ss.eps_hat)
+        assert resp.rounds == int(ss.rounds)
+    st = svc.stats()
+    assert st["queries"] == 8 and st["batches"] == 2
+    assert st["compiled_signatures"] == 2
+    # lane 1 pads 5 -> bucket 8, lane 2 pads 3 -> bucket 4: 4 of 12 slots
+    assert st["padding_waste_frac"] == pytest.approx(4 / 12)
+    assert st["queue_delay_s_max"] >= st["queue_delay_s_mean"] >= 0.0
+    assert all(r.batch_bucket >= r.batch_size for r in out)
+
+
+def test_service_pallas_matches_sequential_pallas():
+    """Interpret-mode kernels match the batched jnp arithmetic bitwise at
+    shipped feature widths, so the cross-strategy pin is exact here;
+    compiled-kernel runs are only guaranteed fp-close (docs/serving.md)."""
+    be = PallasBackend(interpret=True)
+    svc = SummarizeService(ServiceConfig(backend=be, max_batch=4))
+    reqs = [
+        SummarizeRequest(
+            k=6, key=i, features=jnp.asarray(news_day(i, 256, 128)))
+        for i in range(3)
+    ]
+    out = svc.run(reqs)
+    for req, resp in zip(reqs, out):
+        fn = FeatureCoverage(W=jnp.asarray(req.features), phi="sqrt")
+        ss = ss_sparsify(fn, req.prng_key(), backend=be)
+        ref = greedy(fn, req.k, alive=ss.vprime, backend=be)
+        assert (np.asarray(resp.selected) == np.asarray(ref.selected)).all()
+        assert resp.vprime_size == int(jnp.sum(ss.vprime))
+
+
+def test_service_fl_and_no_ss_lanes():
+    svc = SummarizeService(ServiceConfig(backend="oracle"))
+    X = jax.random.normal(jax.random.PRNGKey(3), (180, 16))
+    out = svc.run([
+        SummarizeRequest(k=5, key=7, features=X, objective="fl"),
+        SummarizeRequest(k=5, key=8, features=jnp.abs(X), use_ss=False),
+    ])
+    fn1 = FacilityLocation.from_features(X, kernel="cosine")
+    ss1 = ss_sparsify(fn1, jax.random.PRNGKey(7))
+    ref1 = greedy(fn1, 5, alive=ss1.vprime)
+    assert (np.asarray(out[0].selected) == np.asarray(ref1.selected)).all()
+    ref2 = greedy(FeatureCoverage(W=jnp.abs(X), phi="sqrt"), 5)
+    assert (np.asarray(out[1].selected) == np.asarray(ref2.selected)).all()
+    assert out[1].vprime_size is None and out[1].eps_hat is None
+    # precomputed-sim payload lane
+    out2 = svc.run([SummarizeRequest(k=4, key=9, sim=fn1.sim,
+                                     objective="fl")])
+    ss2 = ss_sparsify(fn1, jax.random.PRNGKey(9))
+    ref3 = greedy(fn1, 4, alive=ss2.vprime)
+    assert (np.asarray(out2[0].selected) == np.asarray(ref3.selected)).all()
+
+
+def test_service_fl_sim_and_feature_payloads_do_not_collide():
+    """A precomputed (n, n) sim payload and an (n, n) *feature* payload hash
+    to different lanes — stacking them together would crash (or silently
+    treat features as similarities)."""
+    svc = SummarizeService(ServiceConfig(backend="oracle"))
+    X = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (48, 48)))
+    fn = FacilityLocation.from_features(X, kernel="cosine")
+    out = svc.run([
+        SummarizeRequest(k=4, key=1, features=X, objective="fl"),
+        SummarizeRequest(k=4, key=2, sim=fn.sim, objective="fl"),
+    ])
+    assert svc.stats()["batches"] == 2            # two lanes, not one
+    ss1 = ss_sparsify(fn, jax.random.PRNGKey(1))
+    ref1 = greedy(fn, 4, alive=ss1.vprime)
+    assert (np.asarray(out[0].selected) == np.asarray(ref1.selected)).all()
+    ss2 = ss_sparsify(fn, jax.random.PRNGKey(2))
+    ref2 = greedy(fn, 4, alive=ss2.vprime)
+    assert (np.asarray(out[1].selected) == np.asarray(ref2.selected)).all()
+
+
+def test_service_n_padding_fl_padding_is_inert():
+    """Padded fl queries: the sim's padded rows/columns are zeroed (inert
+    for any kernel), and a padded query matches the sequential run on the
+    zero-padded-sim ground set."""
+    svc = SummarizeService(
+        ServiceConfig(backend="oracle", n_buckets=(64,), max_batch=4)
+    )
+    X = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (50, 8)))
+    out = svc.run([SummarizeRequest(k=4, key=5, features=X,
+                                    objective="fl", kernel="rbf")])[0]
+    sim = FacilityLocation.from_features(X, kernel="rbf").sim
+    simp = jnp.zeros((64, 64), sim.dtype).at[:50, :50].set(sim)
+    fnp = FacilityLocation(sim=simp)
+    mask = jnp.arange(64) < 50
+    ss = ss_sparsify(fnp, jax.random.PRNGKey(5), alive=mask)
+    ref = greedy(fnp, 4, alive=ss.vprime)
+    assert (np.asarray(out.selected) == np.asarray(ref.selected)).all()
+    assert bool(jnp.all(out.selected < 50))
+
+
+def test_summarize_batch_compact_under_jit():
+    """summarize_batch keeps the post-SS greedy on the compact path even
+    under jit (tracer vprime) via the static ss_live_bound — selections
+    equal the un-jitted run."""
+    fnb, _ = make_fc_batch(B=2, n=256, F=32, seed=41)
+    keys = jax.random.split(jax.random.PRNGKey(8), 2)
+    host = summarize_batch(fnb, 6, keys)[0]
+    jitted = jax.jit(lambda f, k: summarize_batch(f, 6, k)[0].selected)
+    np.testing.assert_array_equal(
+        np.asarray(host.selected), np.asarray(jitted(fnb, keys))
+    )
+
+
+def test_service_tickets_and_submission_order():
+    svc = SummarizeService(ServiceConfig(backend="oracle", max_batch=2))
+    reqs = [
+        SummarizeRequest(
+            k=4, key=i, features=jnp.asarray(news_day(i, 128, 32)))
+        for i in range(3)
+    ]
+    tickets = [svc.submit(r) for r in reqs]
+    assert not any(t.done for t in tickets)
+    out = svc.flush()
+    assert all(t.done for t in tickets)
+    assert [t.result for t in tickets] == out      # submission order
+    assert svc.flush() == []                       # queue drained
+
+
+def test_service_n_padding_collapses_lanes():
+    """Opt-in ground-set padding: distinct n share one compile signature;
+    pure-greedy queries are padding-invariant."""
+    svc = SummarizeService(
+        ServiceConfig(backend="oracle", n_buckets=(256,), max_batch=4)
+    )
+    reqs = [
+        SummarizeRequest(k=4, key=i,
+                         features=jnp.asarray(news_day(i, n, 32)),
+                         use_ss=False)
+        for i, n in enumerate((200, 222, 256))
+    ]
+    out = svc.run(reqs)
+    assert svc.stats()["compiled_signatures"] == 1
+    for req, resp in zip(reqs, out):
+        ref = greedy(FeatureCoverage(W=jnp.asarray(req.features),
+                                     phi="sqrt"), 4)
+        assert (np.asarray(resp.selected) == np.asarray(ref.selected)).all()
+    with pytest.raises(ValueError, match="n bucket"):
+        svc.run([SummarizeRequest(
+            k=4, key=9, features=jnp.zeros((300, 32)))])
+
+
+def test_service_n_padding_ss_matches_padded_sequential():
+    """With SS, a padded query matches the sequential run on the padded
+    ground set (the documented contract — padding changes the PRNG frame)."""
+    svc = SummarizeService(
+        ServiceConfig(backend="oracle", n_buckets=(256,))
+    )
+    W = jnp.asarray(news_day(0, 200, 32))
+    out = svc.run([SummarizeRequest(k=5, key=3, features=W)])[0]
+    Wp = jnp.zeros((256, 32), W.dtype).at[:200].set(W)
+    fnp = FeatureCoverage(W=Wp, phi="sqrt")
+    mask = jnp.arange(256) < 200
+    ss = ss_sparsify(fnp, jax.random.PRNGKey(3), alive=mask)
+    ref = greedy(fnp, 5, alive=ss.vprime)
+    assert (np.asarray(out.selected) == np.asarray(ref.selected)).all()
+    assert bool(jnp.all(out.selected < 200))
+
+
+def test_summarize_batch_shared_with_kv_select():
+    """The KV-cache pruning path rides the same execution core: per-row
+    selections equal single-row runs."""
+    from repro.serve import KVSelectConfig, select_positions_batched
+    from repro.serve.kv_select import select_positions
+
+    feats = jnp.stack([
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(i), (64, 16)))
+        for i in range(3)
+    ])
+    kv = KVSelectConfig(budget=8)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    kept = select_positions_batched(feats, kv, keys)
+    for i in range(3):
+        row = select_positions(feats[i], kv, keys[i])
+        np.testing.assert_array_equal(np.asarray(kept[i]), np.asarray(row))
+
+
+def test_batch_buckets_properties():
+    assert batch_buckets(8) == (8, 4, 2, 1)
+    assert batch_buckets(1) == (1,)
+    for mb in (3, 8, 16):
+        bks = batch_buckets(mb)
+        assert bks[0] == mb and bks[-1] == 1
+        for j in range(1, mb + 1):
+            assert min(b for b in bks if b >= j) >= j
+
+
+def test_sharded_backend_rejects_batched():
+    fnb, _ = make_fc_batch(B=2, n=64, F=8)
+    with pytest.raises(NotImplementedError, match="micro-batch"):
+        ss_sparsify_batched(
+            fnb, jax.random.split(jax.random.PRNGKey(0), 2),
+            backend="sharded")
