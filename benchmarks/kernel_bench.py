@@ -54,6 +54,12 @@ FG_SHAPES_SMOKE = [(512, 128)]
 # facility location: (n, r) — the sim matrix is (n, n)
 FL_SHAPES = [(1024, 64), (1536, 48)]
 FL_SHAPES_SMOKE = [(256, 16)]
+# matrix-free facility location: (n, d, r) dense-parity shapes plus
+# (n, d) streaming-only shapes at n past the dense from_features guard
+FLS_SHAPES = [(1024, 16, 64), (1536, 16, 48)]
+FLS_SHAPES_SMOKE = [(256, 16, 16)]
+FLS_LARGE = [(65536, 16)]
+FLS_LARGE_SMOKE = [(32768, 16)]
 
 
 def _feat_w(F: int) -> jax.Array:
@@ -169,6 +175,88 @@ def run_fl(seed: int = 0, smoke: bool = False) -> dict:
               f"cpu_ref={t_ref*1e3:.1f}ms tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs",
               flush=True)
     save("kernel_fl", rows)
+    return {"rows": rows}
+
+
+def run_fl_stream(seed: int = 0, smoke: bool = False) -> dict:
+    """Matrix-free facility location (kernels/fl_stream.py):
+
+    (1) streaming-vs-dense parity at dense-feasible n — the interpret-mode
+        fl_stream kernel (similarity tiles computed on the fly from the
+        (n, d) rows) against the dense fl_divergence_ref on the same
+        features; wall_s is the interpret-mode kernel time, gated like
+        every other kernel row;
+    (2) streaming-only large-n rows timing the jitted lax.scan block
+        reference at n past the dense ``from_features`` guard (a 4+ GiB
+        sim matrix) — the regime the kernel exists for, so there is no
+        dense reference; the row pins the oracle streaming path's wall
+        time instead."""
+    from repro.core import StreamingFacilityLocation
+    from repro.data import clustered_embeddings
+    from repro.kernels.fl_stream import (
+        fl_stream_divergence_kernel,
+        fl_stream_divergence_ref,
+    )
+
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for (n, d, r) in (FLS_SHAPES_SMOKE if smoke else FLS_SHAPES):
+        X = jax.random.normal(key, (n, d))
+        dense = FacilityLocation.from_features(X, kernel="cosine")
+        sfl = StreamingFacilityLocation.from_features(X, kernel="cosine")
+        probes = jnp.arange(0, n, max(1, n // r))[:r]
+        MU = jnp.maximum(sfl.X @ sfl.X[probes].T, 0.0).T          # (r, n)
+        resid = dense.residual_gains()[probes]
+
+        ref, t_ref = timed(lambda: jax.block_until_ready(
+            fl_divergence_ref(dense.sim, MU, resid)))
+        out, t_int = timed(lambda: jax.block_until_ready(
+            fl_stream_divergence_kernel(sfl.X, MU, resid, interpret=True)),
+            repeat=3)
+        err = float(jnp.max(jnp.abs(ref - out)))
+        assert err < 1e-3, f"fl_stream kernel vs dense mismatch: {err}"
+
+        # kernel HBM traffic: the embedding rows + MU + the (n,) result —
+        # the (n, n) sim matrix never exists (dense fl_divergence reads it).
+        bytes_moved = (2 * n * d + r * n + n) * 4
+        flops = 2.0 * n * n * d + 2.0 * r * n * n  # tile matmul + hinge
+        t_mem = bytes_moved / HW["hbm_bw"]
+        t_cmp = flops / HW["peak_flops_bf16"]
+        rows.append({
+            "kernel": "fl_stream", "n": n, "d": d, "r": r,
+            "bench_key": f"fl_stream/n{n}-d{d}-r{r}", "wall_s": t_int,
+            "max_err": err, "t_jnp_dense_cpu_s": t_ref, "t_interp_s": t_int,
+            "tpu_bytes": bytes_moved, "tpu_flops": flops,
+            "tpu_roofline_s": max(t_mem, t_cmp),
+            "arithmetic_intensity": flops / bytes_moved,
+            "dense_hbm_bytes": (n * n + r * n + n) * 4.0,
+        })
+        print(f"kernel fl_stream n={n} d={d} r={r} err={err:.2e} "
+              f"dense_ref={t_ref*1e3:.1f}ms "
+              f"tpu_bound={max(t_mem, t_cmp)*1e6:.1f}µs", flush=True)
+
+    for (n, d) in (FLS_LARGE_SMOKE if smoke else FLS_LARGE):
+        r = 4
+        X = jnp.asarray(clustered_embeddings(seed, n, d))
+        sfl = StreamingFacilityLocation.from_features(X, kernel="dot")
+        probes = jnp.arange(0, n, n // r)[:r]
+        MU = jnp.maximum(sfl.X @ sfl.X[probes].T, 0.0).T          # (r, n)
+        resid = jnp.zeros((r,), jnp.float32)
+        div = jax.jit(fl_stream_divergence_ref)
+        out, t_blk = timed(lambda: jax.block_until_ready(
+            div(sfl.X, MU, resid)), repeat=2)
+        assert out.shape == (n,) and bool(jnp.all(jnp.isfinite(out)))
+        rows.append({
+            "kernel": "fl_stream_large", "n": n, "d": d, "r": r,
+            "bench_key": f"fl_stream_large/n{n}-d{d}", "wall_s": t_blk,
+            "t_block_ref_s": t_blk,
+            "dense_sim_bytes": 4.0 * n * n,   # what this row never allocates
+            "stream_bytes": 4.0 * n * d,
+        })
+        print(f"kernel fl_stream_large n={n} d={d} block_ref={t_blk:.2f}s "
+              f"(dense sim would be {4.0 * n * n / 2**30:.1f} GiB; "
+              f"streaming holds {4.0 * n * d / 2**20:.1f} MiB)", flush=True)
+    save("kernel_fl_stream", rows)
     return {"rows": rows}
 
 
@@ -404,6 +492,7 @@ def run_all(seed: int = 0, smoke: bool = False) -> list[dict]:
     rows = []
     rows += run(seed, smoke)["rows"]
     rows += run_fl(seed, smoke)["rows"]
+    rows += run_fl_stream(seed, smoke)["rows"]
     rows += run_compact(seed, smoke)["rows"]
     rows += run_dispatch(seed, smoke)["rows"]
     rows += run_flash(seed, smoke)["rows"]
@@ -412,7 +501,7 @@ def run_all(seed: int = 0, smoke: bool = False) -> list[dict]:
 
 def check_regression(
     rows: list[dict], baseline_path: str, max_ratio: float = 2.0,
-    abs_floor: float = 0.010,
+    abs_floor: float = 0.010, key_ok=None,
 ) -> tuple[int, int]:
     """Compare fresh ``wall_s`` per ``bench_key`` against a committed baseline
     JSON.  Returns ``(regressed, unmeasured)``: kernels slower than
@@ -422,14 +511,23 @@ def check_regression(
     New fresh keys with no baseline are informational — they enter the
     trajectory on the next baseline refresh.
 
+    ``key_ok`` (optional predicate on bench_key) restricts the comparison to
+    a slice of the baseline — used by invocations that measure one axis of a
+    shared baseline file (e.g. fig1's ``--objective`` split of
+    BENCH_e2e.json), so keys belonging to the other axes don't count as
+    unmeasured.
+
     A key fails only when it regresses both *relatively* (> max_ratio) and
     *absolutely* (> abs_floor seconds over baseline): sub-10ms interpret-mode
     timings are dominated by timer/machine noise, while the regressions the
     gate exists for (a fusion silently breaking, an accidental O(r n^2)
     materialization) blow wall time up by far more than the floor."""
     with open(baseline_path) as f:
-        base = {row["bench_key"]: row for row in json.load(f)["rows"]}
-    fresh = {row["bench_key"]: row for row in rows if "bench_key" in row}
+        base = {row["bench_key"]: row for row in json.load(f)["rows"]
+                if key_ok is None or key_ok(row["bench_key"])}
+    fresh = {row["bench_key"]: row for row in rows
+             if "bench_key" in row
+             and (key_ok is None or key_ok(row["bench_key"]))}
     violations = 0
     unmeasured = 0
     for key in sorted(base):

@@ -15,9 +15,15 @@ import sys
 import jax
 import jax.numpy as jnp
 
-from repro.core import FeatureCoverage, greedy, selection_bucket, sieve_streaming
+from repro.core import (
+    FeatureCoverage,
+    StreamingFacilityLocation,
+    greedy,
+    selection_bucket,
+    sieve_streaming,
+)
 from repro.core.sparsify import ss_sparsify, summarize
-from repro.data import news_day
+from repro.data import clustered_embeddings, news_day
 from repro.serve import ServiceConfig, SummarizeRequest, SummarizeService
 
 N, K = 4096, 10
@@ -76,6 +82,20 @@ else:
 print(f"service round-trip: f(S) = {resp.value:.4f}  "
       f"(|V'| = {resp.vprime_size}, batch {resp.batch_size}/"
       f"{resp.batch_bucket}, queue {resp.queue_delay_s * 1e3:.1f} ms)")
+
+# --- matrix-free facility location round-trip --------------------------------
+# StreamingFacilityLocation stores only (n, d) embeddings and computes
+# similarity tiles on the fly — the objective for ground sets where the dense
+# (n, n) sim matrix would not fit (kernels/fl_stream.py, docs/backends.md).
+X = jnp.asarray(clustered_embeddings(seed=0, n=N, d=16))
+sfl = StreamingFacilityLocation.from_features(X, kernel="dot")
+ss_fl = ss_sparsify(sfl, key, r=8, c=8.0, backend=BACKEND)
+red_fl = greedy(sfl, K, alive=ss_fl.vprime, backend=BACKEND)
+full_fl = greedy(sfl, K, backend=BACKEND)
+print(f"streaming FL:       f(S) = {float(red_fl.value):.4f}  "
+      f"(relative = {float(red_fl.value / full_fl.value):.4f}, "
+      f"|V'| = {int(jnp.sum(ss_fl.vprime))}, memory O(n*d) not O(n^2))")
+assert float(red_fl.value / full_fl.value) > 0.9
 
 assert float(reduced.value / full.value) > 0.95
 print("OK: SS matches greedy at a fraction of the ground set.")

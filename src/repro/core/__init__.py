@@ -16,6 +16,7 @@ from repro.core.backend import (
 from repro.core.functions import (
     FacilityLocation,
     FeatureCoverage,
+    StreamingFacilityLocation,
     SubmodularFunction,
 )
 from repro.core.graph import (
@@ -60,6 +61,7 @@ __all__ = [
     "SubmodularFunction",
     "FacilityLocation",
     "FeatureCoverage",
+    "StreamingFacilityLocation",
     "divergence",
     "divergence_compact",
     "edge_weights",

@@ -11,9 +11,11 @@ point:
   reference semantics; always available.
 - ``pallas``  — the fused TPU kernels in :mod:`repro.kernels` (interpret mode
   on CPU).  Every shipped objective provides kernels for every configuration
-  (FeatureCoverage with and without ``feat_w``, FacilityLocation); the oracle
-  fallback remains only as the safety net for *future* objectives that have
-  not implemented the hooks yet.
+  (FeatureCoverage with and without ``feat_w``, FacilityLocation, and the
+  matrix-free StreamingFacilityLocation, whose kernels compute similarity
+  tiles on the fly from embedding rows — see :mod:`repro.kernels.fl_stream`);
+  the oracle fallback remains only as the safety net for *future* objectives
+  that have not implemented the hooks yet.
 - ``sharded`` — shard_map over a device mesh: the whole SS loop runs
   distributed via the per-shard function views declared on the objective
   (see :mod:`repro.core.distributed`).

@@ -12,7 +12,9 @@ function views — no objective-specific math lives here).  Each SS round is:
      Algorithm 1's sampler.)  A probe's *payload* is whatever its objective
      declares sufficient for any shard to evaluate probe-conditioned gains —
      a coverage row for FeatureCoverage, a similarity column for
-     FacilityLocation.
+     FacilityLocation (which StreamingFacilityLocation reproduces from its
+     embedding rows on the fly, so the wire format — and this loop — are
+     identical for the matrix-free objective).
   2. **local divergence** — the (m, payload_dim) probe block is tiny and
      replicated; each device computes w_{U,v} for its own candidates only via
      ``fn.shard_payload_gains``: embarrassingly parallel, as the paper

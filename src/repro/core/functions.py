@@ -40,6 +40,12 @@ Implemented objectives:
   weighted set cover; with ``phi="satcov"`` it is saturated coverage
   ``min(c, alpha * c_total)``.
 - :class:`FacilityLocation` — ``f(S) = sum_i max_{s in S} sim(i, s)``.
+- :class:`StreamingFacilityLocation` — the same objective, matrix-free: it
+  stores only the (n, d) embedding rows and computes similarity tiles
+  ``relu(X_blk @ X_blkᵀ)`` on the fly inside every reduction
+  (:mod:`repro.kernels.fl_stream`), so no path ever materializes ``(n, n)``.
+  This is the objective for 64k+ ground sets where dense
+  ``FacilityLocation.from_features`` cannot even allocate its sim matrix.
 
 All classes are registered pytrees, so they can be passed through jit/shard_map
 boundaries; static (non-array) config lives in the pytree aux data.
@@ -654,8 +660,31 @@ class FacilityLocation(SubmodularFunction):
     def tree_unflatten(cls, aux, children):
         return cls(sim=children[0])
 
+    #: from_features refuses to materialize (n, n) above this many rows
+    #: unless explicitly overridden — 16k is already a 1 GiB f32 sim matrix.
+    N_THRESHOLD = 16384
+
     @classmethod
-    def from_features(cls, X: Array, kernel: str = "dot") -> "FacilityLocation":
+    def from_features(
+        cls,
+        X: Array,
+        kernel: str = "dot",
+        *,
+        n_threshold: int | None = N_THRESHOLD,
+    ) -> "FacilityLocation":
+        n = X.shape[0]
+        if n_threshold is not None and n > n_threshold:
+            raise ValueError(
+                f"FacilityLocation.from_features would materialize an "
+                f"(n, n) = ({n}, {n}) similarity matrix "
+                f"({4 * n * n / 2**30:.1f} GiB of f32). For kernel="
+                f"'dot'/'cosine' use the matrix-free equivalent instead:\n"
+                f"    StreamingFacilityLocation.from_features(X, "
+                f"kernel={kernel!r})\n"
+                f"which stores only the (n, d) embeddings and computes "
+                f"similarity tiles on the fly. Pass n_threshold=None to "
+                f"force the dense construction anyway."
+            )
         if kernel == "dot":
             sim = jnp.maximum(X @ X.T, 0.0)
         elif kernel == "rbf":
@@ -877,3 +906,262 @@ class FacilityLocation(SubmodularFunction):
 
     def shard_add(self, state: Array, v: Array, ctx) -> Array:
         return jnp.maximum(state, self.sim[:, v])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StreamingFacilityLocation(SubmodularFunction):
+    """Matrix-free facility location over embedding rows (ISSUE 6 tentpole).
+
+    Same objective as :class:`FacilityLocation` with the "dot" kernel —
+    ``sim[i, v] = max(x_i . x_v, 0)`` — but the (n, n) similarity matrix is
+    *never* materialized: only the ``(n, d)`` feature rows are stored, and
+    every reduction streams similarity tiles ``relu(X_blk @ X_blkᵀ)`` through
+    the block primitives in :mod:`repro.kernels.fl_stream` (lax.scan block
+    references on the oracle path, fused flash-style kernels on the pallas
+    path).  The cosine kernel is dot after one-time row normalization, so it
+    shares the same machinery.
+
+    ``X`` holds the *candidate* rows.  ``Xs`` (None for the global objective,
+    where served == candidates) holds the *served* rows and exists so the
+    sharded local views — candidate rows sharded, served rows replicated —
+    and compacted views keep serving the full ground set while restricting
+    the candidate axis.  The *state* is the served-row coverage
+    ``m_i = max(0, max_{s in S} sim[i, s])``, exactly the dense state.
+
+    Parity contract: for the same features this objective matches dense
+    ``FacilityLocation.from_features(X, kernel="dot"|"cosine")`` on every
+    primitive up to f32 tile-summation order (block partial sums vs. one
+    full-width reduction), which is inside the repo's 1e-4 parity tolerance.
+    """
+
+    X: Array                 # (n, d) candidate embedding rows
+    Xs: Array | None = None  # (ni, d) served rows; None = X (global objective)
+
+    supports_pod_sharding = False
+    supports_shard_compact = True
+    supports_shard_greedy = True
+
+    def tree_flatten(self):
+        return (self.X, self.Xs), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(X=children[0], Xs=children[1])
+
+    @classmethod
+    def from_features(
+        cls, X: Array, kernel: str = "dot"
+    ) -> "StreamingFacilityLocation":
+        X = jnp.asarray(X, jnp.float32)
+        if kernel == "dot":
+            pass
+        elif kernel == "cosine":
+            # Identical normalization to the dense cosine path, done once;
+            # afterwards cosine *is* dot.
+            X = X / jnp.maximum(
+                jnp.linalg.norm(X, axis=1, keepdims=True), 1e-9
+            )
+        else:
+            raise ValueError(
+                f"StreamingFacilityLocation supports kernel='dot'/'cosine' "
+                f"(similarities factor through the embedding rows); "
+                f"got {kernel!r}"
+            )
+        return cls(X=X)
+
+    def _served(self) -> Array:
+        return self.X if self.Xs is None else self.Xs
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    def empty_state(self) -> Array:
+        return jnp.zeros((self._served().shape[0],), dtype=jnp.float32)
+
+    def value(self, state: Array) -> Array:
+        return jnp.sum(state)
+
+    def _probe_mu(self, probes: Array, state: Array | None) -> Array:
+        """Probe coverage rows mu_u = max(state, relu(Xs @ x_u)).  (r, ni) —
+        an (r, d) gather plus a thin matmul, never anything O(n^2)."""
+        from repro.kernels.fl_stream import fl_stream_pair_ref  # noqa: F401
+
+        base = self.empty_state() if state is None else state
+        cols = jnp.maximum(
+            self._served().astype(jnp.float32)
+            @ jnp.take(self.X, probes, axis=0).astype(jnp.float32).T,
+            0.0,
+        )                                                        # (ni, r)
+        return jnp.maximum(base[None, :], cols.T)
+
+    def gains(self, state: Array) -> Array:
+        from repro.kernels.fl_stream import fl_stream_pair_ref
+
+        return fl_stream_pair_ref(
+            self._served(), state.astype(jnp.float32)[None, :], Xc=self.X
+        )[0]
+
+    def add(self, state: Array, v: Array) -> Array:
+        col = jnp.maximum(
+            self._served().astype(jnp.float32) @ self.X[v].astype(jnp.float32),
+            0.0,
+        )
+        return jnp.maximum(state, col)
+
+    def add_many(self, state: Array, mask: Array) -> Array:
+        from repro.kernels.fl_stream import fl_stream_col_max
+
+        return jnp.maximum(
+            state, fl_stream_col_max(self._served(), self.X, mask)
+        )
+
+    def pairwise_gains(self, probes: Array, state: Array | None = None) -> Array:
+        from repro.kernels.fl_stream import fl_stream_pair_ref
+
+        return fl_stream_pair_ref(
+            self._served(), self._probe_mu(probes, state), Xc=self.X
+        )
+
+    def residual_gains(self) -> Array:
+        from repro.kernels.fl_stream import fl_stream_residuals
+
+        return fl_stream_residuals(self._served(), self.X)
+
+    def pairwise_gains_compact(
+        self, probes: Array, cand_idx: Array, state: Array | None = None
+    ) -> Array:
+        """Compact streaming block: ``cand_idx`` gathers candidate *feature
+        rows* (k, d) — a tiny gather — while the served-row reduction still
+        spans all rows (that is f's definition)."""
+        from repro.kernels.fl_stream import fl_stream_pair_ref
+
+        return fl_stream_pair_ref(
+            self._served(), self._probe_mu(probes, state), cand_idx, Xc=self.X
+        )
+
+    def gains_compact(self, state: Array, cand_idx: Array) -> Array:
+        from repro.kernels.fl_stream import fl_stream_pair_ref
+
+        return fl_stream_pair_ref(
+            self._served(), state.astype(jnp.float32)[None, :], cand_idx,
+            Xc=self.X,
+        )[0]
+
+    # The inherited *_batched defaults lax.map the compact hooks above — the
+    # rows are already streaming/memory-bounded, so they are the batched
+    # implementation too (one row's block scan in flight at a time).
+
+    # -- pallas hooks ------------------------------------------------------
+    def pallas_divergence(
+        self,
+        probes: Array,
+        residual: Array,
+        state: Array | None = None,
+        probe_mask: Array | None = None,
+        *,
+        interpret: bool,
+        cand_idx: Array | None = None,
+        **block_kw,
+    ) -> Array | None:
+        from repro.kernels.fl_stream import fl_stream_divergence_kernel
+
+        MU = self._probe_mu(probes, state)                       # (r, ni)
+        resid = residual[probes]
+        if probe_mask is not None:
+            # Kernel pad-row convention: resid = -INF makes the edge weight
+            # +INF, so masked probes never win the min.
+            resid = jnp.where(probe_mask, resid, NEG)
+        return fl_stream_divergence_kernel(
+            self._served(), MU, resid, cand_idx, self.X,
+            interpret=interpret, **block_kw,
+        )
+
+    def pallas_gains(
+        self,
+        state: Array,
+        *,
+        interpret: bool,
+        cand_idx: Array | None = None,
+        **block_kw,
+    ) -> Array | None:
+        from repro.kernels.fl_stream import fl_stream_gains_kernel
+
+        return fl_stream_gains_kernel(
+            self._served(), state, cand_idx, self.X,
+            interpret=interpret, **block_kw,
+        )
+
+    # -- shard hooks (row-sharded candidates, replicated served rows) ------
+    # Each device owns a contiguous block of candidate rows of X; the (n, d)
+    # served rows are replicated (tiny — that is the whole point of the
+    # matrix-free objective).  Payloads are (k, n) probe coverage rows, the
+    # same wire format as the dense column-sharded FacilityLocation, so the
+    # sharded SS loop in repro.core.distributed runs unchanged.
+
+    def shard_pack(self, axes):
+        if len(axes) > 1:
+            raise NotImplementedError(
+                "StreamingFacilityLocation shards candidates only (no pod "
+                "hierarchy): its served rows span the full ground set"
+            )
+        return (self.X, self._served()), (P(axes[0], None), P(None, None)), (
+            lambda X_loc, Xs_all: dataclasses.replace(
+                self, X=X_loc, Xs=Xs_all
+            )
+        )
+
+    def local_n(self) -> int:
+        return self.X.shape[0]
+
+    def shard_init(self, axis: str):
+        from repro.kernels.fl_stream import (
+            fl_stream_count_best,
+            fl_stream_top2,
+        )
+
+        served = self._served()
+        loc_top = fl_stream_top2(served, self.X)                 # (ni, 2)
+        allt = jax.lax.all_gather(loc_top, axis)                 # (S, ni, 2)
+        allt = jnp.moveaxis(allt, 0, 1).reshape(served.shape[0], -1)
+        pad = jnp.full((served.shape[0], 2), NEG, allt.dtype)
+        top2 = jax.lax.top_k(jnp.concatenate([allt, pad], axis=1), 2)[0]
+        best, second = top2[:, 0], top2[:, 1]
+        cnt = jax.lax.psum(fl_stream_count_best(served, self.X, best), axis)
+        loss = jnp.where(
+            cnt > 1, 0.0, jnp.maximum(best, 0.0) - jnp.maximum(second, 0.0)
+        )
+        return (best, loss)
+
+    def shard_residuals(self, ctx) -> Array:
+        from repro.kernels.fl_stream import fl_stream_best_loss_sum
+
+        best, loss = ctx
+        return fl_stream_best_loss_sum(self._served(), self.X, best, loss)
+
+    def shard_payloads(self, idx: Array, state: Array | None = None) -> Array:
+        return self._probe_mu(idx, state)                        # (k, ni)
+
+    def shard_payload_gains(self, payloads: Array, ctx) -> Array:
+        from repro.kernels.fl_stream import fl_stream_pair_ref
+
+        return fl_stream_pair_ref(self._served(), payloads, Xc=self.X)
+
+    def shard_take(self, cand_idx: Array) -> "StreamingFacilityLocation":
+        # Candidates are rows of X; pin Xs so the served set stays whole.
+        return dataclasses.replace(
+            self,
+            X=jnp.take(self.X, cand_idx, axis=0),
+            Xs=self._served(),
+        )
+
+    def shard_gains(self, state: Array, ctx) -> Array:
+        from repro.kernels.fl_stream import fl_stream_pair_ref
+
+        return fl_stream_pair_ref(
+            self._served(), state.astype(jnp.float32)[None, :], Xc=self.X
+        )[0]
+
+    def shard_add(self, state: Array, v: Array, ctx) -> Array:
+        return self.add(state, v)

@@ -3,6 +3,7 @@ the sharded pipeline with SS coreset selection."""
 
 from repro.data.pipeline import DataConfig, Pipeline, selection_quality
 from repro.data.synthetic import (
+    clustered_embeddings,
     hashed_features,
     lm_documents,
     news_day,

@@ -13,7 +13,9 @@ Flow per batch (selection="ss"):
 i.e. exactly the paper's pipeline (SS -> greedy on the reduced set), applied
 to training-data selection: each batch is a non-redundant summary of its
 candidate pool.  selection="uniform" and "greedy" (no SS) are the ablation
-baselines, selection="none" is a plain loader.
+baselines, selection="none" is a plain loader.  selection="ss_fl" swaps the
+objective for the matrix-free StreamingFacilityLocation over the same hashed
+rows — O(n*F) memory at any pool size, no (n, n) similarity matrix.
 
 Sharding: each host/data shard owns a disjoint seed range (``shard_id`` /
 ``num_shards``); the same pipeline object drives the per-host loader at
@@ -30,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FeatureCoverage, greedy
+from repro.core import FeatureCoverage, StreamingFacilityLocation, greedy
 from repro.core.sparsify import ss_sparsify
 from repro.data import synthetic
 
@@ -42,7 +44,7 @@ class DataConfig:
     batch_size: int = 8
     seq_len: int = 128
     vocab_size: int = 50304
-    selection: str = "ss"          # none | uniform | greedy | ss
+    selection: str = "ss"          # none | uniform | greedy | ss | ss_fl
     pool_factor: int = 4           # candidate pool = pool_factor * batch
     feature_dim: int = 512
     ngram: int = 2
@@ -97,6 +99,18 @@ class Pipeline:
             rng = np.random.default_rng(self._step)
             return docs[rng.choice(len(docs), B, replace=False)]
         W = synthetic.hashed_features(docs[:, :-1], c.feature_dim, c.ngram)
+        if c.selection == "ss_fl":
+            # Matrix-free facility location over the (already l2-normalized)
+            # hashed rows: SS + greedy at O(n*F) memory regardless of pool
+            # size — the selection mode for pools where an (n, n) similarity
+            # matrix would dwarf the batch itself.
+            fn = StreamingFacilityLocation.from_features(
+                jnp.asarray(W), kernel="dot"
+            )
+            self._key, sub = jax.random.split(self._key)
+            ss = ss_sparsify(fn, sub, r=c.ss_r, c=c.ss_c)
+            res = greedy(fn, B, alive=ss.vprime)
+            return docs[np.asarray(res.selected)]
         fn = FeatureCoverage(W=jnp.asarray(W), phi="sqrt")
         if c.selection == "greedy":
             res = greedy(fn, B)

@@ -89,6 +89,32 @@ def video(
     return X.astype(np.float32)
 
 
+def clustered_embeddings(
+    seed: int,
+    n: int,
+    d: int = 16,
+    n_clusters: int = 32,
+    noise: float = 0.25,
+) -> np.ndarray:
+    """Unit-norm gaussian-cluster embedding rows (n, d) float32 — the
+    large-n input for the matrix-free StreamingFacilityLocation objective.
+
+    Rows are ``normalize(center[c] + noise * N(0, I))`` with broken-stick
+    cluster sizes, so same-cluster rows have high dot similarity (the
+    redundancy SS prunes) while the (n, n) similarity matrix is never
+    needed, or even representable, at the n this generator targets.
+    Memory is O(n * d): n = 1M at d = 16 is 64 MB.
+    """
+    rng = _rng(seed)
+    centers = rng.normal(0, 1, (n_clusters, d))
+    centers /= np.maximum(np.linalg.norm(centers, axis=1, keepdims=True), 1e-9)
+    weights = rng.dirichlet(np.ones(n_clusters) * 0.6)
+    assign = rng.choice(n_clusters, size=n, p=weights)
+    X = centers[assign] + noise * rng.normal(0, 1, (n, d))
+    X /= np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-9)
+    return X.astype(np.float32)
+
+
 def lm_documents(
     seed: int,
     n_docs: int,

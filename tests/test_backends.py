@@ -20,6 +20,7 @@ from repro.core import (
     FacilityLocation,
     FeatureCoverage,
     OracleBackend,
+    StreamingFacilityLocation,
     PallasBackend,
     ShardedBackend,
     available_backends,
@@ -44,6 +45,11 @@ def make_fl(seed=0, n=200, d=12, kernel="cosine"):
     return FacilityLocation.from_features(X, kernel=kernel)
 
 
+def make_sfl(seed=0, n=200, d=12, kernel="cosine"):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return StreamingFacilityLocation.from_features(X, kernel=kernel)
+
+
 OBJECTIVES = {
     "fc_sqrt": lambda: make_fc(phi="sqrt"),
     "fc_log1p": lambda: make_fc(phi="log1p"),
@@ -55,6 +61,7 @@ OBJECTIVES = {
     "fc_featw_satcov": lambda: make_fc(phi="satcov", feat_w=True, alpha=0.3),
     "fl": lambda: make_fl(),
     "fl_rbf": lambda: make_fl(kernel="rbf"),
+    "fl_stream": lambda: make_sfl(),
 }
 
 
@@ -190,7 +197,8 @@ def test_greedy_parity_across_backends(name):
 
 # ------------------------------------------------------- sparsify parity ----
 @pytest.mark.parametrize(
-    "name", ["fc_sqrt", "fc_satcov", "fc_featw", "fc_featw_satcov", "fl"]
+    "name",
+    ["fc_sqrt", "fc_satcov", "fc_featw", "fc_featw_satcov", "fl", "fl_stream"],
 )
 def test_ss_sparsify_oracle_pallas_identical(name):
     """Same PRNG stream => identical probe sets; divergences agree to fp

@@ -1,0 +1,237 @@
+"""Matrix-free StreamingFacilityLocation: parity against the dense
+FacilityLocation (same features, same key) on every primitive and backend,
+plus the one contract dense parity cannot check — that no intermediate of
+size n*n ever appears in the jitted streaming computations (the jaxpr test).
+
+Cross-backend coverage (oracle/pallas dispatch, greedy/SS parity) also runs
+via the shared matrix in tests/test_backends.py ("fl_stream" entry);
+multi-device sharded parity lives in tests/test_distributed.py.  This file
+pins the streaming-vs-dense equivalence itself.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacilityLocation,
+    PallasBackend,
+    StreamingFacilityLocation,
+    greedy,
+    ss_sparsify,
+)
+
+RTOL = ATOL = 1e-4
+
+
+def pair(seed=0, n=200, d=12, kernel="cosine"):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return (
+        FacilityLocation.from_features(X, kernel=kernel),
+        StreamingFacilityLocation.from_features(X, kernel=kernel),
+    )
+
+
+def close(a, b, rtol=RTOL, atol=ATOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------- dense parity: oracle ----
+@pytest.mark.parametrize("kernel", ["dot", "cosine"])
+def test_state_protocol_matches_dense(kernel):
+    dense, sfl = pair(kernel=kernel)
+    s_d, s_s = dense.empty_state(), sfl.empty_state()
+    close(s_s, s_d)
+    s_d, s_s = dense.add(s_d, jnp.asarray(7)), sfl.add(s_s, jnp.asarray(7))
+    close(s_s, s_d)
+    mask = jnp.arange(dense.n) % 5 == 0
+    s_d, s_s = dense.add_many(s_d, mask), sfl.add_many(s_s, mask)
+    close(s_s, s_d)
+    close(sfl.value(s_s), dense.value(s_d))
+    close(sfl.residual_gains(), dense.residual_gains())
+
+
+@pytest.mark.parametrize("kernel", ["dot", "cosine"])
+def test_four_primitives_match_dense(kernel):
+    """pairwise_gains / gains / _compact / _batched — the four hot
+    primitives of the acceptance criteria — against dense, same features."""
+    dense, sfl = pair(kernel=kernel)
+    probes = jnp.asarray([3, 50, 111, 166])
+    state = dense.add_many(dense.empty_state(), jnp.arange(dense.n) < 7)
+    ci = jnp.asarray([0, 5, 9, 100, 150, 199])
+
+    close(sfl.pairwise_gains(probes), dense.pairwise_gains(probes))
+    close(sfl.pairwise_gains(probes, state), dense.pairwise_gains(probes, state))
+    close(sfl.gains(state), dense.gains(state))
+    close(
+        sfl.pairwise_gains_compact(probes, ci, state),
+        dense.pairwise_gains_compact(probes, ci, state),
+    )
+    close(sfl.gains_compact(state, ci), dense.gains_compact(state, ci))
+
+    def stack(mk):
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[mk(seed=s) for s in (0, 1, 2)]
+        )
+
+    sd = stack(lambda seed: pair(seed=seed, kernel=kernel)[0])
+    ss = stack(lambda seed: pair(seed=seed, kernel=kernel)[1])
+    pb = jnp.tile(probes[None], (3, 1))
+    cib = jnp.tile(ci[None], (3, 1))
+    stb = jnp.tile(state[None], (3, 1))
+    close(
+        ss.pairwise_gains_batched(pb, cib, stb),
+        sd.pairwise_gains_batched(pb, cib, stb),
+    )
+    close(ss.gains_batched(stb, cib), sd.gains_batched(stb, cib))
+
+
+def test_rbf_kernel_rejected():
+    X = jax.random.normal(jax.random.PRNGKey(0), (32, 4))
+    with pytest.raises(ValueError, match="dot"):
+        StreamingFacilityLocation.from_features(X, kernel="rbf")
+
+
+# ------------------------------------------------- dense parity: pallas ----
+def test_pallas_kernels_match_dense():
+    dense, sfl = pair()
+    probes = jnp.asarray([3, 50, 111, 166])
+    residual = dense.residual_gains()
+    ci = jnp.asarray([0, 5, 9, 100, 150, 199])
+    state = dense.add_many(dense.empty_state(), jnp.arange(dense.n) < 7)
+
+    for kw in ({}, {"cand_idx": ci}):
+        out = sfl.pallas_divergence(probes, residual, state, interpret=True, **kw)
+        ref = dense.pallas_divergence(probes, residual, state, interpret=True, **kw)
+        close(out, ref)
+        close(
+            sfl.pallas_gains(state, interpret=True, **kw),
+            dense.pallas_gains(state, interpret=True, **kw),
+        )
+
+    # probe_mask uses the resid=-INF pad convention
+    mask = jnp.asarray([True, False, True, True])
+    out = sfl.pallas_divergence(
+        probes, residual, probe_mask=mask, interpret=True
+    )
+    ref = dense.pallas_divergence(
+        probes, residual, probe_mask=mask, interpret=True
+    )
+    close(out, ref)
+
+
+# ---------------------------------------------------- end-to-end parity ----
+def test_ss_greedy_pipeline_matches_dense():
+    """Same key => the streaming objective prunes and selects exactly the
+    dense sets on both the oracle and pallas backends."""
+    dense, sfl = pair()
+    key = jax.random.PRNGKey(4)
+    for backend in (None, PallasBackend(interpret=True)):
+        ss_d = ss_sparsify(dense, key, r=6, c=8.0, backend=backend)
+        ss_s = ss_sparsify(sfl, key, r=6, c=8.0, backend=backend)
+        assert bool(jnp.all(ss_d.vprime == ss_s.vprime))
+        r_d = greedy(dense, 8, alive=ss_d.vprime, backend=backend)
+        r_s = greedy(sfl, 8, alive=ss_s.vprime, backend=backend)
+        assert list(np.asarray(r_d.selected)) == list(np.asarray(r_s.selected))
+        close(r_s.value, r_d.value, rtol=1e-5)
+
+
+def test_sharded_backend_matches_dense_sharded():
+    """Single-device mesh (same shard_map code path, collectives of size 1):
+    the streaming shard hooks prune exactly like the dense column-sharded
+    FacilityLocation hooks."""
+    dense, sfl = pair(n=256)
+    key = jax.random.PRNGKey(0)
+    ss_d = ss_sparsify(dense, key, r=8, c=8.0, backend="sharded")
+    ss_s = ss_sparsify(sfl, key, r=8, c=8.0, backend="sharded")
+    assert 0 < int(jnp.sum(ss_s.vprime)) < sfl.n
+    assert bool(jnp.all(ss_d.vprime == ss_s.vprime))
+    v_d = float(greedy(dense, 8, alive=ss_d.vprime).value)
+    v_s = float(greedy(sfl, 8, alive=ss_s.vprime).value)
+    assert abs(v_s - v_d) / v_d < 1e-5, (v_s, v_d)
+
+
+def test_pod_sharding_rejected():
+    _, sfl = pair(n=64)
+    assert not sfl.supports_pod_sharding
+    with pytest.raises(NotImplementedError):
+        sfl.shard_pack(("pod", "data"))
+
+
+# ------------------------------------------------------ memory contract ----
+def _max_intermediate_size(jaxpr) -> int:
+    """Largest output aval (in elements) of any equation, recursing into
+    scan/while/cond/pjit sub-jaxprs."""
+    biggest = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if aval is not None and hasattr(aval, "size"):
+                biggest = max(biggest, int(aval.size))
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: isinstance(x, jax.extend.core.ClosedJaxpr)
+            ):
+                if isinstance(sub, jax.extend.core.ClosedJaxpr):
+                    biggest = max(biggest, _max_intermediate_size(sub.jaxpr))
+    return biggest
+
+
+def test_no_quadratic_intermediate_in_jaxpr():
+    """The contract dense parity can't check: the jitted streaming
+    pairwise_gains / gains never build an intermediate of size n*n.  n is
+    chosen so n*n (16.7M) exceeds the largest legitimate streaming slab
+    (the (probe_chunk, bi, bn) hinge block — 8.4M at these defaults)."""
+    n, d = 4096, 8
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    sfl = StreamingFacilityLocation.from_features(X, kernel="dot")
+    probes = jnp.asarray([1, 7, 100, 4000])
+    state = sfl.empty_state()
+
+    jx = jax.make_jaxpr(lambda f, p: f.pairwise_gains(p))(sfl, probes)
+    assert _max_intermediate_size(jx.jaxpr) < n * n
+    jx = jax.make_jaxpr(lambda f, s: f.gains(s))(sfl, state)
+    assert _max_intermediate_size(jx.jaxpr) < n * n
+    jx = jax.make_jaxpr(lambda f: f.residual_gains())(sfl)
+    assert _max_intermediate_size(jx.jaxpr) < n * n
+
+    # sanity: the same walk *does* flag the dense objective's n*n block
+    dense = FacilityLocation.from_features(X, kernel="dot", n_threshold=None)
+    jx = jax.make_jaxpr(lambda f, p: f.pairwise_gains(p))(dense, probes)
+    assert _max_intermediate_size(jx.jaxpr) >= n * n
+
+
+# -------------------------------------------------------- guard + data ----
+def test_dense_from_features_threshold_guard():
+    X = jax.random.normal(jax.random.PRNGKey(0), (128, 4))
+    with pytest.raises(ValueError, match="StreamingFacilityLocation"):
+        FacilityLocation.from_features(X, n_threshold=64)
+    # escape hatch + default below-threshold path still work
+    fn = FacilityLocation.from_features(X, n_threshold=None)
+    assert fn.n == 128
+    assert FacilityLocation.from_features(X).n == 128
+
+
+def test_clustered_embeddings_generator():
+    from repro.data import clustered_embeddings
+
+    X = clustered_embeddings(0, 512, d=16, n_clusters=8)
+    assert X.shape == (512, 16) and X.dtype == np.float32
+    np.testing.assert_allclose(np.linalg.norm(X, axis=1), 1.0, rtol=1e-5)
+    assert np.array_equal(X, clustered_embeddings(0, 512, d=16, n_clusters=8))
+    # clustered => plenty of high-similarity pairs for SS to prune
+    sims = X[:64] @ X[64:128].T
+    assert float(sims.max()) > 0.8
+
+
+def test_pipeline_ss_fl_selection():
+    from repro.data import DataConfig, Pipeline
+
+    cfg = DataConfig(
+        batch_size=4, seq_len=32, vocab_size=503, selection="ss_fl",
+        pool_factor=4, feature_dim=64,
+    )
+    batch = Pipeline(cfg)()
+    assert batch["tokens"].shape == (4, 32)
+    assert batch["labels"].shape == (4, 32)
