@@ -27,14 +27,34 @@ sequential loop the batched pallas service clears 3x with room.  On TPU the
 batched organization is the one that amortizes kernel launches and keeps
 grids full — re-record the baseline there once a runner exists.
 
+**Poisson open-loop mode** (``--poisson``, PR 7): a seeded Poisson arrival
+process drives the *async* scheduler at a fraction of the measured
+saturation rate (saturation = max_batch / full-batch execution time), and
+two flusher policies serve the identical arrival trace:
+
+- ``deadline`` — the SLO-aware policy: ``scheduler="async"`` with
+  ``max_wait_s`` ≈ half a full-batch execution and a per-request
+  ``deadline_s`` of 3 executions, so lanes fire on (full ∨ deadline-slack ∨
+  max-wait);
+- ``flush_on_full`` — the pre-PR-7 behavior as a policy: lanes fire only
+  when full (``max_wait_s`` effectively infinite), leftovers on drain.
+
+Per-query latency (queue delay + batch execution) is recorded as
+``serve/poisson-{policy}-load{..}-...`` rows at 0.5x and 0.8x saturation;
+the ``deadline`` rows also record ``p99_vs_flush_on_full`` — the
+acceptance pin is that this ratio stays < 1 at 0.8x load (bounded queue
+residency beats waiting for a full bucket once arrival gaps stretch).
+
 ``--smoke`` runs the acceptance shape (n=1024, B=8) with a small query
 count; ``--json`` / ``--baseline`` share ``kernel_bench.check_regression``
-(``BENCH_serve.json`` at the repo root is the committed CI baseline).
+(``BENCH_serve.json`` at the repo root is the committed CI baseline; a run
+without ``--poisson`` gates only the non-poisson slice of it).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -46,7 +66,12 @@ import numpy as np
 from benchmarks.common import save
 from repro.core import FeatureCoverage, greedy, ss_sparsify
 from repro.data import news_day
-from repro.serve import ServiceConfig, SummarizeRequest, SummarizeService
+from repro.serve import (
+    RunConfig,
+    SummarizeRequest,
+    SummarizeService,
+    batch_buckets,
+)
 
 K = 10
 
@@ -98,7 +123,7 @@ def run_batched(queries, backend: str, max_batch: int) -> dict:
     (queue delay + micro-batch execution) off the responses."""
     def serve():
         svc = SummarizeService(
-            ServiceConfig(backend=backend, max_batch=max_batch)
+            RunConfig(backend=backend, max_batch=max_batch)
         )
         t0 = time.perf_counter()
         responses = svc.run(queries)
@@ -118,6 +143,106 @@ def run_batched(queries, backend: str, max_batch: int) -> dict:
         "padding_waste_frac": st["padding_waste_frac"],
         "queue_delay_s_mean": st["queue_delay_s_mean"],
     }
+
+
+def _measure_exec_full(queries, backend: str, max_batch: int) -> float:
+    """Warm every (lane, B-bucket) signature the open-loop run can hit, then
+    measure one full-batch execution — the unit the load generator and both
+    flusher policies are calibrated in."""
+    svc = SummarizeService(RunConfig(backend=backend, max_batch=max_batch))
+    for b in batch_buckets(max_batch):
+        svc.run(queries[:b])
+    full = svc.run(queries[:max_batch])
+    return full[0].exec_s
+
+
+def run_poisson_once(queries, backend: str, max_batch: int, load: float,
+                     policy: str, exec_full: float, seed: int = 0) -> dict:
+    """One open-loop run: Poisson arrivals at ``load`` x saturation against
+    the async scheduler under ``policy`` (same seeded arrival trace for
+    every policy, so the comparison is paired)."""
+    saturation_qps = max_batch / exec_full
+    qps = load * saturation_qps
+    if policy == "deadline":
+        cfg = RunConfig(
+            backend=backend, max_batch=max_batch, scheduler="async",
+            max_wait_s=0.5 * exec_full,
+        )
+        deadline_s = 3.0 * exec_full
+    elif policy == "flush_on_full":
+        # The pre-PR-7 behavior as a policy: a lane fires only when full
+        # (1e9 s ~ never for max_wait), leftovers fire on the final drain.
+        cfg = RunConfig(
+            backend=backend, max_batch=max_batch, scheduler="async",
+            max_wait_s=1e9,
+        )
+        deadline_s = None
+    else:
+        raise ValueError(policy)
+    gaps = np.random.default_rng(seed).exponential(1.0 / qps, len(queries))
+    with SummarizeService(cfg) as svc:
+        tickets = []
+        for q, gap in zip(queries, gaps):
+            time.sleep(gap)
+            tickets.append(
+                svc.submit(dataclasses.replace(q, deadline_s=deadline_s))
+            )
+        svc.drain()
+        responses = [t.result(timeout=0) for t in tickets]
+        st = svc.stats()
+    lat = [r.queue_delay_s + r.exec_s for r in responses]
+    return {
+        "wall_s": float(np.mean(lat)),     # mean latency/query (gated key)
+        "p50_s": _pctl(lat, 50),
+        "p99_s": _pctl(lat, 99),
+        "qps_offered": qps,
+        "saturation_qps": saturation_qps,
+        "batches": st["batches"],
+        "triggers": st["triggers"],
+        "deadlines_missed": st["deadlines_missed"],
+    }
+
+
+def run_poisson(num: int = 32, n: int = 1024, n_features: int = 512,
+                k: int = K, max_batch: int = 8,
+                backends=("oracle", "pallas"), loads=(0.5, 0.8),
+                seed: int = 0) -> dict:
+    """The latency-vs-load grid: {backend} x {load} x {policy} rows."""
+    queries = make_queries(num, n, n_features, k, seed)
+    rows = []
+    for backend in backends:
+        exec_full = _measure_exec_full(queries, backend, max_batch)
+        for load in loads:
+            by_policy = {}
+            for policy in ("flush_on_full", "deadline"):
+                r = run_poisson_once(
+                    queries, backend, max_batch, load, policy, exec_full,
+                    seed,
+                )
+                by_policy[policy] = r
+                tag = f"load{int(load * 100)}"
+                rows.append({
+                    "mode": "poisson", "policy": policy, "load": load,
+                    "backend": backend, "n": n, "k": k, "B": max_batch,
+                    "num_queries": num,
+                    "bench_key": (
+                        f"serve/poisson-{policy}-{tag}-{backend}"
+                        f"-n{n}-B{max_batch}-k{k}"
+                    ),
+                    **r,
+                })
+            d, f = by_policy["deadline"], by_policy["flush_on_full"]
+            rows[-1]["p99_vs_flush_on_full"] = d["p99_s"] / f["p99_s"]
+            for policy, r in by_policy.items():
+                print(
+                    f"serve poisson [{backend}] load={load:.1f} "
+                    f"{policy:>13}: p50 {r['p50_s']*1e3:6.1f}ms  "
+                    f"p99 {r['p99_s']*1e3:6.1f}ms  "
+                    f"({r['qps_offered']:.1f} qps offered, "
+                    f"{r['batches']} batches, "
+                    f"triggers {r['triggers']})", flush=True)
+    save("serve_bench_poisson", rows)
+    return {"rows": rows}
 
 
 def run(num: int = 16, n: int = 1024, n_features: int = 512, k: int = K,
@@ -171,6 +296,12 @@ def main() -> int:
     ap.add_argument("--k", type=int, default=K)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--backends", nargs="+", default=["oracle", "pallas"])
+    ap.add_argument("--poisson", action="store_true",
+                    help="also run the open-loop Poisson latency-vs-load "
+                    "grid through the async flusher (deadline vs "
+                    "flush-on-full policies)")
+    ap.add_argument("--loads", nargs="+", type=float, default=[0.5, 0.8],
+                    help="offered-load fractions of measured saturation")
     ap.add_argument("--json", default=None, metavar="PATH")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="committed baseline JSON (BENCH_serve.json) to gate "
@@ -185,13 +316,37 @@ def main() -> int:
 
     rows = run(num=args.num, n=args.n, n_features=args.features, k=args.k,
                max_batch=args.batch, backends=tuple(args.backends))["rows"]
+    if args.poisson:
+        prows = run_poisson(
+            num=2 * args.num, n=args.n, n_features=args.features, k=args.k,
+            max_batch=args.batch, backends=tuple(args.backends),
+            loads=tuple(args.loads),
+        )["rows"]
+        rows += prows
+        worst = max(
+            (r for r in prows
+             if r["policy"] == "deadline" and r["load"] >= 0.8),
+            key=lambda r: r["p99_vs_flush_on_full"], default=None,
+        )
+        if worst is not None and worst["p99_vs_flush_on_full"] >= 1.0:
+            print(
+                "poisson-gate: deadline-flusher p99 did not beat "
+                f"flush-on-full at load {worst['load']} "
+                f"({worst['backend']}): ratio "
+                f"{worst['p99_vs_flush_on_full']:.2f}", file=sys.stderr)
+            return 1
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows}, f, indent=1)
         print(f"wrote {len(rows)} rows to {args.json}", flush=True)
     if args.baseline:
+        # A run without --poisson honestly gates only the slice it measured.
+        key_ok = None if args.poisson else (
+            lambda key: not key.startswith("serve/poisson-")
+        )
         bad, unmeasured = check_regression(rows, args.baseline,
-                                           args.max_ratio, args.abs_floor)
+                                           args.max_ratio, args.abs_floor,
+                                           key_ok=key_ok)
         if bad or unmeasured:
             print(f"regression-gate: {bad} serve row(s) regressed "
                   f">{args.max_ratio}x and {unmeasured} baseline key(s) "

@@ -22,9 +22,9 @@ from repro.core import (
     selection_bucket,
     sieve_streaming,
 )
+from repro import api
 from repro.core.sparsify import ss_sparsify, summarize
 from repro.data import clustered_embeddings, news_day
-from repro.serve import ServiceConfig, SummarizeRequest, SummarizeService
 
 N, K = 4096, 10
 BACKEND = sys.argv[1] if len(sys.argv) > 1 else "oracle"
@@ -69,17 +69,21 @@ print(f"sieve-streaming:    f(S) = {float(sv.value):.4f}  "
 res, ss2 = summarize(fn, K, key, preprune=True, importance=True)
 print(f"summarize(+§3.4):   f(S) = {float(res.value):.4f}")
 
-# --- one-query service round-trip (the request-level layer) ------------------
-svc = SummarizeService(ServiceConfig(backend=BACKEND if BACKEND != "sharded"
-                                     else "oracle"))
-resp = svc.run([SummarizeRequest(k=K, key=0, features=W)])[0]
+# --- one-call facade (the stable public surface, repro.api) ------------------
+# docs/serving.md covers the full surface: RunConfig, the async SLO-aware
+# scheduler (scheduler="async" + per-request deadline_s), and Ticket futures.
+resp = api.summarize(
+    W, k=K, key=0,
+    config=api.RunConfig(backend=BACKEND if BACKEND != "sharded"
+                         else "oracle"),
+)
 if BACKEND == "oracle":                  # same key + arithmetic -> same picks
     assert (resp.selected == reduced.selected).all()
 else:
     # pallas/sharded sequential runs use different execution strategies
     # (fused kernels / distributed probes); values agree, picks may not.
     assert abs(resp.value - float(reduced.value)) < 1e-3 * abs(resp.value)
-print(f"service round-trip: f(S) = {resp.value:.4f}  "
+print(f"api.summarize:      f(S) = {resp.value:.4f}  "
       f"(|V'| = {resp.vprime_size}, batch {resp.batch_size}/"
       f"{resp.batch_bucket}, queue {resp.queue_delay_s * 1e3:.1f} ms)")
 

@@ -5,8 +5,9 @@ positions, keep decoding, and compare fidelity against random pruning.
 The selection runs through the summarization *service*
 (repro.serve.summarize_service): the decode batch's pooled key-features are
 one micro-batched lane of SS + compact greedy, executed as a single compiled
-loop — ``prune_cache`` rides the same execution core, so the explicit
-service round-trip below selects the identical positions.
+loop — ``Engine.prune_kv`` rides the same execution core, so the explicit
+service round-trip below (through the stable ``repro.api`` facade) selects
+the identical positions.
 
     PYTHONPATH=src python examples/serve_kv_pruning.py
 """
@@ -15,15 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import decode_step, init_params, prefill
-from repro.serve import (
-    KVSelectConfig,
-    ServiceConfig,
-    SummarizeRequest,
-    SummarizeService,
-    prune_cache,
-)
+from repro import api, configs
+from repro.models import init_params
+from repro.serve import Engine, KVSelectConfig, ServeConfig, SummarizeRequest
 from repro.serve.kv_select import pooled_keys
 
 
@@ -34,20 +29,23 @@ def main() -> int:
     B, S, budget = 2, 48, 16
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 
-    logits, cache = prefill(cfg, params, toks, max_len=S + 16)
+    engine = Engine(cfg, params, ServeConfig(max_len=S + 16))
+    logits, cache = engine.prefill(toks)
     nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-    ref, _ = decode_step(cfg, params, nxt, cache, jnp.int32(S))
+    ref, _ = engine.decode_with_cache(nxt, cache, jnp.int32(S))
 
-    # SS pruning — prune_cache drives the service's batched execution core.
-    pruned, clen, kept = prune_cache(
-        cfg, cache, S, KVSelectConfig(budget=budget), key
+    # SS pruning — Engine.prune_kv drives the service's batched execution
+    # core; KV selection knobs ride KVSelectConfig, execution knobs its
+    # nested RunConfig.
+    pruned, clen, kept = engine.prune_kv(
+        cache, S, key, KVSelectConfig(budget=budget)
     )
-    out_ss, _ = decode_step(cfg, params, nxt, pruned, clen, pos=jnp.int32(S))
+    out_ss, _ = engine.decode_with_cache(nxt, pruned, clen, pos=jnp.int32(S))
 
     # The same selection as an explicit service round-trip: one request per
     # decode row, same per-row keys — the queue micro-batches them into one
     # lane and must pick the identical positions.
-    svc = SummarizeService(ServiceConfig(backend="oracle", max_batch=8))
+    svc = api.serve(api.RunConfig(backend="oracle", max_batch=8))
     feats = pooled_keys(cache, S)
     row_keys = jax.random.split(key, B)
     responses = svc.run([
@@ -79,8 +77,8 @@ def main() -> int:
         return jax.vmap(per_row)(leaf, kept_r)
 
     rand = jax.tree_util.tree_map_with_path(compact, cache)
-    out_r, _ = decode_step(cfg, params, nxt, rand, jnp.int32(budget),
-                           pos=jnp.int32(S))
+    out_r, _ = engine.decode_with_cache(nxt, rand, jnp.int32(budget),
+                                        pos=jnp.int32(S))
 
     mse_ss = float(jnp.mean((out_ss - ref) ** 2))
     mse_r = float(jnp.mean((out_r - ref) ** 2))

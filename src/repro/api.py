@@ -1,0 +1,121 @@
+"""``repro.api`` — the stable public facade over the summarization stack.
+
+Three verbs cover the serving surface (docs/serving.md has the migration
+table from the pre-PR-7 scattered kwargs):
+
+- :func:`summarize` — one query, one call: build the objective from a raw
+  payload, run SS → compact greedy through the service execution core, and
+  return the :class:`SummarizeResponse`.  Compile caches are module-level,
+  so repeated calls stay warm.
+- :func:`serve` — construct a :class:`SummarizeService` from a
+  :class:`RunConfig` (``scheduler="async"`` for the deadline-driven
+  background flusher; the service is a context manager).
+- :func:`submit` — fire-and-forget onto a process-wide default *async*
+  service; returns the :class:`Ticket` future.
+
+All knobs that are not per-query live on one object — :class:`RunConfig` —
+threaded end-to-end (service admission → batched SS → compact greedy).
+Per-query knobs (payload, ``k``, ``key``, objective config, ``deadline_s``)
+live on :class:`SummarizeRequest`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+from repro.serve.summarize_service import (
+    DeadlineExceeded,
+    RunConfig,
+    ServiceOverloaded,
+    SummarizeRequest,
+    SummarizeResponse,
+    SummarizeService,
+    Ticket,
+)
+
+__all__ = [
+    "DeadlineExceeded",
+    "RunConfig",
+    "ServiceOverloaded",
+    "SummarizeRequest",
+    "SummarizeResponse",
+    "SummarizeService",
+    "Ticket",
+    "default_service",
+    "serve",
+    "submit",
+    "summarize",
+]
+
+_default_service: SummarizeService | None = None
+_default_lock = threading.Lock()
+
+
+def serve(config: RunConfig | None = None) -> SummarizeService:
+    """A fresh :class:`SummarizeService` under ``config`` (default
+    ``RunConfig()`` — synchronous scheduler).  Compile caches are shared
+    process-wide, so new services start warm for shapes any prior service
+    has executed."""
+    return SummarizeService(config or RunConfig())
+
+
+def default_service(config: RunConfig | None = None) -> SummarizeService:
+    """The process-wide service :func:`submit` targets — created on first
+    use (``RunConfig(scheduler="async")`` unless ``config`` overrides at
+    creation).  Passing a different config once it exists is an error: use
+    :func:`serve` for a separately-configured instance."""
+    global _default_service
+    with _default_lock:
+        if _default_service is None:
+            cfg = config or RunConfig(scheduler="async")
+            if cfg.scheduler != "async":
+                cfg = dataclasses.replace(cfg, scheduler="async")
+            _default_service = SummarizeService(cfg)
+        elif config is not None and config != dataclasses.replace(
+            _default_service.config, scheduler=config.scheduler
+        ):
+            raise ValueError(
+                "the default service is already configured; use "
+                "repro.api.serve(config) for a differently-configured one"
+            )
+        return _default_service
+
+
+def submit(
+    request: SummarizeRequest, service: SummarizeService | None = None
+) -> Ticket:
+    """Admit one request to ``service`` (default: the process-wide async
+    :func:`default_service`) and return its :class:`Ticket` future."""
+    return (service or default_service()).submit(request)
+
+
+def summarize(
+    features=None,
+    k: int = 10,
+    key=0,
+    *,
+    sim=None,
+    objective: str = "coverage",
+    phi: str = "sqrt",
+    kernel: str = "cosine",
+    use_ss: bool = True,
+    config: RunConfig | None = None,
+) -> SummarizeResponse:
+    """One-call single-query summarization through the service execution
+    core (identical results to ``ss_sparsify`` + ``greedy`` under the same
+    key — the micro-batching contract with B=1).
+
+    ``features`` is the (n, F) payload (FeatureCoverage, or the similarity
+    kernel input for ``objective="fl"``); ``sim`` a precomputed (n, n)
+    similarity instead.  Everything execution-level rides ``config``.
+    """
+    cfg = config or RunConfig()
+    if cfg.scheduler != "sync":
+        cfg = dataclasses.replace(cfg, scheduler="sync")
+    svc = SummarizeService(cfg)
+    req = SummarizeRequest(
+        k=k, key=key, features=features, sim=sim, objective=objective,
+        phi=phi, kernel=kernel, use_ss=use_ss,
+    )
+    return svc.run([req])[0]

@@ -284,6 +284,7 @@ def greedy_batched(
     backend: "str | Backend | None" = None,
     state: Array | None = None,
     compact: "bool | int | None" = None,
+    on_step: "StepCallback | None" = None,
 ) -> GreedyResult:
     """Exact greedy for B same-shape queries as **one** compiled loop.
 
@@ -301,6 +302,16 @@ def greedy_batched(
     bucket that fits — the compact-selection contract), False forces
     full-width, an int supplies a static shared live-count bound for tracer
     masks.
+
+    ``on_step`` opts into *streamed selection*: greedy is sequential per
+    step anyway, so instead of one ``lax.scan`` over k steps the loop runs
+    k launches of the same jit-compiled step and calls
+    ``on_step(step, selected (B,), gains (B,), ok (B,))`` after each commits
+    — the serving layer uses this to stream partial summaries back to
+    tickets while later steps still run.  Both paths execute the identical
+    per-step arithmetic (the scan body *is* the compiled step function), so
+    selections match the un-streamed call (tests/test_serve_async.py pins
+    this).  ``on_step`` requires concrete inputs (it is a host callback).
     """
     be = resolve_backend(backend)
     if alive is not None and alive.ndim != 2:
@@ -329,22 +340,25 @@ def greedy_batched(
                     )
                 bound = live_max
             size = selection_bucket(n, bound)
-    return _greedy_batched(fn, k, size, alive, state, be)
+    if on_step is None:
+        return _greedy_batched(fn, k, size, alive, state, be)
+    return _greedy_batched_stepped(fn, k, size, alive, state, be, on_step)
 
 
-@partial(jax.jit, static_argnames=("k", "size", "backend"))
-def _greedy_batched(
+# ``on_step(step_index, selected (B,), gains (B,), ok (B,))`` — arrays are
+# concrete; exhausted rows carry index 0 / gain 0 with ok=False.
+StepCallback = "Callable[[int, Array, Array, Array], None]"
+
+
+def _batched_frame(
     fn: SubmodularFunction,
-    k: int,
     size: int | None,
     alive: Array | None,
     state: Array | None,
-    backend: Backend,
-) -> GreedyResult:
-    """The batched selection loop: every per-step gains/argmax runs over the
-    whole (B, bucket) frame at once via the ``gains_batched`` backend
-    primitive — one argmax launch for the batch instead of B."""
-    be = backend
+) -> tuple[Array | None, Array, Array]:
+    """Shared prologue of both batched loops: the (B, slots) availability
+    frame, the compact candidate index map (None = ground index space), and
+    the stacked start state."""
     B = jax.tree.leaves(fn)[0].shape[0]
     n = jax.tree.map(lambda x: x[0], fn).n
     if alive is None:
@@ -361,30 +375,67 @@ def _greedy_batched(
     state0 = (
         jax.vmap(lambda f: f.empty_state())(fn) if state is None else state
     )
+    return cand_idx, avail0, state0
+
+
+def _batched_step(
+    fn: SubmodularFunction,
+    st,
+    avail: Array,
+    cand_idx: Array | None,
+    backend: Backend,
+):
+    """One committed batched greedy step — the scan body of
+    :func:`_greedy_batched` *and* the unit the streamed path launches k
+    times, so both paths run the identical arithmetic.  Returns
+    ``(state, avail, selected (B,), gains (B,), ok (B,))`` with exhausted
+    rows recording index 0 / gain 0."""
+    be = backend
+    B = avail.shape[0]
     rows = jnp.arange(B)
+    g = jnp.where(avail, be.gains_batched(fn, st, cand_idx), NEG)
+    vc = jnp.argmax(g, axis=1)                                    # (B,)
+    v = (
+        vc
+        if cand_idx is None
+        else jnp.take_along_axis(cand_idx, vc[:, None], axis=1)[:, 0]
+    )
+    ok = avail[rows, vc]
+    new_state = jax.vmap(lambda f, s, vv: f.add(s, vv))(fn, st, v)
+    st = jax.tree.map(
+        lambda a, b: jnp.where(
+            ok.reshape((B,) + (1,) * (a.ndim - 1)), a, b
+        ),
+        new_state,
+        st,
+    )
+    return (
+        st,
+        avail.at[rows, vc].set(False),
+        jnp.where(ok, v, 0),
+        jnp.where(ok, g[rows, vc], 0.0),
+        ok,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "size", "backend"))
+def _greedy_batched(
+    fn: SubmodularFunction,
+    k: int,
+    size: int | None,
+    alive: Array | None,
+    state: Array | None,
+    backend: Backend,
+) -> GreedyResult:
+    """The batched selection loop: every per-step gains/argmax runs over the
+    whole (B, bucket) frame at once via the ``gains_batched`` backend
+    primitive — one argmax launch for the batch instead of B."""
+    cand_idx, avail0, state0 = _batched_frame(fn, size, alive, state)
 
     def step(carry, _):
         st, avail = carry
-        g = jnp.where(avail, be.gains_batched(fn, st, cand_idx), NEG)
-        vc = jnp.argmax(g, axis=1)                                # (B,)
-        v = (
-            vc
-            if cand_idx is None
-            else jnp.take_along_axis(cand_idx, vc[:, None], axis=1)[:, 0]
-        )
-        ok = avail[rows, vc]
-        new_state = jax.vmap(lambda f, s, vv: f.add(s, vv))(fn, st, v)
-        st = jax.tree.map(
-            lambda a, b: jnp.where(
-                ok.reshape((B,) + (1,) * (a.ndim - 1)), a, b
-            ),
-            new_state,
-            st,
-        )
-        return (st, avail.at[rows, vc].set(False)), (
-            jnp.where(ok, v, 0),
-            jnp.where(ok, g[rows, vc], 0.0),
-        )
+        st, avail, v, g, _ = _batched_step(fn, st, avail, cand_idx, backend)
+        return (st, avail), (v, g)
 
     (final, _), (sel, gains) = jax.lax.scan(
         step, (state0, avail0), None, length=k
@@ -392,6 +443,50 @@ def _greedy_batched(
     value = jax.vmap(lambda f, s: f.value(s))(fn, final)
     return GreedyResult(
         sel.T.astype(jnp.int32), gains.T, value, final
+    )
+
+
+_batched_step_jit = partial(jax.jit, static_argnames=("backend",))(
+    _batched_step
+)
+
+
+@jax.jit
+def _batched_value(fn: SubmodularFunction, state) -> Array:
+    return jax.vmap(lambda f, s: f.value(s))(fn, state)
+
+
+def _greedy_batched_stepped(
+    fn: SubmodularFunction,
+    k: int,
+    size: int | None,
+    alive: Array | None,
+    state: Array | None,
+    backend: Backend,
+    on_step,
+) -> GreedyResult:
+    """Streamed batched greedy: k host-driven launches of the compiled
+    :func:`_batched_step`, emitting each committed step through ``on_step``
+    before the next one runs.  Greedy is sequential per step, so the extra
+    dispatches cost launch overhead only; the arithmetic — and therefore
+    the selections — are those of the ``lax.scan`` path."""
+    cand_idx, avail, st = _batched_frame(fn, size, alive, state)
+    sel, gains = [], []
+    for i in range(k):
+        st, avail, v, g, ok = _batched_step_jit(
+            fn, st, avail, cand_idx, backend
+        )
+        # Host-sync the committed step so the callback observes real values
+        # (the next launch proceeds immediately after).
+        v, g, ok = jax.block_until_ready((v, g, ok))
+        on_step(i, v, g, ok)
+        sel.append(v)
+        gains.append(g)
+    return GreedyResult(
+        jnp.stack(sel, axis=1).astype(jnp.int32),
+        jnp.stack(gains, axis=1),
+        _batched_value(fn, st),
+        st,
     )
 
 

@@ -1,6 +1,7 @@
 """Serving substrate: batched prefill/decode engine, SS-based KV-cache
-pruning for long contexts, and the micro-batched multi-query summarization
-service (repro.serve.summarize_service)."""
+pruning for long contexts, and the SLO-aware micro-batched multi-query
+summarization service (repro.serve.summarize_service).  The stable public
+surface is re-exported as ``repro.api``."""
 
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.kv_select import (
@@ -10,10 +11,14 @@ from repro.serve.kv_select import (
     select_positions_batched,
 )
 from repro.serve.summarize_service import (
+    DeadlineExceeded,
+    RunConfig,
     ServiceConfig,
+    ServiceOverloaded,
     SummarizeRequest,
     SummarizeResponse,
     SummarizeService,
+    Ticket,
     batch_buckets,
     summarize_batch,
 )

@@ -90,9 +90,28 @@ class Engine:
             n = n + 1
         return jnp.concatenate(outs, axis=1), cache
 
+    def prefill(self, tokens: Array, patches: Array | None = None):
+        """Run the prefill forward pass; returns (first-token logits, the
+        populated KV/recurrent cache).  Public so callers that manage their
+        own decode loop (e.g. the KV-pruning example) ride the engine's
+        compiled signatures instead of re-jitting ``models.prefill``."""
+        return self._prefill(self.params, tokens, patches)
+
     def decode_with_cache(self, tok, cache, cache_len, pos=None):
         """One raw decode step (used by the KV-pruning path)."""
         return self._decode(
             self.params, tok, cache, cache_len,
             cache_len if pos is None else pos,
+        )
+
+    def prune_kv(self, cache: dict, seq_len: int, key: Array, kv=None):
+        """Compact the KV cache to ``kv.budget`` representative positions
+        via submodular selection (the ``repro.api`` execution surface:
+        ``KVSelectConfig.run`` is a ``RunConfig``).  Returns
+        (new_cache, new_cache_len, kept positions) —
+        see :func:`repro.serve.kv_select.prune_cache`."""
+        from repro.serve.kv_select import KVSelectConfig, prune_cache
+
+        return prune_cache(
+            self.cfg, cache, seq_len, kv or KVSelectConfig(), key
         )

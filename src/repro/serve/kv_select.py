@@ -19,33 +19,59 @@ batch's rows are **one lane of the summarization service** — the same
 batched execution core (:func:`repro.serve.summarize_service.summarize_batch`,
 i.e. ``ss_sparsify_batched`` + ``greedy_batched``) that serves standalone
 summarization queries selects the kept positions for every row in one
-compiled loop.  ``KVSelectConfig.backend`` selects the execution backend
-("oracle" or "pallas"; the batched engine runs per-query ground sets, so
-the sharded backend — which owns the whole mesh — does not apply here).
+compiled loop.  Execution knobs (backend, SS ``r``/``c``) ride the unified
+``RunConfig`` (``KVSelectConfig.run``; the batched engine runs per-query
+ground sets, so only dense backends — oracle / pallas — apply here, and
+the default pins ``backend="oracle"``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import FacilityLocation, FeatureCoverage
+from repro.serve.summarize_service import RunConfig
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class KVSelectConfig:
+    """KV-pruning selection config.  Execution-level knobs live on ``run``
+    (the unified :class:`repro.api.RunConfig`); ``r``/``c``/``backend`` are
+    deprecated one-release aliases folded into ``run`` with a warning."""
+
     budget: int = 256          # positions kept
     objective: str = "coverage"  # coverage | fl
-    r: int = 8
-    c: float = 8.0
     use_ss: bool = True        # False: greedy on the full ground set (ablation)
-    backend: str = "oracle"    # execution backend (repro.core.backend); the
-    #                            batched engine runs per-query ground sets, so
-    #                            only dense backends (oracle / pallas) apply
+    run: RunConfig = dataclasses.field(
+        default_factory=lambda: RunConfig(backend="oracle")
+    )
+    # Deprecated pre-RunConfig spellings (None = unset):
+    r: int | None = None
+    c: float | None = None
+    backend: str | None = None
+
+    def __post_init__(self):
+        legacy = {
+            name: getattr(self, name)
+            for name in ("r", "c", "backend")
+            if getattr(self, name) is not None
+        }
+        if legacy:
+            warnings.warn(
+                "KVSelectConfig(r=..., c=..., backend=...) is deprecated; "
+                "pass run=RunConfig(...) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(
+                self, "run", dataclasses.replace(self.run, **legacy)
+            )
 
 
 def pooled_keys(cache: dict, seq_len: int) -> Array:
@@ -90,9 +116,10 @@ def select_positions_batched(
     from repro.serve.summarize_service import summarize_batch
 
     fn = _batch_objective(feats, kv)
+    run = kv.run
     res, _ = summarize_batch(
-        fn, kv.budget, keys, r=kv.r, c=kv.c, use_ss=kv.use_ss,
-        backend=kv.backend,
+        fn, kv.budget, keys, r=run.r, c=run.c, use_ss=kv.use_ss,
+        backend=run.backend, compact=run.compact,
     )
     return jnp.sort(res.selected, axis=1)
 

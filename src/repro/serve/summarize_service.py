@@ -1,32 +1,54 @@
 """Micro-batched multi-query summarization service: the request-level layer
-over SS + greedy.
+over SS + greedy, with an SLO-aware asynchronous scheduler.
 
 Every caller so far invoked ``ss_sparsify``/``greedy`` one ground set at a
 time.  This module is the serving engine the ROADMAP north star asks for: it
 accepts per-query requests (a feature or similarity payload, a budget k, an
-objective config, a per-query PRNG key), admits them into a queue,
-micro-batches compatible queries into **bucketed static shapes** — the
-``bucket_schedule`` idea applied to the batch dimension (and optionally the
-ground-set dimension), so each (n, B-bucket, k) signature compiles once and
-stays warm — and executes the full SS → compact-greedy pipeline for the
-whole batch as one compiled loop via the first-class batched entry points
-``ss_sparsify_batched`` / ``greedy_batched`` (repro.core).
+objective config, a per-query PRNG key, an optional latency deadline),
+admits them into per-lane queues, micro-batches compatible queries into
+**bucketed static shapes** — the ``bucket_schedule`` idea applied to the
+batch dimension (and optionally the ground-set dimension), so each
+(n, B-bucket, k) signature compiles once and stays warm — and executes the
+full SS → compact-greedy pipeline for the whole batch as one compiled loop
+via the first-class batched entry points ``ss_sparsify_batched`` /
+``greedy_batched`` (repro.core).
 
-Correctness contract: micro-batching is a pure execution strategy.  Each
-query's ``selected`` / ``gains`` / ``value`` (and SS ``vprime`` /
-``eps_hat``) are *identical* to a sequential single-query
-``ss_sparsify(fn, key)`` + ``greedy(fn, k, alive=vprime)`` run under the
-same per-query key — regardless of which queries it was batched with, the
-batch bucket padding, or mixed n / k in the same flush
-(tests/test_serve_service.py pins this query-for-query).
+Scheduling (PR 7): with ``RunConfig(scheduler="async")`` a background
+flusher owns execution — the caller never calls ``flush()``.  A lane fires
+when it is **full** (``max_batch`` queued), when a queued request's
+**deadline slack** runs out (absolute deadline minus the lane's EWMA
+execution estimate minus ``slack_s``), or when the oldest request has
+waited **max_wait_s** — whichever comes first.  Between firings the flusher
+sleeps on a condition variable; an empty-queue tick is a no-op.  Batching
+is *continuous*: the flusher pulls at most ``max_batch`` requests from the
+head of one lane per firing, so arrivals during an in-flight batch refill
+the next bucket instead of waiting for a whole-queue drain.  The default
+``scheduler="sync"`` keeps the PR-5 contract surface: admission policy
+belongs to the caller, ``flush()`` drains everything queued.
+
+Correctness contract (unchanged): micro-batching — and now scheduling — is
+a pure execution strategy.  Each query's ``selected`` / ``gains`` /
+``value`` (and SS ``vprime`` / ``eps_hat``) are *identical* to a sequential
+single-query ``ss_sparsify(fn, key)`` + ``greedy(fn, k, alive=vprime)`` run
+under the same per-query key — regardless of which queries it was batched
+with, the batch bucket padding, mixed n / k in the same flush, or which
+trigger fired the batch (tests/test_serve_service.py and
+tests/test_serve_async.py pin this query-for-query).
+
+Failure isolation: :class:`Ticket` is a real future — ``result(timeout)`` /
+``done()`` / ``exception()`` — and captures per-request errors, so a
+malformed or already-expired request fails its own ticket at admission
+instead of aborting the flush that would have carried it; an execution
+error fails only the tickets of the chunk that raised.
 
 Accounting: the service tracks queue delay per query (submit → execution
-start), per-batch execution wall time, and padding waste (slots burned
-rounding a lane chunk up to its batch bucket) — the numbers a capacity
-planner needs to tune ``max_batch`` against traffic.
+start), per-batch execution wall time, padding waste (slots burned rounding
+a lane chunk up to its batch bucket), firing-trigger counts, and missed
+deadlines — the numbers a capacity planner needs to tune ``max_batch`` /
+``max_wait_s`` against traffic.
 
-Optional ground-set padding (``ServiceConfig.n_buckets``): queries whose n
-is not in the bucket list are zero-padded up to the next bucket with the
+Optional ground-set padding (``RunConfig.n_buckets``): queries whose n is
+not in the bucket list are zero-padded up to the next bucket with the
 padding rows dead-masked, collapsing many distinct-n compile signatures
 into a few.  Padding changes the PRNG frame of SS (an (n_bucket,) Gumbel
 draw), so a padded query matches the sequential run *on the padded ground
@@ -38,7 +60,9 @@ either way: dead rows can never win an argmax.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import warnings
 from typing import Any
 
 import jax
@@ -59,6 +83,88 @@ from repro.core import (
 Array = jax.Array
 
 
+class DeadlineExceeded(RuntimeError):
+    """The request's latency budget was already spent at admission."""
+
+
+class ServiceOverloaded(RuntimeError):
+    """Backpressure: the service's pending-queue cap was hit at admission."""
+
+
+# ------------------------------------------------------------- run config ----
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """The one end-to-end execution config (stable surface: ``repro.api``).
+
+    Consolidates what used to be scattered across ``ServiceConfig``,
+    ``ss_sparsify`` kwargs, and ``greedy`` kwargs — per-query knobs
+    (payload, k, key, objective, deadline) stay on the request.
+
+    Execution: ``backend`` selects the repro.core.backend (None = env
+    default); ``compact`` is the compact-selection policy threaded to
+    ``greedy_batched`` (None = auto: the static SS live bound).  SS:
+    probe multiplier ``r``, accuracy/speed ``c``.  ``eps`` is the
+    stochastic-greedy sample-size parameter used by facade helpers that
+    select stochastically.
+
+    Batching: ``max_batch`` caps a micro-batch; ``batch_c`` shapes the
+    B-bucket schedule; ``n_buckets`` opts into ground-set padding.
+
+    Scheduling: ``scheduler`` is ``"sync"`` (manual ``flush()``, the PR-5
+    contract) or ``"async"`` (background deadline-driven flusher);
+    ``max_wait_s`` bounds how long an admitted request may sit queued
+    before its lane fires anyway; ``slack_s`` is extra safety margin
+    subtracted from deadlines when scheduling; ``max_pending`` (None =
+    unbounded) is the admission backpressure cap; ``stream_steps`` streams
+    greedy selections back to tickets step-by-step as they commit.
+    """
+
+    backend: Any = None             # str | Backend | None (repro.core.backend)
+    r: int = 8                      # SS probe multiplier
+    c: float = 8.0                  # SS accuracy/speed tradeoff
+    eps: float = 0.1                # stochastic-greedy sample-size parameter
+    compact: "bool | int | None" = None   # compact-selection policy
+    max_batch: int = 8              # admission cap per micro-batch
+    batch_c: float = 4.0            # B-bucket shrink factor (buckets =
+    #                                 bucket_schedule(max_batch, batch_c, 1))
+    n_buckets: tuple[int, ...] | None = None  # opt-in ground-set padding
+    scheduler: str = "sync"         # "sync" | "async"
+    max_wait_s: float = 0.05        # max queue residency before a lane fires
+    slack_s: float = 0.0            # safety margin under deadlines
+    max_pending: int | None = None  # admission backpressure cap
+    stream_steps: bool = False      # stream greedy steps to tickets
+
+    def __post_init__(self):
+        if self.scheduler not in ("sync", "async"):
+            raise ValueError(
+                f"scheduler must be 'sync' or 'async'; got {self.scheduler!r}"
+            )
+
+
+def ServiceConfig(**kwargs) -> RunConfig:  # noqa: N802 - legacy class name
+    """Deprecated alias for :class:`RunConfig` (one-release warning).
+
+    The PR-5 spelling ``ServiceConfig(backend=..., max_batch=...)`` maps
+    field-for-field onto ``RunConfig``.
+    """
+    warnings.warn(
+        "ServiceConfig is deprecated; use repro.api.RunConfig "
+        "(same field names)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return RunConfig(**kwargs)
+
+
+def batch_buckets(max_batch: int, c: float = 4.0) -> tuple[int, ...]:
+    """Static batch-dimension buckets — ``bucket_schedule`` applied to B
+    (tile=1: the batch axis needs no kernel-grid alignment).  A lane chunk
+    of j queries pads up to the smallest bucket >= j, so each (lane,
+    B-bucket) signature compiles once and stays warm."""
+    return bucket_schedule(max_batch, c, tile=1)
+
+
 # ----------------------------------------------------------- request API ----
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +176,12 @@ class SummarizeRequest:
     ``objective="fl"``).  ``sim`` passes a precomputed (n, n) similarity for
     ``objective="fl"`` instead.  ``key`` is the query's PRNG key (an int seed
     is accepted); ``use_ss=False`` skips SS and greedy-selects on the full
-    ground set.
+    ground set.  ``deadline_s`` is the request's latency budget in seconds
+    from submission: the async flusher fires the lane early enough (minus
+    the lane's execution estimate and ``RunConfig.slack_s``) to try to make
+    it; a budget that is already <= 0 at admission fails the ticket with
+    :class:`DeadlineExceeded`, and a missed-but-served deadline is reported
+    via ``SummarizeResponse.deadline_missed`` rather than dropped.
     """
 
     k: int
@@ -81,6 +192,7 @@ class SummarizeRequest:
     phi: str = "sqrt"               # FeatureCoverage concave transform
     kernel: str = "cosine"          # FacilityLocation feature kernel
     use_ss: bool = True
+    deadline_s: float | None = None  # latency budget from submit (seconds)
 
     def prng_key(self) -> Array:
         if isinstance(self.key, int):
@@ -96,7 +208,10 @@ class SummarizeResponse:
     pipeline under the same key.  ``queue_delay_s`` is submit → execution
     start; ``exec_s`` the wall time of the micro-batch this query rode in
     (shared by its batch mates); ``batch_size``/``batch_bucket`` how full
-    that batch was vs its padded static shape.
+    that batch was vs its padded static shape.  ``trigger`` names what fired
+    the batch (``manual`` / ``full`` / ``deadline`` / ``max_wait`` /
+    ``drain``); ``deadline_missed`` is None when the request carried no
+    deadline, else whether the batch finished past it.
     """
 
     selected: Array                 # (k,) int32 ground indices
@@ -110,27 +225,8 @@ class SummarizeResponse:
     batch_bucket: int               # padded static batch dimension
     queue_delay_s: float
     exec_s: float
-
-
-@dataclasses.dataclass(frozen=True)
-class ServiceConfig:
-    """Service-level knobs (per-query knobs live on the request)."""
-
-    backend: Any = None             # str | Backend | None (repro.core.backend)
-    r: int = 8                      # SS probe multiplier
-    c: float = 8.0                  # SS accuracy/speed tradeoff
-    max_batch: int = 8              # admission cap per micro-batch
-    batch_c: float = 4.0            # B-bucket shrink factor (buckets =
-    #                                 bucket_schedule(max_batch, batch_c, 1))
-    n_buckets: tuple[int, ...] | None = None  # opt-in ground-set padding
-
-
-def batch_buckets(max_batch: int, c: float = 4.0) -> tuple[int, ...]:
-    """Static batch-dimension buckets — ``bucket_schedule`` applied to B
-    (tile=1: the batch axis needs no kernel-grid alignment).  A lane chunk
-    of j queries pads up to the smallest bucket >= j, so each (lane,
-    B-bucket) signature compiles once and stays warm."""
-    return bucket_schedule(max_batch, c, tile=1)
+    trigger: str = "manual"         # what fired this micro-batch
+    deadline_missed: bool | None = None
 
 
 # ------------------------------------------------------- functional core ----
@@ -205,67 +301,161 @@ def summarize_batch(
     use_ss: bool = True,
     alive: Array | None = None,
     backend=None,
+    compact: "bool | int | None" = None,
+    on_step=None,
 ) -> tuple[GreedyResult, SSResult | None]:
     """The service's execution core: batched SS → batched compact greedy on
     a stacked objective.  Row b is identical to the sequential single-query
     pipeline under ``keys[b]``.  Shared with the KV-cache pruning path
-    (repro.serve.kv_select), which feeds it one lane per decode batch."""
+    (repro.serve.kv_select), which feeds it one lane per decode batch.
+    ``compact`` = None auto-derives the static SS live bound (the tracer-
+    safe default); ``on_step`` streams greedy steps (see
+    :func:`repro.core.greedy_batched`)."""
     be = resolve_backend(backend)
     ss = None
     sel_alive = alive
-    compact: "bool | int | None" = None
     if use_ss:
         ss = ss_sparsify_batched(fn, keys, r=r, c=c, alive=alive, backend=be)
         sel_alive = ss.vprime
-        # Static O(log² n) bound on |V'|: with a concrete mask the engine
-        # still host-reads the exact live count, but under jit/vmap (tracer
-        # vprime — e.g. a compiled decode loop pruning its KV cache) this
-        # keeps the post-SS greedy on the compact path instead of silently
-        # degrading to full-width O(n) steps.
-        n = jax.tree.map(lambda x: x[0], fn).n
-        compact = ss_live_bound(n, r, c)
-    res = greedy_batched(fn, k, alive=sel_alive, backend=be, compact=compact)
+        if compact is None:
+            # Static O(log² n) bound on |V'|: with a concrete mask the engine
+            # still host-reads the exact live count, but under jit/vmap
+            # (tracer vprime — e.g. a compiled decode loop pruning its KV
+            # cache) this keeps the post-SS greedy on the compact path
+            # instead of silently degrading to full-width O(n) steps.
+            n = jax.tree.map(lambda x: x[0], fn).n
+            compact = ss_live_bound(n, r, c)
+    res = greedy_batched(
+        fn, k, alive=sel_alive, backend=be, compact=compact, on_step=on_step
+    )
     return res, ss
+
+
+# ------------------------------------------------------------ the ticket ----
+
+class Ticket:
+    """Future-style handle returned by :meth:`SummarizeService.submit`.
+
+    ``result(timeout=None)`` blocks until the scheduler executes the query
+    and returns its :class:`SummarizeResponse` — or re-raises the error
+    captured for *this* request (admission failures like
+    :class:`DeadlineExceeded` / a malformed payload, or the execution error
+    of the chunk it rode in).  ``done()`` / ``exception()`` mirror
+    ``concurrent.futures.Future``.  With ``RunConfig.stream_steps`` the
+    committed greedy prefix is readable mid-flight via :meth:`partial`.
+    """
+
+    __slots__ = (
+        "index", "_submit_t", "_deadline_t", "_event", "_response", "_error",
+        "_steps",
+    )
+
+    def __init__(self, index: int, submit_t: float,
+                 deadline_t: float | None = None):
+        self.index = index
+        self._submit_t = submit_t
+        self._deadline_t = deadline_t
+        self._event = threading.Event()
+        self._response: SummarizeResponse | None = None
+        self._error: BaseException | None = None
+        self._steps: list[tuple[int, float]] = []
+
+    def done(self) -> bool:
+        """True once the ticket holds a response or a captured error."""
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> SummarizeResponse:
+        """Block until resolved; returns the response or re-raises the
+        captured per-request error.  Raises TimeoutError if ``timeout``
+        elapses first (the query stays in flight)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"ticket {self.index} unresolved after {timeout}s"
+            )
+        if self._error is not None:
+            raise self._error
+        return self._response
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        """The captured error (None on success); blocks like ``result``."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"ticket {self.index} unresolved after {timeout}s"
+            )
+        return self._error
+
+    def partial(self) -> list[tuple[int, float]]:
+        """Committed (ground index, gain) greedy steps streamed so far —
+        populated mid-execution when ``RunConfig.stream_steps`` is on, and
+        always consistent with the final ``selected``/``gains`` prefix."""
+        return list(self._steps)
+
+    def _fulfill(self, response: SummarizeResponse) -> None:
+        self._response = response
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+
+@dataclasses.dataclass
+class _QueueItem:
+    ticket: Ticket
+    request: SummarizeRequest
+    lane: tuple
+    submit_t: float
+    deadline_t: float | None
 
 
 # ------------------------------------------------------------ the service ----
 
-class Ticket:
-    """Handle returned by :meth:`SummarizeService.submit`; ``result`` is
-    populated by the flush that executes the query."""
-
-    __slots__ = ("index", "result", "_submit_t")
-
-    def __init__(self, index: int, submit_t: float):
-        self.index = index
-        self.result: SummarizeResponse | None = None
-        self._submit_t = submit_t
-
-    @property
-    def done(self) -> bool:
-        return self.result is not None
-
-
 class SummarizeService:
     """Queue-fed micro-batching engine over :func:`summarize_batch`.
 
-    ``submit`` enqueues a request and returns a :class:`Ticket`; ``flush``
-    drains the queue — grouping queries by *lane* (the static compile
-    signature: ground-set size, payload shape, k, objective config, use_ss),
-    chunking each lane at ``max_batch``, padding each chunk up to its batch
-    bucket (padding rows repeat row 0 and are discarded) — and executes one
-    batched pipeline per chunk.  ``run`` is submit-all + flush.
+    ``submit`` admits a request and returns a :class:`Ticket` future.  With
+    the default ``RunConfig(scheduler="sync")`` execution happens on
+    ``flush()`` — the queue is drained, queries grouped by *lane* (the
+    static compile signature: ground-set size, payload shape, k, objective
+    config, use_ss), chunked at ``max_batch``, each chunk padded up to its
+    batch bucket (padding rows repeat row 0 and are discarded) and executed
+    as one batched pipeline.
 
-    The service is deliberately synchronous: admission policy (when to
-    flush) belongs to the caller's event loop; everything below — lane
-    formation, bucketing, padding accounting, warm compile caches — lives
-    here.
+    With ``scheduler="async"`` a daemon flusher thread owns execution: lanes
+    fire on (full ∨ deadline-slack ∨ max-wait), continuous batching pulls at
+    most ``max_batch`` from a lane's head per firing so arrivals refill the
+    next bucket while a batch is in flight, and ``drain()`` force-fires the
+    backlog and blocks until every outstanding ticket resolves.  ``run`` is
+    submit-all + drain on either scheduler.  The service is a context
+    manager: leaving the ``with`` block drains and stops the flusher.
     """
 
-    def __init__(self, config: ServiceConfig = ServiceConfig()):
+    def __init__(self, config: RunConfig | None = None, **legacy_kwargs):
+        if config is None:
+            config = RunConfig()
+        if not isinstance(config, RunConfig):
+            raise TypeError(
+                f"SummarizeService takes a RunConfig; got {type(config)!r}"
+            )
+        if legacy_kwargs:
+            warnings.warn(
+                "passing ServiceConfig-style kwargs to SummarizeService is "
+                "deprecated; use SummarizeService(RunConfig(...))",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = dataclasses.replace(config, **legacy_kwargs)
         self.config = config
-        self._queue: list[tuple[Ticket, SummarizeRequest]] = []
         self._buckets = batch_buckets(config.max_batch, config.batch_c)
+        self._cond = threading.Condition()
+        self._lanes: dict[tuple, list[_QueueItem]] = {}
+        self._pending = 0               # queued, not yet executing
+        self._outstanding = 0           # queued or executing
+        self._exec_est: dict[tuple, float] = {}
+        self._drain_requested = False
+        self._stop = False
+        self._thread: threading.Thread | None = None
+        self._n_submitted = 0
         self._stats = {
             "queries": 0,
             "batches": 0,
@@ -275,12 +465,79 @@ class SummarizeService:
             "queue_delay_s_max": 0.0,
             "exec_s_sum": 0.0,
             "lanes": set(),
+            "triggers": {},
+            "deadlines_missed": 0,
+            "failed": 0,
         }
+        if config.scheduler == "async":
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        """Start the background flusher (idempotent; async scheduler only)."""
+        if self.config.scheduler != "async":
+            raise RuntimeError("start() requires RunConfig(scheduler='async')")
+        if self._thread is not None:
+            return
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._flusher, name="summarize-flusher", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Drain outstanding work, then stop the flusher thread."""
+        if self._thread is None:
+            return
+        self.drain()
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "SummarizeService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
     # -- admission ---------------------------------------------------------
     def submit(self, request: SummarizeRequest) -> Ticket:
-        ticket = Ticket(len(self._queue), time.perf_counter())
-        self._queue.append((ticket, request))
+        """Admit one request.  Admission failures — malformed payload, an
+        already-spent deadline, queue backpressure — fail the returned
+        ticket immediately instead of raising, so one bad request never
+        blocks its batch mates."""
+        now = time.perf_counter()
+        deadline_t = (
+            None if request.deadline_s is None else now + request.deadline_s
+        )
+        ticket = Ticket(self._n_submitted, now, deadline_t)
+        self._n_submitted += 1
+        try:
+            lane = self._lane(request)
+            if request.deadline_s is not None and request.deadline_s <= 0:
+                raise DeadlineExceeded(
+                    f"deadline_s={request.deadline_s} already spent at "
+                    "admission"
+                )
+            with self._cond:
+                cap = self.config.max_pending
+                if cap is not None and self._pending >= cap:
+                    raise ServiceOverloaded(
+                        f"{self._pending} requests pending >= "
+                        f"max_pending={cap}"
+                    )
+                self._lanes.setdefault(lane, []).append(
+                    _QueueItem(ticket, request, lane, now, deadline_t)
+                )
+                self._pending += 1
+                self._outstanding += 1
+                self._cond.notify_all()
+        except Exception as e:  # noqa: BLE001 - captured on the ticket
+            with self._cond:
+                self._stats["failed"] += 1
+            ticket._fail(e)
         return ticket
 
     def _lane(self, req: SummarizeRequest) -> tuple:
@@ -307,29 +564,138 @@ class SummarizeService:
             req.use_ss, n_pad,
         )
 
-    # -- execution ---------------------------------------------------------
-    def flush(self) -> list[SummarizeResponse]:
-        """Drain the queue; returns responses in submission order."""
-        pending, self._queue = self._queue, []
-        lanes: dict[tuple, list[tuple[Ticket, SummarizeRequest]]] = {}
-        for ticket, req in pending:
-            lanes.setdefault(self._lane(req), []).append((ticket, req))
+    # -- scheduling --------------------------------------------------------
+    def _next_fire(self, now: float):
+        """The flusher's policy: the most urgent (lane, fire time, trigger)
+        among non-empty lanes, or (None, None, None) on an empty queue.
 
+        A lane fires *now* when full (``max_batch`` queued) or when a drain
+        was requested; otherwise at the earlier of (oldest submit +
+        ``max_wait_s``) and, per queued deadline, (deadline − lane EWMA
+        execution estimate − ``slack_s``).  Must be called with the lock
+        held."""
+        best = (None, None, None)
+        for lane, items in self._lanes.items():
+            if not items:
+                continue
+            if len(items) >= self.config.max_batch:
+                return lane, now, "full"
+            if self._drain_requested:
+                return lane, now, "drain"
+            fire_t = items[0].submit_t + self.config.max_wait_s
+            trigger = "max_wait"
+            est = self._exec_est.get(lane, 0.0)
+            for it in items:
+                if it.deadline_t is None:
+                    continue
+                t = it.deadline_t - est - self.config.slack_s
+                if t < fire_t:
+                    fire_t, trigger = t, "deadline"
+            if best[0] is None or fire_t < best[1]:
+                best = (lane, fire_t, trigger)
+        return best
+
+    def _flusher(self) -> None:
+        """Background consumer loop (async scheduler): sleep until the next
+        firing time, pull ≤ max_batch from the fired lane's head, execute,
+        repeat — submissions during execution land in the lane queues and
+        refill the next bucket (continuous batching)."""
+        while True:
+            with self._cond:
+                if self._stop:
+                    return
+                now = time.perf_counter()
+                lane, fire_t, trigger = self._next_fire(now)
+                if lane is None:
+                    if self._drain_requested:
+                        # Queue is empty: the drain is satisfied once
+                        # in-flight work lands (tracked by _outstanding).
+                        self._drain_requested = False
+                        self._cond.notify_all()
+                    self._cond.wait()
+                    continue
+                if fire_t > now:
+                    self._cond.wait(timeout=fire_t - now)
+                    continue
+                items = self._lanes[lane][: self.config.max_batch]
+                del self._lanes[lane][: self.config.max_batch]
+                self._pending -= len(items)
+            self._run_chunk(lane, items, trigger)
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Force-fire everything queued and block until every admitted
+        ticket has resolved.  On the sync scheduler this is ``flush()``."""
+        if self._thread is None:
+            self.flush(trigger="drain")
+            return
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            self._drain_requested = True
+            self._cond.notify_all()
+            while self._outstanding > 0:
+                left = (
+                    None if deadline is None
+                    else deadline - time.perf_counter()
+                )
+                if left is not None and left <= 0:
+                    raise TimeoutError(
+                        f"{self._outstanding} tickets unresolved after drain "
+                        f"timeout {timeout}s"
+                    )
+                self._cond.wait(timeout=left)
+
+    # -- execution ---------------------------------------------------------
+    def flush(self, trigger: str = "manual") -> list[SummarizeResponse | None]:
+        """Synchronously drain everything queued now (sync scheduler's
+        execution entry; also usable while the async flusher is stopped).
+        Returns responses in submission order — entries are None for
+        tickets whose chunk failed (the error lives on the ticket)."""
+        with self._cond:
+            pending: list[_QueueItem] = []
+            for items in self._lanes.values():
+                pending.extend(items)
+            self._lanes = {}
+            self._pending -= len(pending)
+        pending.sort(key=lambda it: it.ticket.index)
+        lanes: dict[tuple, list[_QueueItem]] = {}
+        for it in pending:
+            lanes.setdefault(it.lane, []).append(it)
         for lane, items in lanes.items():
             for lo in range(0, len(items), self.config.max_batch):
-                self._run_chunk(lane, items[lo: lo + self.config.max_batch])
-        return [t.result for t, _ in pending]
+                self._run_chunk(
+                    lane, items[lo: lo + self.config.max_batch], trigger
+                )
+        return [it.ticket._response for it in pending]
 
-    def run(self, requests: list[SummarizeRequest]) -> list[SummarizeResponse]:
+    def run(
+        self, requests: list[SummarizeRequest]
+    ) -> list[SummarizeResponse]:
+        """Convenience wrapper: submit everything, drain, and return the
+        responses in request order — re-raising the first captured
+        per-request error, if any (read the tickets individually via
+        ``submit`` to handle partial failure)."""
         tickets = [self.submit(r) for r in requests]
-        self.flush()
-        return [t.result for t in tickets]
+        self.drain()
+        return [t.result(timeout=0) for t in tickets]
 
     def _run_chunk(
-        self, lane: tuple, items: list[tuple[Ticket, SummarizeRequest]]
+        self, lane: tuple, items: list[_QueueItem], trigger: str
+    ) -> None:
+        try:
+            self._exec_chunk(lane, items, trigger)
+        except Exception as e:  # noqa: BLE001 - captured on the tickets
+            with self._cond:
+                self._stats["failed"] += len(items)
+                self._outstanding -= len(items)
+                self._cond.notify_all()
+            for it in items:
+                it.ticket._fail(e)
+
+    def _exec_chunk(
+        self, lane: tuple, items: list[_QueueItem], trigger: str
     ) -> None:
         cfg = self.config
-        reqs = [r for _, r in items]
+        reqs = [it.request for it in items]
         n_real = len(reqs)
         bucket = min(b for b in self._buckets if b >= n_real)
         # Pad the batch dimension by repeating row 0 (results discarded) so
@@ -337,12 +703,19 @@ class SummarizeService:
         padded = reqs + [reqs[0]] * (bucket - n_real)
         _, _, _, k, _, _, use_ss, n_pad = lane
 
+        on_step = None
+        if cfg.stream_steps:
+            def on_step(step, v, g, ok):
+                for i, it in enumerate(items):
+                    if bool(ok[i]):
+                        it.ticket._steps.append((int(v[i]), float(g[i])))
+
         t_start = time.perf_counter()
         fn, alive = build_batch_objective(padded, n_pad)
         keys = jnp.stack([r.prng_key() for r in padded])
         res, ss = summarize_batch(
             fn, k, keys, r=cfg.r, c=cfg.c, use_ss=use_ss, alive=alive,
-            backend=cfg.backend,
+            backend=cfg.backend, compact=cfg.compact, on_step=on_step,
         )
         jax.block_until_ready(res.value)
         t_end = time.perf_counter()
@@ -351,18 +724,14 @@ class SummarizeService:
         vp_sizes = (
             None if ss is None else jnp.sum(ss.vprime, axis=1)
         )
-        st = self._stats
-        st["batches"] += 1
-        st["queries"] += n_real
-        st["slots"] += bucket
-        st["padded_slots"] += bucket - n_real
-        st["exec_s_sum"] += exec_s
-        st["lanes"].add((lane, bucket))
-        for i, (ticket, _) in enumerate(items):
-            delay = t_start - ticket._submit_t
-            st["queue_delay_s_sum"] += delay
-            st["queue_delay_s_max"] = max(st["queue_delay_s_max"], delay)
-            ticket.result = SummarizeResponse(
+        responses = []
+        missed = 0
+        for i, it in enumerate(items):
+            deadline_missed = (
+                None if it.deadline_t is None else t_end > it.deadline_t
+            )
+            missed += bool(deadline_missed)
+            responses.append(SummarizeResponse(
                 selected=res.selected[i],
                 gains=res.gains[i],
                 value=float(res.value[i]),
@@ -372,16 +741,49 @@ class SummarizeService:
                 lane=lane,
                 batch_size=n_real,
                 batch_bucket=bucket,
-                queue_delay_s=delay,
+                queue_delay_s=t_start - it.submit_t,
                 exec_s=exec_s,
+                trigger=trigger,
+                deadline_missed=deadline_missed,
+            ))
+        with self._cond:
+            st = self._stats
+            st["batches"] += 1
+            st["queries"] += n_real
+            st["slots"] += bucket
+            st["padded_slots"] += bucket - n_real
+            st["exec_s_sum"] += exec_s
+            st["lanes"].add((lane, bucket))
+            st["triggers"][trigger] = st["triggers"].get(trigger, 0) + 1
+            st["deadlines_missed"] += missed
+            for resp in responses:
+                st["queue_delay_s_sum"] += resp.queue_delay_s
+                st["queue_delay_s_max"] = max(
+                    st["queue_delay_s_max"], resp.queue_delay_s
+                )
+            # EWMA execution estimate drives the deadline-slack trigger; the
+            # first sample seeds it (before that the estimate is 0 — a
+            # deadline shorter than the first compile is simply served late
+            # and flagged, never dropped).
+            prev = self._exec_est.get(lane)
+            self._exec_est[lane] = (
+                exec_s if prev is None else 0.5 * prev + 0.5 * exec_s
             )
+            self._outstanding -= len(items)
+            self._cond.notify_all()
+        for it, resp in zip(items, responses):
+            it.ticket._fulfill(resp)
 
     # -- accounting --------------------------------------------------------
     def stats(self) -> dict:
         """Aggregate serving counters: query/batch totals, padding waste
         (fraction of executed slots burned on bucket padding), queue-delay
-        mean/max, and the number of distinct compiled signatures."""
-        st = self._stats
+        mean/max, distinct compiled signatures, firing-trigger counts,
+        missed deadlines, and failed (admission- or execution-errored)
+        tickets."""
+        with self._cond:
+            st = dict(self._stats)
+            st["triggers"] = dict(self._stats["triggers"])
         q = max(st["queries"], 1)
         return {
             "queries": st["queries"],
@@ -391,4 +793,7 @@ class SummarizeService:
             "queue_delay_s_max": st["queue_delay_s_max"],
             "exec_s_total": st["exec_s_sum"],
             "compiled_signatures": len(st["lanes"]),
+            "triggers": st["triggers"],
+            "deadlines_missed": st["deadlines_missed"],
+            "failed": st["failed"],
         }

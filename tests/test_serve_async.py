@@ -1,0 +1,362 @@
+"""SLO-aware async scheduler, Ticket futures, streamed selection, and the
+``repro.api`` facade (PR 7).
+
+Contracts under test (docs/serving.md "Scheduler"):
+
+- scheduling is a pure execution strategy: async-scheduled responses are
+  query-for-query identical to the sequential single-query pipeline under
+  the same keys, whatever trigger fired the batch;
+- deadline edges: a request whose budget is already spent fails its own
+  ticket at admission; a deadline shorter than the first compile is served
+  late and flagged (never dropped); a flusher tick with an empty queue is a
+  no-op; continuous batching refills buckets mid-flight;
+- Ticket is a real future (``result(timeout)`` / ``done()`` /
+  ``exception()``) with per-request error capture — one malformed request
+  fails alone;
+- the ``RunConfig`` facade threads end-to-end and the old spellings warn.
+"""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import FeatureCoverage, greedy, greedy_batched, ss_sparsify
+from repro.data import news_day
+from repro.serve import (
+    DeadlineExceeded,
+    RunConfig,
+    ServiceOverloaded,
+    SummarizeRequest,
+    SummarizeService,
+)
+
+
+def req(i, n=128, F=24, k=4, **kw):
+    return SummarizeRequest(
+        k=k, key=i, features=jnp.asarray(news_day(i, n, F)), **kw
+    )
+
+
+def assert_matches_sequential(request, resp):
+    fn = FeatureCoverage(W=jnp.asarray(request.features), phi="sqrt")
+    ss = ss_sparsify(fn, request.prng_key())
+    ref = greedy(fn, request.k, alive=ss.vprime)
+    assert (np.asarray(resp.selected) == np.asarray(ref.selected)).all()
+    np.testing.assert_allclose(
+        np.asarray(resp.gains), np.asarray(ref.gains), rtol=1e-5, atol=1e-6
+    )
+
+
+# ------------------------------------------------------------ ticket future --
+def test_ticket_future_api():
+    svc = SummarizeService(RunConfig(max_batch=2))
+    t = svc.submit(req(0))
+    assert not t.done()
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0)
+    svc.flush()
+    assert t.done() and t.exception() is None
+    assert_matches_sequential(req(0), t.result(timeout=0))
+
+
+def test_malformed_request_fails_own_ticket():
+    """Per-request error capture: the payload-less request fails its own
+    ticket at admission — it never occupies a queue slot, and its batch
+    mates complete untouched."""
+    svc = SummarizeService(RunConfig(max_batch=4))
+    good = svc.submit(req(1))
+    bad = svc.submit(SummarizeRequest(k=4, key=2))        # no payload
+    assert bad.done() and not good.done()                 # failed at admission
+    out = svc.flush()
+    assert len(out) == 1 and out[0] is not None           # only the good one
+    with pytest.raises(ValueError, match="payload"):
+        bad.result()
+    assert isinstance(bad.exception(), ValueError)
+    assert_matches_sequential(req(1), good.result())
+    assert svc.stats()["failed"] == 1
+
+
+def test_expired_at_admission():
+    """A deadline already spent at admission fails the ticket immediately —
+    it never occupies a batch slot."""
+    svc = SummarizeService(RunConfig(max_batch=4))
+    dead = svc.submit(req(3, deadline_s=0.0))
+    live = svc.submit(req(4, deadline_s=30.0))
+    assert dead.done()
+    with pytest.raises(DeadlineExceeded):
+        dead.result()
+    svc.flush()
+    resp = live.result()
+    assert resp.deadline_missed is False
+    assert svc.stats()["queries"] == 1
+
+
+def test_backpressure_max_pending():
+    svc = SummarizeService(RunConfig(max_batch=8, max_pending=2))
+    t1, t2, t3 = (svc.submit(req(i)) for i in range(3))
+    assert not t1.done() and not t2.done() and t3.done()
+    with pytest.raises(ServiceOverloaded):
+        t3.result()
+    svc.flush()
+    assert t1.result() is not None and t2.result() is not None
+
+
+def test_execution_error_fails_only_its_chunk():
+    """An execution-time error (here: an unknown objective that survives
+    admission) fails the chunk's tickets with the captured error instead of
+    propagating out of the scheduler."""
+    svc = SummarizeService(RunConfig(max_batch=4))
+    bad = svc.submit(
+        SummarizeRequest(
+            k=4, key=0, features=jnp.ones((32, 8)), objective="nope"
+        )
+    )
+    good = svc.submit(req(5))
+    svc.flush()
+    with pytest.raises(ValueError, match="objective"):
+        bad.result()
+    assert_matches_sequential(req(5), good.result())
+
+
+# --------------------------------------------------------- async scheduler --
+def test_async_matches_sequential():
+    """The headline pin: async-scheduled responses are identical to the
+    sequential pipeline under the same keys."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=4, max_wait_s=0.01)
+    ) as svc:
+        reqs = [req(10 + i) for i in range(6)]
+        tickets = [svc.submit(r) for r in reqs]
+        for r, t in zip(reqs, tickets):
+            assert_matches_sequential(r, t.result(timeout=60))
+    st = svc.stats()
+    assert st["queries"] == 6 and st["failed"] == 0
+
+
+def test_async_flush_on_full_trigger():
+    """A lane at max_batch fires immediately (trigger "full") without
+    waiting for max_wait."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=2, max_wait_s=60.0)
+    ) as svc:
+        t1 = svc.submit(req(20))
+        t2 = svc.submit(req(21))
+        r1 = t1.result(timeout=60)
+        r2 = t2.result(timeout=60)
+    assert r1.trigger == "full" and r2.trigger == "full"
+    assert r1.batch_size == 2
+
+
+def test_async_max_wait_trigger():
+    """A lone request fires after max_wait_s even though its lane never
+    fills."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=8, max_wait_s=0.02)
+    ) as svc:
+        t = svc.submit(req(22))
+        resp = t.result(timeout=60)
+    assert resp.trigger == "max_wait"
+    assert resp.batch_size == 1
+
+
+def test_async_deadline_trigger_preempts_max_wait():
+    """A tight deadline fires the lane long before a large max_wait — the
+    deadline-slack term of the flusher policy."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=8, max_wait_s=60.0)
+    ) as svc:
+        t = svc.submit(req(23, deadline_s=0.1))
+        resp = t.result(timeout=60)
+    assert resp.trigger == "deadline"
+
+
+def test_deadline_shorter_than_first_compile_is_flagged_not_dropped():
+    """First execution of a fresh lane pays the compile; a deadline below
+    that still gets served, with deadline_missed=True."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=4, max_wait_s=60.0)
+    ) as svc:
+        # n=130 is a lane shape nothing else in the suite compiles.
+        r = req(24, n=130, deadline_s=1e-4)
+        t = svc.submit(r)
+        resp = t.result(timeout=120)
+    assert resp.deadline_missed is True
+    assert resp.trigger == "deadline"
+    assert_matches_sequential(r, resp)
+    assert svc.stats()["deadlines_missed"] == 1
+
+
+def test_flusher_tick_with_empty_queue():
+    """An empty-queue tick is a no-op: the policy reports nothing to fire,
+    the thread parks, and the service still serves what arrives later."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=4, max_wait_s=0.01)
+    ) as svc:
+        with svc._cond:
+            lane, fire_t, trigger = svc._next_fire(time.perf_counter())
+        assert lane is None and fire_t is None and trigger is None
+        svc.drain()                       # drain of an empty queue returns
+        time.sleep(0.05)                  # let the flusher park on the cond
+        t = svc.submit(req(25))
+        assert t.result(timeout=60) is not None
+    assert svc.stats()["batches"] == 1
+
+
+def test_continuous_batching_refills_mid_flight():
+    """Submissions that land while a batch executes form the next bucket:
+    with max_batch=2 and 5 requests racing the flusher, every batch holds
+    <= 2 and all five responses stay sequential-identical."""
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=2, max_wait_s=0.005)
+    ) as svc:
+        reqs = [req(30 + i) for i in range(5)]
+        tickets = []
+        for r in reqs:
+            tickets.append(svc.submit(r))
+            time.sleep(0.002)             # interleave with executions
+        responses = [t.result(timeout=60) for t in tickets]
+    for r, resp in zip(reqs, responses):
+        assert_matches_sequential(r, resp)
+    st = svc.stats()
+    assert st["queries"] == 5
+    assert all(resp.batch_size <= 2 for resp in responses)
+    assert st["batches"] >= 3             # 5 queries can't fit 2 batches of 2
+
+
+def test_async_run_and_stats_triggers():
+    with api.serve(
+        RunConfig(scheduler="async", max_batch=4, max_wait_s=30.0)
+    ) as svc:
+        out = svc.run([req(40 + i) for i in range(3)])
+    assert len(out) == 3
+    # run() drains: the undersized lane fired on the drain request.
+    assert out[0].trigger in ("drain", "full")
+    assert sum(svc.stats()["triggers"].values()) == svc.stats()["batches"]
+
+
+# ------------------------------------------------------- streamed selection --
+def test_greedy_batched_on_step_matches_scan():
+    """The streamed per-step path is the scan body relaunched k times: the
+    emitted steps and the final result must equal the un-streamed call."""
+    Ws = jnp.stack([jnp.asarray(news_day(50 + i, 96, 16)) for i in range(2)])
+    fnb = FeatureCoverage(W=Ws, phi="sqrt")
+    alive = jnp.stack([jnp.arange(96) < 80, jnp.arange(96) < 3])
+    ref = greedy_batched(fnb, 5, alive=alive)
+    seen = []
+    res = greedy_batched(
+        fnb, 5, alive=alive,
+        on_step=lambda i, v, g, ok: seen.append(
+            (i, np.asarray(v), np.asarray(g), np.asarray(ok))
+        ),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.selected), np.asarray(ref.selected)
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.gains), np.asarray(ref.gains), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(res.value), np.asarray(ref.value), rtol=1e-6)
+    assert [s[0] for s in seen] == list(range(5))
+    for i, v, g, ok in seen:
+        np.testing.assert_array_equal(v, np.asarray(ref.selected[:, i]))
+        np.testing.assert_allclose(g, np.asarray(ref.gains[:, i]), rtol=1e-6)
+    # row 1 exhausts after 3 picks: ok goes False, records become 0
+    assert [bool(s[3][1]) for s in seen] == [True] * 3 + [False] * 2
+
+
+def test_stream_steps_tickets_accumulate_partials():
+    """stream_steps=True: tickets expose the committed greedy prefix; the
+    final response is unchanged vs the non-streamed service."""
+    r = req(60, n=96, F=16, k=5)
+    plain = SummarizeService(RunConfig(max_batch=2)).run([r])[0]
+    svc = SummarizeService(RunConfig(max_batch=2, stream_steps=True))
+    t = svc.submit(r)
+    assert t.partial() == []                              # nothing committed
+    svc.flush()
+    resp = t.result()
+    assert (np.asarray(resp.selected) == np.asarray(plain.selected)).all()
+    steps = t.partial()
+    assert [v for v, _ in steps] == list(np.asarray(resp.selected))
+    np.testing.assert_allclose(
+        [g for _, g in steps], np.asarray(resp.gains), rtol=1e-6
+    )
+
+
+def test_stream_steps_observed_incrementally():
+    """The partial prefix is readable from another thread while later steps
+    still run — the streaming contract is per-step commit, not end-of-batch
+    delivery."""
+    done_event = threading.Event()
+    svc = SummarizeService(RunConfig(max_batch=2, stream_steps=True))
+    t = svc.submit(req(61, n=96, F=16, k=4))
+    prefix_lengths = []
+
+    def poll():
+        while not done_event.is_set():
+            prefix_lengths.append(len(t.partial()))
+            time.sleep(0.0005)
+
+    th = threading.Thread(target=poll)
+    th.start()
+    svc.flush()
+    done_event.set()
+    th.join()
+    assert len(t.partial()) == 4
+    # the poller's observations are a monotone prefix-growth sequence
+    assert prefix_lengths == sorted(prefix_lengths)
+    assert prefix_lengths[0] < 4                  # it looked before the end
+
+
+# ------------------------------------------------------------ api facade ----
+def test_api_summarize_matches_core():
+    W = jnp.asarray(news_day(70, 128, 24))
+    resp = api.summarize(W, k=4, key=70)
+    fn = FeatureCoverage(W=W, phi="sqrt")
+    ss = ss_sparsify(fn, jax.random.PRNGKey(70))
+    ref = greedy(fn, 4, alive=ss.vprime)
+    assert (np.asarray(resp.selected) == np.asarray(ref.selected)).all()
+    # config threads end-to-end: no-SS run on the facade
+    resp2 = api.summarize(W, k=4, key=70, use_ss=False)
+    ref2 = greedy(fn, 4)
+    assert (np.asarray(resp2.selected) == np.asarray(ref2.selected)).all()
+    assert resp2.vprime_size is None
+
+
+def test_api_serve_and_submit_default_service():
+    svc = api.serve(RunConfig(max_batch=2))
+    assert isinstance(svc, SummarizeService)
+    assert svc.config.max_batch == 2
+    t = api.submit(req(71), service=None)          # process default (async)
+    assert_matches_sequential(req(71), t.result(timeout=120))
+    assert api.default_service() is api.default_service()
+
+
+def test_deprecated_spellings_warn_and_map():
+    from repro.serve import ServiceConfig
+    from repro.serve.kv_select import KVSelectConfig
+
+    with pytest.warns(DeprecationWarning, match="RunConfig"):
+        cfg = ServiceConfig(backend="oracle", max_batch=4)
+    assert isinstance(cfg, RunConfig) and cfg.max_batch == 4
+    with pytest.warns(DeprecationWarning, match="RunConfig"):
+        svc = SummarizeService(RunConfig(), max_batch=2)
+    assert svc.config.max_batch == 2
+    with pytest.warns(DeprecationWarning, match="RunConfig"):
+        kv = KVSelectConfig(budget=8, backend="oracle", r=4, c=4.0)
+    assert kv.run.backend == "oracle" and kv.run.r == 4 and kv.run.c == 4.0
+    # the new spelling is warning-free
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        KVSelectConfig(budget=8, run=RunConfig(backend="oracle"))
+        RunConfig(max_batch=4)
+
+
+def test_runconfig_validates_scheduler():
+    with pytest.raises(ValueError, match="scheduler"):
+        RunConfig(scheduler="later")

@@ -25,7 +25,7 @@ from repro.core import (
 )
 from repro.data import news_day
 from repro.serve import (
-    ServiceConfig,
+    RunConfig,
     SummarizeRequest,
     SummarizeService,
     batch_buckets,
@@ -178,7 +178,7 @@ def test_service_mixed_lanes_match_sequential():
     """Acceptance: one flush with mixed n and k (two lanes) and a
     non-bucket-multiple batch size — every response identical to the
     sequential public-API pipeline under its own key."""
-    svc = SummarizeService(ServiceConfig(backend="oracle", max_batch=8))
+    svc = SummarizeService(RunConfig(backend="oracle", max_batch=8))
     reqs = [
         SummarizeRequest(
             k=8, key=i, features=jnp.asarray(news_day(i, 256, 64)))
@@ -215,7 +215,7 @@ def test_service_pallas_matches_sequential_pallas():
     shipped feature widths, so the cross-strategy pin is exact here;
     compiled-kernel runs are only guaranteed fp-close (docs/serving.md)."""
     be = PallasBackend(interpret=True)
-    svc = SummarizeService(ServiceConfig(backend=be, max_batch=4))
+    svc = SummarizeService(RunConfig(backend=be, max_batch=4))
     reqs = [
         SummarizeRequest(
             k=6, key=i, features=jnp.asarray(news_day(i, 256, 128)))
@@ -231,7 +231,7 @@ def test_service_pallas_matches_sequential_pallas():
 
 
 def test_service_fl_and_no_ss_lanes():
-    svc = SummarizeService(ServiceConfig(backend="oracle"))
+    svc = SummarizeService(RunConfig(backend="oracle"))
     X = jax.random.normal(jax.random.PRNGKey(3), (180, 16))
     out = svc.run([
         SummarizeRequest(k=5, key=7, features=X, objective="fl"),
@@ -256,7 +256,7 @@ def test_service_fl_sim_and_feature_payloads_do_not_collide():
     """A precomputed (n, n) sim payload and an (n, n) *feature* payload hash
     to different lanes — stacking them together would crash (or silently
     treat features as similarities)."""
-    svc = SummarizeService(ServiceConfig(backend="oracle"))
+    svc = SummarizeService(RunConfig(backend="oracle"))
     X = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (48, 48)))
     fn = FacilityLocation.from_features(X, kernel="cosine")
     out = svc.run([
@@ -277,7 +277,7 @@ def test_service_n_padding_fl_padding_is_inert():
     for any kernel), and a padded query matches the sequential run on the
     zero-padded-sim ground set."""
     svc = SummarizeService(
-        ServiceConfig(backend="oracle", n_buckets=(64,), max_batch=4)
+        RunConfig(backend="oracle", n_buckets=(64,), max_batch=4)
     )
     X = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (50, 8)))
     out = svc.run([SummarizeRequest(k=4, key=5, features=X,
@@ -306,17 +306,17 @@ def test_summarize_batch_compact_under_jit():
 
 
 def test_service_tickets_and_submission_order():
-    svc = SummarizeService(ServiceConfig(backend="oracle", max_batch=2))
+    svc = SummarizeService(RunConfig(backend="oracle", max_batch=2))
     reqs = [
         SummarizeRequest(
             k=4, key=i, features=jnp.asarray(news_day(i, 128, 32)))
         for i in range(3)
     ]
     tickets = [svc.submit(r) for r in reqs]
-    assert not any(t.done for t in tickets)
+    assert not any(t.done() for t in tickets)
     out = svc.flush()
-    assert all(t.done for t in tickets)
-    assert [t.result for t in tickets] == out      # submission order
+    assert all(t.done() for t in tickets)
+    assert [t.result() for t in tickets] == out      # submission order
     assert svc.flush() == []                       # queue drained
 
 
@@ -324,7 +324,7 @@ def test_service_n_padding_collapses_lanes():
     """Opt-in ground-set padding: distinct n share one compile signature;
     pure-greedy queries are padding-invariant."""
     svc = SummarizeService(
-        ServiceConfig(backend="oracle", n_buckets=(256,), max_batch=4)
+        RunConfig(backend="oracle", n_buckets=(256,), max_batch=4)
     )
     reqs = [
         SummarizeRequest(k=4, key=i,
@@ -347,7 +347,7 @@ def test_service_n_padding_ss_matches_padded_sequential():
     """With SS, a padded query matches the sequential run on the padded
     ground set (the documented contract — padding changes the PRNG frame)."""
     svc = SummarizeService(
-        ServiceConfig(backend="oracle", n_buckets=(256,))
+        RunConfig(backend="oracle", n_buckets=(256,))
     )
     W = jnp.asarray(news_day(0, 200, 32))
     out = svc.run([SummarizeRequest(k=5, key=3, features=W)])[0]
