@@ -71,7 +71,11 @@ print(f"summarize(+§3.4):   f(S) = {float(res.value):.4f}")
 
 # --- one-call facade (the stable public surface, repro.api) ------------------
 # docs/serving.md covers the full surface: RunConfig, the async SLO-aware
-# scheduler (scheduler="async" + per-request deadline_s), and Ticket futures.
+# scheduler (scheduler="async" + per-request deadline_s), Ticket futures,
+# and the "Failure semantics" contract — admission validation, bounded
+# retry + backend failover (RunConfig.max_retries / failover_backend), the
+# chunk watchdog, the deadline-pressure degradation ladder
+# (RunConfig.ladder), and the FaultPlan chaos-testing hook.
 resp = api.summarize(
     W, k=K, key=0,
     config=api.RunConfig(backend=BACKEND if BACKEND != "sharded"

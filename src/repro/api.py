@@ -24,24 +24,34 @@ from __future__ import annotations
 import dataclasses
 import threading
 
+from repro.serve.faults import FaultPlan
 from repro.serve.summarize_service import (
+    LADDER_STEPS,
+    ChunkTimeout,
     DeadlineExceeded,
+    MalformedResult,
     RunConfig,
     ServiceOverloaded,
     SummarizeRequest,
     SummarizeResponse,
     SummarizeService,
     Ticket,
+    TicketPending,
 )
 
 __all__ = [
+    "LADDER_STEPS",
+    "ChunkTimeout",
     "DeadlineExceeded",
+    "FaultPlan",
+    "MalformedResult",
     "RunConfig",
     "ServiceOverloaded",
     "SummarizeRequest",
     "SummarizeResponse",
     "SummarizeService",
     "Ticket",
+    "TicketPending",
     "default_service",
     "serve",
     "submit",
@@ -52,12 +62,16 @@ _default_service: SummarizeService | None = None
 _default_lock = threading.Lock()
 
 
-def serve(config: RunConfig | None = None) -> SummarizeService:
+def serve(
+    config: RunConfig | None = None, *, faults: FaultPlan | None = None
+) -> SummarizeService:
     """A fresh :class:`SummarizeService` under ``config`` (default
     ``RunConfig()`` — synchronous scheduler).  Compile caches are shared
     process-wide, so new services start warm for shapes any prior service
-    has executed."""
-    return SummarizeService(config or RunConfig())
+    has executed.  ``faults`` threads a seeded :class:`FaultPlan` into the
+    executor — the chaos-testing hook (docs/serving.md "Failure
+    semantics"); production callers leave it None."""
+    return SummarizeService(config or RunConfig(), faults=faults)
 
 
 def default_service(config: RunConfig | None = None) -> SummarizeService:

@@ -35,6 +35,7 @@ from repro.core.greedy import (
     lazy_greedy,
     selection_bucket,
     stochastic_greedy,
+    stochastic_greedy_batched,
 )
 from repro.core.sieve import SieveResult, sieve_streaming
 from repro.core.sparsify import (
@@ -43,6 +44,7 @@ from repro.core.sparsify import (
     predicted_live_counts,
     preprune_mask,
     probe_count,
+    ss_cost_model,
     ss_live_bound,
     ss_sparsify,
     ss_sparsify_batched,
@@ -75,6 +77,7 @@ __all__ = [
     "lazy_greedy",
     "selection_bucket",
     "stochastic_greedy",
+    "stochastic_greedy_batched",
     "SieveResult",
     "sieve_streaming",
     "SSResult",
@@ -82,6 +85,7 @@ __all__ = [
     "predicted_live_counts",
     "preprune_mask",
     "probe_count",
+    "ss_cost_model",
     "ss_live_bound",
     "ss_sparsify",
     "ss_sparsify_batched",

@@ -318,28 +318,7 @@ def greedy_batched(
         raise ValueError(f"greedy_batched needs a (B, n) alive mask; "
                          f"got shape {alive.shape}")
     n = jax.tree.map(lambda x: x[0], fn).n
-    size = None
-    if alive is not None and compact is not False:
-        if isinstance(compact, (bool, type(None))):
-            if not isinstance(alive, jax.core.Tracer):
-                live_max = int(jnp.max(jnp.sum(alive, axis=1)))
-                size = selection_bucket(n, live_max)
-        else:
-            bound = int(compact)
-            if not 0 <= bound <= n:
-                raise ValueError(
-                    f"compact live bound must be in [0, n={n}]; got {bound}"
-                )
-            if not isinstance(alive, jax.core.Tracer):
-                live_max = int(jnp.max(jnp.sum(alive, axis=1)))
-                if live_max > bound:
-                    raise ValueError(
-                        f"compact live bound {bound} < max row |alive| = "
-                        f"{live_max}; pass a correct bound (or compact=True "
-                        "to derive it from the mask)"
-                    )
-                bound = live_max
-            size = selection_bucket(n, bound)
+    size, _ = _batched_compact_plan(n, alive, compact)
     if on_step is None:
         return _greedy_batched(fn, k, size, alive, state, be)
     return _greedy_batched_stepped(fn, k, size, alive, state, be, on_step)
@@ -478,6 +457,211 @@ def _greedy_batched_stepped(
         )
         # Host-sync the committed step so the callback observes real values
         # (the next launch proceeds immediately after).
+        v, g, ok = jax.block_until_ready((v, g, ok))
+        on_step(i, v, g, ok)
+        sel.append(v)
+        gains.append(g)
+    return GreedyResult(
+        jnp.stack(sel, axis=1).astype(jnp.int32),
+        jnp.stack(gains, axis=1),
+        _batched_value(fn, st),
+        st,
+    )
+
+
+# --------------------------------------------------- batched stochastic greedy --
+
+def stochastic_greedy_batched(
+    fn: SubmodularFunction,
+    k: int,
+    keys: Array,
+    s: int | None = None,
+    alive: Array | None = None,
+    backend: "str | Backend | None" = None,
+    state: Array | None = None,
+    compact: "bool | int | None" = None,
+    eps: float = 0.1,
+    on_step: "StepCallback | None" = None,
+) -> GreedyResult:
+    """Stochastic greedy for B same-shape queries as **one** compiled loop —
+    the serving engine's degradation-ladder re-entry point (docs/serving.md
+    "Failure semantics"): the same stacked-objective frame as
+    :func:`greedy_batched`, but each step evaluates gains only on a
+    per-row Gumbel-sampled subset of ``s`` candidate slots, so per-step cost
+    tracks s instead of the compact bucket ("lazier than lazy greedy",
+    Mirzasoleiman et al. 2015 — the paper-side cost of the quality step is
+    the (1 - 1/e - eps) guarantee instead of (1 - 1/e)).
+
+    Row b selects *identically* to the dense
+    ``stochastic_greedy(fn_b, k, keys[b], s=s, alive=alive_b, ...)`` under
+    the same per-row key **and the same resolved plan**: the Gumbel frame,
+    sample set, per-element gain arithmetic, and tie order (sampled slots
+    are sorted ascending before the argmax, reproducing the full-frame
+    masked argmax's lowest-slot tie-break) all match
+    (tests/test_serve_faults.py pins this).  Unlike exact greedy, the
+    sampler's draws live in the compact frame, so the plan *is* part of the
+    key: the batched loop shares one bucket (the batch max, like
+    ``greedy_batched``) — pass ``compact=<that bucket's live bound>`` and
+    the same effective ``s`` to the dense call when comparing rows.
+    ``s=None`` derives the sample size from the batch-max live count;
+    ``on_step`` streams committed steps exactly like
+    :func:`greedy_batched`."""
+    be = resolve_backend(backend)
+    if alive is not None and alive.ndim != 2:
+        raise ValueError(
+            f"stochastic_greedy_batched needs a (B, n) alive mask; "
+            f"got shape {alive.shape}"
+        )
+    n = jax.tree.map(lambda x: x[0], fn).n
+    size, live = _batched_compact_plan(n, alive, compact)
+    if s is None:
+        s = auto_sample_size(n, k, eps, live=live)
+    s = int(min(s, n if size is None else size))
+    if s < 1:
+        raise ValueError(f"sample size must be >= 1; got {s}")
+    # Per-row per-step keys: exactly the dense loop's split(key, k), stacked
+    # over rows, transposed to scan order (k, B, 2).
+    step_keys = jnp.swapaxes(
+        jax.vmap(lambda kk: jax.random.split(kk, k))(keys), 0, 1,
+    )
+    if on_step is None:
+        return _stochastic_greedy_batched(
+            fn, k, step_keys, s, size, alive, state, be
+        )
+    return _stochastic_greedy_batched_stepped(
+        fn, k, step_keys, s, size, alive, state, be, on_step
+    )
+
+
+def _batched_compact_plan(
+    n: int, alive, compact
+) -> tuple[int | None, int | None]:
+    """The batched analogue of :func:`_compact_plan`: resolve the shared
+    compact bucket (from the batch-max live count, or an int bound for
+    tracer masks) outside the jit boundary.  Returns ``(size, live_max)``
+    with both None when full-width / unknown."""
+    if alive is None or compact is False:
+        return None, None
+    if isinstance(compact, (bool, type(None))):
+        if isinstance(alive, jax.core.Tracer):
+            return None, None
+        live_max = int(jnp.max(jnp.sum(alive, axis=1)))
+        return selection_bucket(n, live_max), live_max
+    bound = int(compact)
+    if not 0 <= bound <= n:
+        raise ValueError(
+            f"compact live bound must be in [0, n={n}]; got {bound}"
+        )
+    if not isinstance(alive, jax.core.Tracer):
+        live_max = int(jnp.max(jnp.sum(alive, axis=1)))
+        if live_max > bound:
+            raise ValueError(
+                f"compact live bound {bound} < max row |alive| = "
+                f"{live_max}; pass a correct bound (or compact=True "
+                "to derive it from the mask)"
+            )
+        bound = live_max
+    return selection_bucket(n, bound), bound
+
+
+def _sg_batched_step(
+    fn: SubmodularFunction,
+    st,
+    avail: Array,
+    cand_idx: Array | None,
+    keys_i: Array,
+    s: int,
+    backend: Backend,
+):
+    """One committed batched stochastic-greedy step: per-row Gumbel top-s
+    over available frame slots, gains on the gathered sample only, masked
+    argmax back through the sample.  The sampled slots are sorted ascending
+    so argmax ties break to the lowest frame slot — the same winner the
+    dense loop's full-frame masked argmax picks."""
+    be = backend
+    B, width = avail.shape
+    rows = jnp.arange(B)
+    gumb = jax.vmap(lambda kk: jax.random.gumbel(kk, (width,)))(keys_i)
+    gumb = gumb + jnp.where(avail, 0.0, NEG)
+    cand = jnp.sort(jax.lax.top_k(gumb, s)[1], axis=1)            # (B, s)
+    sub_avail = jnp.take_along_axis(avail, cand, axis=1)
+    sub_idx = (
+        cand if cand_idx is None
+        else jnp.take_along_axis(cand_idx, cand, axis=1)
+    )
+    g = jnp.where(sub_avail, be.gains_batched(fn, st, sub_idx), NEG)
+    vs = jnp.argmax(g, axis=1)                                    # (B,)
+    vc = jnp.take_along_axis(cand, vs[:, None], axis=1)[:, 0]     # frame slot
+    v = jnp.take_along_axis(sub_idx, vs[:, None], axis=1)[:, 0]   # ground idx
+    ok = jnp.take_along_axis(sub_avail, vs[:, None], axis=1)[:, 0]
+    new_state = jax.vmap(lambda f, ss, vv: f.add(ss, vv))(fn, st, v)
+    st = jax.tree.map(
+        lambda a, b: jnp.where(
+            ok.reshape((B,) + (1,) * (a.ndim - 1)), a, b
+        ),
+        new_state,
+        st,
+    )
+    return (
+        st,
+        avail.at[rows, vc].set(False),
+        jnp.where(ok, v, 0),
+        jnp.where(ok, jnp.take_along_axis(g, vs[:, None], axis=1)[:, 0], 0.0),
+        ok,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "s", "size", "backend"))
+def _stochastic_greedy_batched(
+    fn: SubmodularFunction,
+    k: int,
+    step_keys: Array,
+    s: int,
+    size: int | None,
+    alive: Array | None,
+    state: Array | None,
+    backend: Backend,
+) -> GreedyResult:
+    cand_idx, avail0, state0 = _batched_frame(fn, size, alive, state)
+
+    def step(carry, keys_i):
+        st, avail = carry
+        st, avail, v, g, _ = _sg_batched_step(
+            fn, st, avail, cand_idx, keys_i, s, backend
+        )
+        return (st, avail), (v, g)
+
+    (final, _), (sel, gains) = jax.lax.scan(
+        step, (state0, avail0), step_keys
+    )
+    value = jax.vmap(lambda f, st: f.value(st))(fn, final)
+    return GreedyResult(sel.T.astype(jnp.int32), gains.T, value, final)
+
+
+_sg_batched_step_jit = partial(jax.jit, static_argnames=("s", "backend"))(
+    _sg_batched_step
+)
+
+
+def _stochastic_greedy_batched_stepped(
+    fn: SubmodularFunction,
+    k: int,
+    step_keys: Array,
+    s: int,
+    size: int | None,
+    alive: Array | None,
+    state: Array | None,
+    backend: Backend,
+    on_step,
+) -> GreedyResult:
+    """Streamed batched stochastic greedy — k launches of the compiled step
+    (the scan body), mirroring :func:`_greedy_batched_stepped`."""
+    cand_idx, avail, st = _batched_frame(fn, size, alive, state)
+    sel, gains = [], []
+    for i in range(k):
+        st, avail, v, g, ok = _sg_batched_step_jit(
+            fn, st, avail, cand_idx, step_keys[i], s, backend
+        )
         v, g, ok = jax.block_until_ready((v, g, ok))
         on_step(i, v, g, ok)
         sel.append(v)

@@ -118,6 +118,36 @@ def predicted_live_counts(
     return out
 
 
+def ss_cost_model(
+    n: int, r: int = 8, c: float = 8.0, alive0: int | None = None
+) -> float:
+    """Predicted SS divergence work — probe rows × compact candidate slots,
+    summed over the deterministic round schedule of Algorithm 1 (the same
+    recurrence as :func:`predicted_live_counts`, bucket-rounded like the
+    shrink-aware executor actually dispatches).
+
+    This is the *relative* cost model the serving degradation ladder uses
+    (docs/serving.md "Failure semantics"): bumping ``c`` shrinks the live
+    set faster (fewer, smaller rounds) and shrinking ``r`` cuts the probe
+    rows, so ``ss_cost_model(n, r2, c2) / ss_cost_model(n, r1, c1)`` predicts
+    the execution-time ratio of a degraded config before it has ever been
+    measured.  Arbitrary units — only ratios are meaningful.
+    """
+    m = min(probe_count(n, r), n)
+    buckets = bucket_schedule(n, c)
+    shrink = 1.0 - 1.0 / math.sqrt(c)
+    live = n if alive0 is None else alive0
+    total = 0.0
+    for _ in range(max_rounds(n, r, c)):
+        if live <= m:
+            break
+        live -= m
+        bucket = min((b for b in buckets if b >= live), default=n)
+        total += m * bucket
+        live -= math.floor(live * shrink)
+    return max(total, 1.0)
+
+
 def ss_sparsify(
     fn: SubmodularFunction,
     key: Array,

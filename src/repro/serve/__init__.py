@@ -4,6 +4,12 @@ summarization service (repro.serve.summarize_service).  The stable public
 surface is re-exported as ``repro.api``."""
 
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.faults import (
+    Fault,
+    FaultEvent,
+    FaultInjected,
+    FaultPlan,
+)
 from repro.serve.kv_select import (
     KVSelectConfig,
     prune_cache,
@@ -11,7 +17,10 @@ from repro.serve.kv_select import (
     select_positions_batched,
 )
 from repro.serve.summarize_service import (
+    LADDER_STEPS,
+    ChunkTimeout,
     DeadlineExceeded,
+    MalformedResult,
     RunConfig,
     ServiceConfig,
     ServiceOverloaded,
@@ -19,6 +28,7 @@ from repro.serve.summarize_service import (
     SummarizeResponse,
     SummarizeService,
     Ticket,
+    TicketPending,
     batch_buckets,
     summarize_batch,
 )

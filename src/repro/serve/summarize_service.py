@@ -1,5 +1,6 @@
 """Micro-batched multi-query summarization service: the request-level layer
-over SS + greedy, with an SLO-aware asynchronous scheduler.
+over SS + greedy, with an SLO-aware asynchronous scheduler and a
+fault-tolerance layer (retry / failover / degradation).
 
 Every caller so far invoked ``ss_sparsify``/``greedy`` one ground set at a
 time.  This module is the serving engine the ROADMAP north star asks for: it
@@ -26,26 +27,58 @@ the next bucket instead of waiting for a whole-queue drain.  The default
 ``scheduler="sync"`` keeps the PR-5 contract surface: admission policy
 belongs to the caller, ``flush()`` drains everything queued.
 
-Correctness contract (unchanged): micro-batching — and now scheduling — is
-a pure execution strategy.  Each query's ``selected`` / ``gains`` /
-``value`` (and SS ``vprime`` / ``eps_hat``) are *identical* to a sequential
-single-query ``ss_sparsify(fn, key)`` + ``greedy(fn, k, alive=vprime)`` run
-under the same per-query key — regardless of which queries it was batched
-with, the batch bucket padding, mixed n / k in the same flush, or which
-trigger fired the batch (tests/test_serve_service.py and
-tests/test_serve_async.py pin this query-for-query).
+Failure semantics (PR 8 — docs/serving.md "Failure semantics"): a chunk
+execution error no longer permanently fails its tickets.  The executor runs
+every chunk through a recovery loop: bounded-exponential-backoff **retries**
+on the primary backend (``max_retries`` / ``retry_backoff_s``), per-chunk
+**failover** to ``failover_backend`` (default ``pallas → oracle``), and
+finally per-query **isolation** — the chunk is re-run one query at a time so
+a single poisoned query can no longer take down its chunk-mates.  A
+**watchdog** (``chunk_timeout_s``) bounds chunk wall time: a hung attempt is
+abandoned (its late results are discarded by the tickets' first-wins
+settle), the hung signature is not retried, and only that chunk's recovery
+path is affected — the flusher stays alive.  Recovered responses carry a
+``recovery`` record; results after a same-backend retry are bit-identical
+to a fault-free run (execution is deterministic given lane + keys), and
+failed-over results select identically up to backend numerics.
+
+Degradation ladder (PR 8): when a lane's EWMA predicts a queued deadline
+will be missed at full quality — or under ``max_pending`` admission
+pressure (``ladder_pressure``) — the executor walks ``RunConfig.ladder``, a
+declared sequence of paper-grounded quality steps: ``"stochastic_greedy"``
+(exact greedy → *lazier than lazy* stochastic greedy, 1409.7938),
+``"bump_c"`` (×4 SS ``c``: faster shrink, fewer rounds, looser guarantee),
+``"shrink_r"`` (halve SS probe multiplier ``r``).  Step cost is predicted
+with :func:`repro.core.ss_cost_model` until a per-(lane, level) EWMA takes
+over.  Every degraded response carries a ``degradation`` record (steps
+applied, config actually run, why) — degraded answers are auditable, never
+silent.  The ladder is off by default and full-quality results are
+bit-identical to a ladder-free service.
+
+Correctness contract (unchanged): micro-batching — and now scheduling and
+recovery — is a pure execution strategy.  Each query's ``selected`` /
+``gains`` / ``value`` (and SS ``vprime`` / ``eps_hat``) are *identical* to
+a sequential single-query ``ss_sparsify(fn, key)`` + ``greedy(fn, k,
+alive=vprime)`` run under the same per-query key — regardless of which
+queries it was batched with, the batch bucket padding, mixed n / k in the
+same flush, which trigger fired the batch, or how many recovery attempts it
+took (tests/test_serve_service.py, tests/test_serve_async.py and
+tests/test_serve_faults.py pin this query-for-query).
 
 Failure isolation: :class:`Ticket` is a real future — ``result(timeout)`` /
 ``done()`` / ``exception()`` — and captures per-request errors, so a
 malformed or already-expired request fails its own ticket at admission
-instead of aborting the flush that would have carried it; an execution
-error fails only the tickets of the chunk that raised.
+(``validate_payloads`` rejects NaN/Inf payloads and ``k < 1`` at
+``submit()``) instead of corrupting the compiled chunk that would have
+carried it.  A ticket still in flight when a wait times out raises
+:class:`TicketPending` naming its state instead of blocking forever.
 
 Accounting: the service tracks queue delay per query (submit → execution
 start), per-batch execution wall time, padding waste (slots burned rounding
-a lane chunk up to its batch bucket), firing-trigger counts, and missed
-deadlines — the numbers a capacity planner needs to tune ``max_batch`` /
-``max_wait_s`` against traffic.
+a lane chunk up to its batch bucket), firing-trigger counts, missed
+deadlines, and the recovery counters (retries, failovers, isolated queries,
+chunk timeouts, degraded queries) — the numbers a capacity planner needs to
+tune ``max_batch`` / ``max_wait_s`` / the ladder against traffic.
 
 Optional ground-set padding (``RunConfig.n_buckets``): queries whose n is
 not in the bucket list are zero-padded up to the next bucket with the
@@ -63,7 +96,7 @@ import dataclasses
 import threading
 import time
 import warnings
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -76,9 +109,12 @@ from repro.core import (
     bucket_schedule,
     greedy_batched,
     resolve_backend,
+    ss_cost_model,
     ss_live_bound,
     ss_sparsify_batched,
+    stochastic_greedy_batched,
 )
+from repro.serve.faults import FaultInjected, FaultPlan
 
 Array = jax.Array
 
@@ -91,7 +127,28 @@ class ServiceOverloaded(RuntimeError):
     """Backpressure: the service's pending-queue cap was hit at admission."""
 
 
+class ChunkTimeout(RuntimeError):
+    """A chunk attempt exceeded ``RunConfig.chunk_timeout_s`` and was
+    abandoned by the watchdog (the flusher moves on; the hung attempt's late
+    results, if any, are discarded by the tickets' first-wins settle)."""
+
+
+class MalformedResult(RuntimeError):
+    """Chunk execution produced non-finite gains/values — treated as a
+    recoverable execution fault (retried / failed over), never returned."""
+
+
+class TicketPending(TimeoutError):
+    """A ticket wait timed out while its query is still queued or executing
+    (e.g. after ``drain(timeout)`` gave up on an in-flight chunk).  Subclasses
+    TimeoutError, so pre-PR-8 ``except TimeoutError`` callers still work."""
+
+
 # ------------------------------------------------------------- run config ----
+
+#: Valid degradation-ladder steps, in the order the docs discuss them.
+LADDER_STEPS = ("stochastic_greedy", "bump_c", "shrink_r")
+
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
@@ -105,8 +162,8 @@ class RunConfig:
     default); ``compact`` is the compact-selection policy threaded to
     ``greedy_batched`` (None = auto: the static SS live bound).  SS:
     probe multiplier ``r``, accuracy/speed ``c``.  ``eps`` is the
-    stochastic-greedy sample-size parameter used by facade helpers that
-    select stochastically.
+    stochastic-greedy sample-size parameter (used by facade helpers and by
+    the ``"stochastic_greedy"`` ladder step).
 
     Batching: ``max_batch`` caps a micro-batch; ``batch_c`` shapes the
     B-bucket schedule; ``n_buckets`` opts into ground-set padding.
@@ -118,6 +175,20 @@ class RunConfig:
     subtracted from deadlines when scheduling; ``max_pending`` (None =
     unbounded) is the admission backpressure cap; ``stream_steps`` streams
     greedy selections back to tickets step-by-step as they commit.
+
+    Fault tolerance: ``max_retries`` same-backend re-attempts per stage with
+    ``retry_backoff_s``·2^(attempt−1) sleeps between them;
+    ``failover_backend`` the per-chunk fallback backend (None disables; a
+    fallback resolving to the primary is skipped); ``isolate_on_failure``
+    re-runs an exhausted multi-query chunk one query at a time so a poisoned
+    query fails alone; ``chunk_timeout_s`` arms the watchdog (None = off);
+    ``validate_payloads`` rejects NaN/Inf payloads at admission.
+
+    Degradation: ``ladder`` is the ordered tuple of quality steps
+    (subset of ``LADDER_STEPS``) the executor may walk; empty = never
+    degrade.  ``ladder_pressure`` is the ``max_pending`` fill fraction at
+    which every chunk runs fully degraded; ``ladder_force`` (test/bench
+    hook) forces that many steps on every chunk regardless of deadlines.
     """
 
     backend: Any = None             # str | Backend | None (repro.core.backend)
@@ -134,11 +205,38 @@ class RunConfig:
     slack_s: float = 0.0            # safety margin under deadlines
     max_pending: int | None = None  # admission backpressure cap
     stream_steps: bool = False      # stream greedy steps to tickets
+    # -- fault tolerance (PR 8) -------------------------------------------
+    max_retries: int = 2            # same-backend re-attempts per stage
+    retry_backoff_s: float = 0.02   # backoff base: base * 2^(attempt-1)
+    failover_backend: Any = "oracle"  # per-chunk fallback (None = disabled)
+    isolate_on_failure: bool = True  # exhausted chunk -> per-query re-run
+    chunk_timeout_s: float | None = None  # watchdog bound on chunk wall time
+    validate_payloads: bool = True  # reject NaN/Inf payloads at submit()
+    # -- degradation ladder (PR 8) ----------------------------------------
+    ladder: tuple[str, ...] = ()    # ordered quality steps (LADDER_STEPS)
+    ladder_pressure: float = 0.8    # max_pending fill fraction -> full ladder
+    ladder_force: int | None = None  # test/bench hook: force N steps
 
     def __post_init__(self):
         if self.scheduler not in ("sync", "async"):
             raise ValueError(
                 f"scheduler must be 'sync' or 'async'; got {self.scheduler!r}"
+            )
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0; got {self.max_retries}")
+        if self.chunk_timeout_s is not None and self.chunk_timeout_s <= 0:
+            raise ValueError(
+                f"chunk_timeout_s must be positive; got {self.chunk_timeout_s}"
+            )
+        object.__setattr__(self, "ladder", tuple(self.ladder))
+        bad = [s for s in self.ladder if s not in LADDER_STEPS]
+        if bad:
+            raise ValueError(
+                f"unknown ladder step(s) {bad}; valid steps: {LADDER_STEPS}"
+            )
+        if not 0.0 < self.ladder_pressure <= 1.0:
+            raise ValueError(
+                f"ladder_pressure must be in (0, 1]; got {self.ladder_pressure}"
             )
 
 
@@ -212,6 +310,14 @@ class SummarizeResponse:
     the batch (``manual`` / ``full`` / ``deadline`` / ``max_wait`` /
     ``drain``); ``deadline_missed`` is None when the request carried no
     deadline, else whether the batch finished past it.
+
+    ``degradation`` is None for a full-quality answer, else the audit
+    record of the ladder walk that produced this response: ``steps``
+    applied, the ``r`` / ``c`` / ``selector`` actually run, the ladder
+    ``level``, and the ``reason`` (``deadline`` / ``pressure`` /
+    ``forced``).  ``recovery`` is None for a first-attempt success, else
+    ``{"retries", "stage", "backends", "isolated"}`` describing the
+    recovery path that served it.
     """
 
     selected: Array                 # (k,) int32 ground indices
@@ -227,6 +333,8 @@ class SummarizeResponse:
     exec_s: float
     trigger: str = "manual"         # what fired this micro-batch
     deadline_missed: bool | None = None
+    degradation: dict | None = None  # ladder audit record (None = full quality)
+    recovery: dict | None = None    # recovery audit record (None = 1st attempt)
 
 
 # ------------------------------------------------------- functional core ----
@@ -303,14 +411,26 @@ def summarize_batch(
     backend=None,
     compact: "bool | int | None" = None,
     on_step=None,
+    selector: str = "greedy",
+    eps: float = 0.1,
+    s: int | None = None,
 ) -> tuple[GreedyResult, SSResult | None]:
-    """The service's execution core: batched SS → batched compact greedy on
-    a stacked objective.  Row b is identical to the sequential single-query
-    pipeline under ``keys[b]``.  Shared with the KV-cache pruning path
-    (repro.serve.kv_select), which feeds it one lane per decode batch.
-    ``compact`` = None auto-derives the static SS live bound (the tracer-
-    safe default); ``on_step`` streams greedy steps (see
-    :func:`repro.core.greedy_batched`)."""
+    """The service's execution core: batched SS → batched compact selection
+    on a stacked objective.  Row b is identical to the sequential
+    single-query pipeline under ``keys[b]``.  Shared with the KV-cache
+    pruning path (repro.serve.kv_select), which feeds it one lane per decode
+    batch.  ``compact`` = None auto-derives the static SS live bound (the
+    tracer-safe default); ``on_step`` streams greedy steps (see
+    :func:`repro.core.greedy_batched`).
+
+    ``selector`` picks the selection stage: ``"greedy"`` (exact, the
+    default) or ``"stochastic"`` (the degradation ladder's *lazier than
+    lazy* step, :func:`repro.core.stochastic_greedy_batched` with sample
+    size from ``eps`` / ``s``).  The stochastic selector draws from
+    ``fold_in(keys[b], 1)`` so its sample stream never collides with the SS
+    probe stream that already consumed ``keys[b]`` — a sequential reference
+    run must fold the same way (tests/test_serve_faults.py pins this).
+    """
     be = resolve_backend(backend)
     ss = None
     sel_alive = alive
@@ -325,9 +445,21 @@ def summarize_batch(
             # instead of silently degrading to full-width O(n) steps.
             n = jax.tree.map(lambda x: x[0], fn).n
             compact = ss_live_bound(n, r, c)
-    res = greedy_batched(
-        fn, k, alive=sel_alive, backend=be, compact=compact, on_step=on_step
-    )
+    if selector == "greedy":
+        res = greedy_batched(
+            fn, k, alive=sel_alive, backend=be, compact=compact,
+            on_step=on_step,
+        )
+    elif selector == "stochastic":
+        sel_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(keys)
+        res = stochastic_greedy_batched(
+            fn, k, sel_keys, s=s, alive=sel_alive, backend=be,
+            compact=compact, eps=eps, on_step=on_step,
+        )
+    else:
+        raise ValueError(
+            f"selector must be 'greedy' or 'stochastic'; got {selector!r}"
+        )
     return res, ss
 
 
@@ -340,14 +472,24 @@ class Ticket:
     and returns its :class:`SummarizeResponse` — or re-raises the error
     captured for *this* request (admission failures like
     :class:`DeadlineExceeded` / a malformed payload, or the execution error
-    of the chunk it rode in).  ``done()`` / ``exception()`` mirror
-    ``concurrent.futures.Future``.  With ``RunConfig.stream_steps`` the
-    committed greedy prefix is readable mid-flight via :meth:`partial`.
+    of the chunk it rode in after recovery was exhausted).  A wait that
+    times out raises :class:`TicketPending` naming the ticket's state
+    (``queued`` / ``executing``) so a caller who gave up on ``drain``
+    sees *why* the ticket is unresolved instead of blocking forever.
+    ``done()`` / ``exception()`` mirror ``concurrent.futures.Future``.
+    With ``RunConfig.stream_steps`` the committed greedy prefix is readable
+    mid-flight via :meth:`partial`.
+
+    Settlement is first-wins and idempotent (:meth:`_settle`): when the
+    watchdog abandons a hung attempt and the recovery path re-runs the
+    chunk, whichever attempt finishes first owns the ticket — the loser's
+    late results are discarded, so a ticket can never be resolved twice or
+    flap between a response and an error.
     """
 
     __slots__ = (
         "index", "_submit_t", "_deadline_t", "_event", "_response", "_error",
-        "_steps",
+        "_steps", "_lock", "_state",
     )
 
     def __init__(self, index: int, submit_t: float,
@@ -359,18 +501,27 @@ class Ticket:
         self._response: SummarizeResponse | None = None
         self._error: BaseException | None = None
         self._steps: list[tuple[int, float]] = []
+        self._lock = threading.Lock()
+        self._state = "queued"      # queued | executing | done | failed
 
     def done(self) -> bool:
         """True once the ticket holds a response or a captured error."""
         return self._event.is_set()
 
+    def state(self) -> str:
+        """Lifecycle state: ``queued`` → ``executing`` → ``done``/``failed``."""
+        return self._state
+
     def result(self, timeout: float | None = None) -> SummarizeResponse:
         """Block until resolved; returns the response or re-raises the
-        captured per-request error.  Raises TimeoutError if ``timeout``
-        elapses first (the query stays in flight)."""
+        captured per-request error.  Raises :class:`TicketPending` (a
+        TimeoutError) if ``timeout`` elapses first — the query stays in
+        flight and a later wait can still succeed."""
         if not self._event.wait(timeout):
-            raise TimeoutError(
-                f"ticket {self.index} unresolved after {timeout}s"
+            raise TicketPending(
+                f"ticket {self.index} still {self._state} after {timeout}s "
+                "(its micro-batch has not resolved; drain() or a longer "
+                "timeout will settle it)"
             )
         if self._error is not None:
             raise self._error
@@ -379,8 +530,10 @@ class Ticket:
     def exception(self, timeout: float | None = None) -> BaseException | None:
         """The captured error (None on success); blocks like ``result``."""
         if not self._event.wait(timeout):
-            raise TimeoutError(
-                f"ticket {self.index} unresolved after {timeout}s"
+            raise TicketPending(
+                f"ticket {self.index} still {self._state} after {timeout}s "
+                "(its micro-batch has not resolved; drain() or a longer "
+                "timeout will settle it)"
             )
         return self._error
 
@@ -390,13 +543,26 @@ class Ticket:
         always consistent with the final ``selected``/``gains`` prefix."""
         return list(self._steps)
 
+    def _settle(self, response: SummarizeResponse | None = None,
+                error: BaseException | None = None) -> bool:
+        """Resolve the ticket exactly once (first caller wins).  Returns
+        False when the ticket was already settled — the caller (a retried,
+        failed-over, or watchdog-abandoned attempt) must then discard its
+        results and account for nothing."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._response = response
+            self._error = error
+            self._state = "done" if error is None else "failed"
+            self._event.set()
+            return True
+
     def _fulfill(self, response: SummarizeResponse) -> None:
-        self._response = response
-        self._event.set()
+        self._settle(response=response)
 
     def _fail(self, error: BaseException) -> None:
-        self._error = error
-        self._event.set()
+        self._settle(error=error)
 
 
 @dataclasses.dataclass
@@ -428,9 +594,17 @@ class SummarizeService:
     backlog and blocks until every outstanding ticket resolves.  ``run`` is
     submit-all + drain on either scheduler.  The service is a context
     manager: leaving the ``with`` block drains and stops the flusher.
+
+    Every chunk executes through the recovery loop described in the module
+    docstring (retry → failover → per-query isolation, watchdog-bounded)
+    and, when ``RunConfig.ladder`` is set, through the degradation planner.
+    ``faults`` threads a seeded :class:`repro.serve.faults.FaultPlan` into
+    the executor — the test/bench chaos hook; production services leave it
+    None (zero overhead: one attribute check per chunk).
     """
 
-    def __init__(self, config: RunConfig | None = None, **legacy_kwargs):
+    def __init__(self, config: RunConfig | None = None, *,
+                 faults: "FaultPlan | None" = None, **legacy_kwargs):
         if config is None:
             config = RunConfig()
         if not isinstance(config, RunConfig):
@@ -446,12 +620,14 @@ class SummarizeService:
             )
             config = dataclasses.replace(config, **legacy_kwargs)
         self.config = config
+        self._faults = faults
         self._buckets = batch_buckets(config.max_batch, config.batch_c)
         self._cond = threading.Condition()
         self._lanes: dict[tuple, list[_QueueItem]] = {}
         self._pending = 0               # queued, not yet executing
         self._outstanding = 0           # queued or executing
-        self._exec_est: dict[tuple, float] = {}
+        self._exec_est: dict[tuple, float] = {}   # keyed (lane, ladder level)
+        self._ladder_cache: dict[tuple, list[dict]] = {}
         self._drain_requested = False
         self._stop = False
         self._thread: threading.Thread | None = None
@@ -468,6 +644,11 @@ class SummarizeService:
             "triggers": {},
             "deadlines_missed": 0,
             "failed": 0,
+            "retries": 0,
+            "failovers": 0,
+            "isolated_queries": 0,
+            "chunk_timeouts": 0,
+            "degraded": 0,
         }
         if config.scheduler == "async":
             self.start()
@@ -504,10 +685,11 @@ class SummarizeService:
 
     # -- admission ---------------------------------------------------------
     def submit(self, request: SummarizeRequest) -> Ticket:
-        """Admit one request.  Admission failures — malformed payload, an
-        already-spent deadline, queue backpressure — fail the returned
-        ticket immediately instead of raising, so one bad request never
-        blocks its batch mates."""
+        """Admit one request.  Admission failures — malformed payload (a
+        missing / NaN / Inf payload, ``k < 1``), an already-spent deadline,
+        queue backpressure — fail the returned ticket immediately instead
+        of raising, so one bad request never blocks its batch mates (and
+        never corrupts the compiled chunk it would have ridden in)."""
         now = time.perf_counter()
         deadline_t = (
             None if request.deadline_s is None else now + request.deadline_s
@@ -516,6 +698,17 @@ class SummarizeService:
         self._n_submitted += 1
         try:
             lane = self._lane(request)
+            if request.k < 1:
+                raise ValueError(f"k must be >= 1; got k={request.k}")
+            if self.config.validate_payloads:
+                payload = (
+                    request.sim if request.sim is not None else request.features
+                )
+                if not bool(jnp.all(jnp.isfinite(jnp.asarray(payload)))):
+                    raise ValueError(
+                        "payload contains non-finite values (NaN/Inf); "
+                        "rejected at admission (RunConfig.validate_payloads)"
+                    )
             if request.deadline_s is not None and request.deadline_s <= 0:
                 raise DeadlineExceeded(
                     f"deadline_s={request.deadline_s} already spent at "
@@ -537,7 +730,7 @@ class SummarizeService:
         except Exception as e:  # noqa: BLE001 - captured on the ticket
             with self._cond:
                 self._stats["failed"] += 1
-            ticket._fail(e)
+            ticket._settle(error=e)
         return ticket
 
     def _lane(self, req: SummarizeRequest) -> tuple:
@@ -584,7 +777,7 @@ class SummarizeService:
                 return lane, now, "drain"
             fire_t = items[0].submit_t + self.config.max_wait_s
             trigger = "max_wait"
-            est = self._exec_est.get(lane, 0.0)
+            est = self._exec_est.get((lane, 0), 0.0)
             for it in items:
                 if it.deadline_t is None:
                     continue
@@ -599,7 +792,9 @@ class SummarizeService:
         """Background consumer loop (async scheduler): sleep until the next
         firing time, pull ≤ max_batch from the fired lane's head, execute,
         repeat — submissions during execution land in the lane queues and
-        refill the next bucket (continuous batching)."""
+        refill the next bucket (continuous batching).  Chunk failures and
+        timeouts are absorbed by the recovery loop / :meth:`_resolve_err`,
+        so nothing propagates out of this thread."""
         while True:
             with self._cond:
                 if self._stop:
@@ -624,7 +819,10 @@ class SummarizeService:
 
     def drain(self, timeout: float | None = None) -> None:
         """Force-fire everything queued and block until every admitted
-        ticket has resolved.  On the sync scheduler this is ``flush()``."""
+        ticket has resolved.  On the sync scheduler this is ``flush()``.
+        Raises TimeoutError when ``timeout`` elapses with tickets still in
+        flight — those tickets stay live (``result`` on one raises
+        :class:`TicketPending` until its chunk lands)."""
         if self._thread is None:
             self.flush(trigger="drain")
             return
@@ -678,23 +876,259 @@ class SummarizeService:
         self.drain()
         return [t.result(timeout=0) for t in tickets]
 
+    # -- recovery ----------------------------------------------------------
     def _run_chunk(
         self, lane: tuple, items: list[_QueueItem], trigger: str
     ) -> None:
+        """Execute one popped chunk through the recovery loop; whatever
+        happens, every ticket in ``items`` ends settled."""
+        for it in items:
+            it.ticket._state = "executing"
         try:
-            self._exec_chunk(lane, items, trigger)
+            degradation = self._degradation_plan(lane, items)
+            self._execute_with_recovery(lane, items, trigger, degradation)
         except Exception as e:  # noqa: BLE001 - captured on the tickets
-            with self._cond:
-                self._stats["failed"] += len(items)
-                self._outstanding -= len(items)
-                self._cond.notify_all()
-            for it in items:
-                it.ticket._fail(e)
+            self._resolve_err(items, e)
 
+    def _execute_with_recovery(
+        self, lane: tuple, items: list[_QueueItem], trigger: str,
+        degradation: dict | None,
+    ) -> None:
+        """Retry → failover → per-query isolation.
+
+        Per stage (primary backend, then ``failover_backend`` when it
+        resolves to a different backend): ``max_retries + 1`` attempts with
+        ``retry_backoff_s``·2^(attempt−1) sleeps between them.  A
+        :class:`ChunkTimeout` skips the remaining retries of its stage (a
+        hung signature is not re-run) but still fails over.  When every
+        stage is exhausted and the chunk has >1 query,
+        ``isolate_on_failure`` re-runs it one query at a time on the last
+        stage's backend — the poisoned query fails alone, its chunk-mates
+        complete.  Attempts that already lost their tickets to a faster
+        attempt are no-ops (first-wins settle)."""
+        cfg = self.config
+        primary = resolve_backend(cfg.backend)
+        stages = [("primary", primary)]
+        if cfg.failover_backend is not None:
+            fallback = resolve_backend(cfg.failover_backend)
+            if fallback.name != primary.name:
+                stages.append(("failover", fallback))
+        failures = 0
+        tried: list[str] = []
+        last_err: Exception | None = None
+        for stage, be in stages:
+            if be.name not in tried:
+                tried.append(be.name)
+            if stage == "failover":
+                with self._cond:
+                    self._stats["failovers"] += 1
+            for attempt in range(cfg.max_retries + 1):
+                if attempt > 0:
+                    time.sleep(cfg.retry_backoff_s * (2 ** (attempt - 1)))
+                recovery = None
+                if failures > 0:
+                    with self._cond:
+                        self._stats["retries"] += 1
+                    recovery = {
+                        "retries": failures,
+                        "stage": stage,
+                        "backends": tuple(tried),
+                        "isolated": False,
+                    }
+                try:
+                    self._attempt_with_watchdog(
+                        lambda be=be, stage=stage, recovery=recovery:
+                        self._exec_chunk(
+                            lane, items, trigger, backend=be, stage=stage,
+                            degradation=degradation, recovery=recovery,
+                        )
+                    )
+                    return
+                except ChunkTimeout as e:
+                    last_err = e
+                    failures += 1
+                    with self._cond:
+                        self._stats["chunk_timeouts"] += 1
+                    break  # hung signature: don't re-run it in this stage
+                except Exception as e:  # noqa: BLE001 - recovery continues
+                    last_err = e
+                    failures += 1
+        if cfg.isolate_on_failure and len(items) > 1:
+            stage_be = stages[-1][1]
+            for it in items:
+                recovery = {
+                    "retries": failures,
+                    "stage": "isolated",
+                    "backends": tuple(tried),
+                    "isolated": True,
+                }
+                try:
+                    self._attempt_with_watchdog(
+                        lambda it=it, recovery=recovery: self._exec_chunk(
+                            lane, [it], trigger, backend=stage_be,
+                            stage="isolated", degradation=degradation,
+                            recovery=recovery,
+                        )
+                    )
+                except Exception as e:  # noqa: BLE001 - this query fails alone
+                    self._resolve_err([it], e)
+            return
+        raise last_err
+
+    def _attempt_with_watchdog(self, call: Callable[[], None]) -> None:
+        """Run one chunk attempt, bounded by ``chunk_timeout_s``.
+
+        With the watchdog armed the attempt runs in a daemon worker thread;
+        if it outlives the budget the attempt is abandoned with
+        :class:`ChunkTimeout` — the worker keeps running (a genuinely hung
+        device call cannot be interrupted from Python) but its late results
+        are discarded by the tickets' first-wins settle and it accounts for
+        nothing."""
+        timeout = self.config.chunk_timeout_s
+        if timeout is None:
+            call()
+            return
+        box: dict[str, BaseException] = {}
+        done = threading.Event()
+
+        def worker():
+            try:
+                call()
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                box["error"] = e
+            finally:
+                done.set()
+
+        t = threading.Thread(
+            target=worker, name="summarize-chunk", daemon=True
+        )
+        t.start()
+        if not done.wait(timeout):
+            raise ChunkTimeout(
+                f"chunk attempt exceeded chunk_timeout_s={timeout}s; "
+                "abandoned (late results are discarded)"
+            )
+        err = box.get("error")
+        if err is not None:
+            raise err
+
+    # -- degradation ladder ------------------------------------------------
+    def _ladder_levels(self, lane: tuple) -> list[dict]:
+        """The lane's resolved ladder: per level, the cumulative (r, c,
+        selector) actually run and the predicted cost ratio vs the previous
+        level (``ss_cost_model`` for SS-side steps; 1.0 — i.e. "unknown,
+        keep walking" — for the selection-side stochastic step until its
+        (lane, level) EWMA seeds)."""
+        levels = self._ladder_cache.get(lane)
+        if levels is not None:
+            return levels
+        cfg = self.config
+        n = lane[2][0]
+        use_ss = lane[6]
+        r, c, selector = cfg.r, cfg.c, "greedy"
+        levels = []
+        for step in cfg.ladder:
+            base = ss_cost_model(n, r, c) if use_ss else None
+            if step == "bump_c":
+                c = c * 4.0
+            elif step == "shrink_r":
+                r = max(1, r // 2)
+            else:  # stochastic_greedy
+                selector = "stochastic"
+            ratio = 1.0
+            if base is not None and step in ("bump_c", "shrink_r"):
+                ratio = ss_cost_model(n, r, c) / base
+            levels.append({
+                "step": step, "r": r, "c": c, "selector": selector,
+                "ratio": ratio,
+            })
+        self._ladder_cache[lane] = levels
+        return levels
+
+    def _degradation_plan(
+        self, lane: tuple, items: list[_QueueItem]
+    ) -> dict | None:
+        """Decide how degraded this chunk runs (None = full quality).
+
+        ``ladder_force`` (test/bench hook) short-circuits to a fixed level.
+        Under admission pressure (outstanding work — queued or executing —
+        ≥ ``ladder_pressure`` × ``max_pending``) the chunk runs fully
+        degraded: the queue is the deadline.  Otherwise the planner walks the ladder while the level's
+        execution estimate (measured (lane, level) EWMA, else the previous
+        level's estimate × the predicted cost ratio) exceeds the chunk's
+        tightest deadline budget.  Cold lanes (no level-0 sample yet) never
+        degrade on the deadline path: the first compile is unpredictable
+        and a served-late-but-full-quality answer is the better default."""
+        cfg = self.config
+        if not cfg.ladder:
+            return None
+        levels = self._ladder_levels(lane)
+        n_steps = 0
+        reason = None
+        if cfg.ladder_force is not None:
+            n_steps = max(0, min(cfg.ladder_force, len(levels)))
+            reason = "forced"
+        else:
+            with self._cond:
+                outstanding = self._outstanding
+                est0 = self._exec_est.get((lane, 0))
+                ests = {
+                    lv: self._exec_est.get((lane, lv))
+                    for lv in range(1, len(levels) + 1)
+                }
+            cap = cfg.max_pending
+            if cap is not None and outstanding >= cfg.ladder_pressure * cap:
+                n_steps = len(levels)
+                reason = "pressure"
+            elif est0 is not None:
+                deadlines = [
+                    it.deadline_t for it in items if it.deadline_t is not None
+                ]
+                if deadlines:
+                    budget = (
+                        min(deadlines) - time.perf_counter() - cfg.slack_s
+                    )
+                    est = est0
+                    while n_steps < len(levels) and est > budget:
+                        ratio = levels[n_steps]["ratio"]
+                        n_steps += 1
+                        measured = ests.get(n_steps)
+                        est = measured if measured is not None else est * ratio
+                    reason = "deadline"
+        if n_steps == 0:
+            return None
+        lv = levels[n_steps - 1]
+        return {
+            "steps": tuple(cfg.ladder[:n_steps]),
+            "level": n_steps,
+            "r": lv["r"],
+            "c": lv["c"],
+            "selector": lv["selector"],
+            "reason": reason,
+        }
+
+    # -- chunk execution ---------------------------------------------------
     def _exec_chunk(
-        self, lane: tuple, items: list[_QueueItem], trigger: str
+        self, lane: tuple, items: list[_QueueItem], trigger: str, *,
+        backend=None, stage: str = "primary",
+        degradation: dict | None = None, recovery: dict | None = None,
     ) -> None:
         cfg = self.config
+        be = resolve_backend(cfg.backend if backend is None else backend)
+        fault = None
+        if self._faults is not None:
+            fault = self._faults.draw(
+                tickets=tuple(it.ticket.index for it in items),
+                lane=lane, backend=be.name, stage=stage,
+            )
+        if fault is not None and fault.kind == "exec_error":
+            raise FaultInjected(
+                f"injected exec error on tickets "
+                f"{[it.ticket.index for it in items]} ({stage}/{be.name})"
+            )
+        if fault is not None and fault.kind in ("latency", "hang"):
+            time.sleep(fault.delay_s)
+
         reqs = [it.request for it in items]
         n_real = len(reqs)
         bucket = min(b for b in self._buckets if b >= n_real)
@@ -705,19 +1139,38 @@ class SummarizeService:
 
         on_step = None
         if cfg.stream_steps:
+            for it in items:
+                it.ticket._steps.clear()    # a retried attempt restarts it
+
             def on_step(step, v, g, ok):
                 for i, it in enumerate(items):
                     if bool(ok[i]):
                         it.ticket._steps.append((int(v[i]), float(g[i])))
 
+        deg = degradation
         t_start = time.perf_counter()
         fn, alive = build_batch_objective(padded, n_pad)
         keys = jnp.stack([r.prng_key() for r in padded])
         res, ss = summarize_batch(
-            fn, k, keys, r=cfg.r, c=cfg.c, use_ss=use_ss, alive=alive,
-            backend=cfg.backend, compact=cfg.compact, on_step=on_step,
+            fn, k, keys,
+            r=cfg.r if deg is None else deg["r"],
+            c=cfg.c if deg is None else deg["c"],
+            use_ss=use_ss, alive=alive,
+            backend=be, compact=cfg.compact, on_step=on_step,
+            selector="greedy" if deg is None else deg["selector"],
+            eps=cfg.eps,
         )
         jax.block_until_ready(res.value)
+        if fault is not None and fault.kind == "malformed":
+            res = res._replace(gains=jnp.full_like(res.gains, jnp.nan))
+        finite = bool(
+            jnp.all(jnp.isfinite(res.gains[:n_real]))
+            & jnp.all(jnp.isfinite(res.value[:n_real]))
+        )
+        if not finite:
+            raise MalformedResult(
+                f"non-finite gains/value in chunk results ({stage}/{be.name})"
+            )
         t_end = time.perf_counter()
         exec_s = t_end - t_start
 
@@ -725,12 +1178,10 @@ class SummarizeService:
             None if ss is None else jnp.sum(ss.vprime, axis=1)
         )
         responses = []
-        missed = 0
         for i, it in enumerate(items):
             deadline_missed = (
                 None if it.deadline_t is None else t_end > it.deadline_t
             )
-            missed += bool(deadline_missed)
             responses.append(SummarizeResponse(
                 selected=res.selected[i],
                 gains=res.gains[i],
@@ -745,42 +1196,75 @@ class SummarizeService:
                 exec_s=exec_s,
                 trigger=trigger,
                 deadline_missed=deadline_missed,
+                degradation=deg,
+                recovery=recovery,
             ))
+        # Settle before accounting: first-wins — a watchdog-abandoned
+        # attempt finishing late loses every ticket here and must account
+        # for nothing; and drain()'s _outstanding==0 then guarantees every
+        # ticket is already resolved (no settle/drain race).
+        settled = [
+            (it, resp) for it, resp in zip(items, responses)
+            if it.ticket._settle(response=resp)
+        ]
+        if not settled:
+            return
+        missed = sum(bool(r.deadline_missed) for _, r in settled)
         with self._cond:
             st = self._stats
             st["batches"] += 1
-            st["queries"] += n_real
+            st["queries"] += len(settled)
             st["slots"] += bucket
             st["padded_slots"] += bucket - n_real
             st["exec_s_sum"] += exec_s
             st["lanes"].add((lane, bucket))
             st["triggers"][trigger] = st["triggers"].get(trigger, 0) + 1
             st["deadlines_missed"] += missed
-            for resp in responses:
+            if deg is not None:
+                st["degraded"] += len(settled)
+            if stage == "isolated":
+                st["isolated_queries"] += len(settled)
+            for _, resp in settled:
                 st["queue_delay_s_sum"] += resp.queue_delay_s
                 st["queue_delay_s_max"] = max(
                     st["queue_delay_s_max"], resp.queue_delay_s
                 )
-            # EWMA execution estimate drives the deadline-slack trigger; the
-            # first sample seeds it (before that the estimate is 0 — a
+            # EWMA execution estimate drives the deadline-slack trigger and
+            # the degradation planner; keyed (lane, ladder level) so a
+            # degraded sample never corrupts the full-quality estimate.
+            # The first sample seeds it (before that the estimate is 0 — a
             # deadline shorter than the first compile is simply served late
             # and flagged, never dropped).
-            prev = self._exec_est.get(lane)
-            self._exec_est[lane] = (
+            est_key = (lane, 0 if deg is None else deg["level"])
+            prev = self._exec_est.get(est_key)
+            self._exec_est[est_key] = (
                 exec_s if prev is None else 0.5 * prev + 0.5 * exec_s
             )
-            self._outstanding -= len(items)
+            self._outstanding -= len(settled)
             self._cond.notify_all()
-        for it, resp in zip(items, responses):
-            it.ticket._fulfill(resp)
+
+    def _resolve_err(
+        self, items: list[_QueueItem], error: BaseException
+    ) -> None:
+        """Fail every not-yet-settled ticket in ``items`` with ``error`` and
+        account only for the ones this call actually settled."""
+        settled = [it for it in items if it.ticket._settle(error=error)]
+        if not settled:
+            return
+        with self._cond:
+            self._stats["failed"] += len(settled)
+            self._outstanding -= len(settled)
+            self._cond.notify_all()
 
     # -- accounting --------------------------------------------------------
     def stats(self) -> dict:
         """Aggregate serving counters: query/batch totals, padding waste
         (fraction of executed slots burned on bucket padding), queue-delay
         mean/max, distinct compiled signatures, firing-trigger counts,
-        missed deadlines, and failed (admission- or execution-errored)
-        tickets."""
+        missed deadlines, failed (admission- or execution-errored) tickets,
+        and the fault-tolerance counters — retried attempts, chunks that
+        reached failover, queries served from per-query isolation, watchdog
+        chunk timeouts, and queries served degraded."""
         with self._cond:
             st = dict(self._stats)
             st["triggers"] = dict(self._stats["triggers"])
@@ -796,4 +1280,9 @@ class SummarizeService:
             "triggers": st["triggers"],
             "deadlines_missed": st["deadlines_missed"],
             "failed": st["failed"],
+            "retries": st["retries"],
+            "failovers": st["failovers"],
+            "isolated_queries": st["isolated_queries"],
+            "chunk_timeouts": st["chunk_timeouts"],
+            "degraded": st["degraded"],
         }

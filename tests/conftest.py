@@ -1,0 +1,69 @@
+"""Repo-wide pytest wiring: a per-test wall-clock timeout so a wedged
+flusher (or a hung device call) fails the test fast instead of hanging the
+whole runner.
+
+CI installs the real ``pytest-timeout`` plugin and the ``timeout`` ini in
+pyproject.toml configures it.  The local container does not ship the
+plugin, so when it is absent this conftest provides a minimal fallback
+honoring the same ``timeout`` ini and ``@pytest.mark.timeout(...)`` marker:
+SIGALRM-based, main-thread only, POSIX only — enough to break a test
+blocked on a ``Condition``/``Event`` wait.  With the plugin installed this
+entire module is a no-op (the plugin owns the option and the marker)."""
+
+import importlib.util
+import signal
+import threading
+
+import pytest
+
+_HAVE_PLUGIN = importlib.util.find_spec("pytest_timeout") is not None
+
+if not _HAVE_PLUGIN:
+
+    def pytest_addoption(parser):
+        parser.addini(
+            "timeout",
+            "per-test timeout in seconds (SIGALRM fallback; the real "
+            "pytest-timeout plugin takes over when installed)",
+            default=None,
+        )
+
+    def pytest_configure(config):
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test wall-clock timeout override "
+            "(fallback implementation when pytest-timeout is absent)",
+        )
+
+    def _timeout_for(item):
+        marker = item.get_closest_marker("timeout")
+        if marker is not None and marker.args:
+            return float(marker.args[0])
+        ini = item.config.getini("timeout")
+        return float(ini) if ini else None
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        timeout = _timeout_for(item)
+        usable = (
+            timeout
+            and hasattr(signal, "SIGALRM")
+            and threading.current_thread() is threading.main_thread()
+        )
+        if not usable:
+            yield
+            return
+
+        def _alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded per-test timeout of {timeout}s "
+                "(tests/conftest.py SIGALRM fallback)"
+            )
+
+        old = signal.signal(signal.SIGALRM, _alarm)
+        signal.setitimer(signal.ITIMER_REAL, timeout)
+        try:
+            yield
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, old)
