@@ -91,6 +91,24 @@ print(f"api.summarize:      f(S) = {resp.value:.4f}  "
       f"(|V'| = {resp.vprime_size}, batch {resp.batch_size}/"
       f"{resp.batch_bucket}, queue {resp.queue_delay_s * 1e3:.1f} ms)")
 
+# --- durable streaming sessions ----------------------------------------------
+# A live summary per session over an unbounded element stream: each session
+# runs a multi-threshold sieve online, SS periodically prunes its retained
+# buffer, and (with root=<dir>) a WAL + snapshots make recovery after a
+# crash bit-identical — docs/streaming.md has the full contract.  Volatile
+# engine here (root=None); F matches the session config, elements stream
+# one (F,) row at a time.
+F_s = 64
+eng = api.sessions(api.SessionConfig(k=K, n_features=F_s, buffer_cap=64,
+                                     resparsify_every=16))
+sid = api.open_session(key=0, engine=eng)
+for row in jnp.asarray(news_day(seed=1, n_sentences=256, n_features=F_s)):
+    api.append(sid, row, engine=eng)
+live = api.summary(sid, engine=eng)
+print(f"api.summary (live): f(S) = {live.value:.4f}  "
+      f"(seen {live.seen}, retained {live.retained}, "
+      f"{live.resparsifies} SS compactions)")
+
 # --- matrix-free facility location round-trip --------------------------------
 # StreamingFacilityLocation stores only (n, d) embeddings and computes
 # similarity tiles on the fly — the objective for ground sets where the dense

@@ -17,6 +17,14 @@ All knobs that are not per-query live on one object — :class:`RunConfig` —
 threaded end-to-end (service admission → batched SS → compact greedy).
 Per-query knobs (payload, ``k``, ``key``, objective config, ``deadline_s``)
 live on :class:`SummarizeRequest`.
+
+The *streaming* surface (docs/streaming.md) maintains a crash-safe live
+summary per session over unbounded element streams:
+
+- :func:`sessions` — construct a :class:`SessionEngine` (pass a ``root``
+  directory for the WAL + snapshot durability contract);
+- :func:`open_session` / :func:`append` / :func:`summary` — the per-session
+  verbs, routed to a process-wide default engine when none is given.
 """
 
 from __future__ import annotations
@@ -25,6 +33,11 @@ import dataclasses
 import threading
 
 from repro.serve.faults import FaultPlan
+from repro.serve.sessions import (
+    SessionConfig,
+    SessionEngine,
+    SessionSummary,
+)
 from repro.serve.summarize_service import (
     LADDER_STEPS,
     ChunkTimeout,
@@ -32,12 +45,14 @@ from repro.serve.summarize_service import (
     MalformedResult,
     RunConfig,
     ServiceOverloaded,
+    ServiceRestarted,
     SummarizeRequest,
     SummarizeResponse,
     SummarizeService,
     Ticket,
     TicketPending,
 )
+from repro.serve.wal import WALCorrupt, WALTruncated
 
 __all__ = [
     "LADDER_STEPS",
@@ -47,18 +62,30 @@ __all__ = [
     "MalformedResult",
     "RunConfig",
     "ServiceOverloaded",
+    "ServiceRestarted",
+    "SessionConfig",
+    "SessionEngine",
+    "SessionSummary",
     "SummarizeRequest",
     "SummarizeResponse",
     "SummarizeService",
     "Ticket",
     "TicketPending",
+    "WALCorrupt",
+    "WALTruncated",
+    "append",
+    "default_engine",
     "default_service",
+    "open_session",
     "serve",
+    "sessions",
     "submit",
     "summarize",
+    "summary",
 ]
 
 _default_service: SummarizeService | None = None
+_default_engine: SessionEngine | None = None
 _default_lock = threading.Lock()
 
 
@@ -133,3 +160,61 @@ def summarize(
         phi=phi, kernel=kernel, use_ss=use_ss,
     )
     return svc.run([req])[0]
+
+
+# ------------------------------------------------------------- streaming ----
+
+def sessions(
+    config: SessionConfig | None = None,
+    root: str | None = None,
+    *,
+    faults: FaultPlan | None = None,
+) -> SessionEngine:
+    """A fresh :class:`SessionEngine` — the durable multi-session streaming
+    tier (docs/streaming.md).  ``root=None`` runs volatile; a directory
+    arms the WAL + snapshot durability contract, and constructing a new
+    engine on the same root recovers every session bit-identically.
+    ``faults`` is the chaos hook (``crash``/``restart`` kinds included)."""
+    return SessionEngine(config or SessionConfig(), root, faults=faults)
+
+
+def default_engine(
+    config: SessionConfig | None = None, root: str | None = None
+) -> SessionEngine:
+    """The process-wide engine the session verbs target — created on first
+    use (volatile unless ``root`` is given then).  A crashed or closed
+    default is replaced on the next call; passing a different config while
+    one is live is an error — use :func:`sessions` instead."""
+    global _default_engine
+    with _default_lock:
+        eng = _default_engine
+        if eng is None or eng._dead is not None or eng._closed:
+            _default_engine = SessionEngine(config or SessionConfig(), root)
+        elif config is not None and config != eng.config:
+            raise ValueError(
+                "the default session engine is already configured; use "
+                "repro.api.sessions(config) for a differently-configured one"
+            )
+        return _default_engine
+
+
+def open_session(
+    sid: str | None = None, *, key: int = 0,
+    engine: SessionEngine | None = None,
+) -> str:
+    """Create a streaming session on ``engine`` (default: the process-wide
+    :func:`default_engine`); returns the session id."""
+    return (engine or default_engine()).open_session(sid, key=key)
+
+
+def append(sid: str, row, engine: SessionEngine | None = None) -> int:
+    """Ingest one (F,) feature row into session ``sid``; returns the WAL
+    sequence number — on a durable engine the element survives any crash
+    from the moment this returns."""
+    return (engine or default_engine()).append(sid, row)
+
+
+def summary(sid: str, engine: SessionEngine | None = None) -> SessionSummary:
+    """The session's current k-element summary (flushes pending appends,
+    then greedy over the SS-pruned retained buffer)."""
+    return (engine or default_engine()).summary(sid)

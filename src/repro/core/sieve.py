@@ -1,32 +1,57 @@
-"""Sieve-streaming [Badanidiyuru et al., KDD 2014] — the paper's streaming
-baseline (§4: "50 trials, leading to memory requirement of 50k").
+"""Sieve-streaming [Badanidiyuru et al., KDD 2014] — one-pass streaming
+submodular maximization with the full geometric threshold set.
 
-One pass over the stream; T parallel threshold "sieves" (OPT guesses
-v_j, log-spaced).  Element v is added to sieve j iff
+T parallel threshold "sieves" (OPT guesses v_j).  Element v is added to
+sieve j iff
 
     |S_j| < k   and   f(v | S_j) >= (v_j / 2 - f(S_j)) / (k - |S_j|)
 
-Vectorized: sieve states are stacked (T, ...) and updated with one fused op
-per stream element inside a lax.scan — no per-sieve Python loops.
+and the best sieve achieves f(S) >= (1/2 - eps) * OPT when the guesses are
+the geometric lattice (1+eps)^j restricted to [m, 2*k*m] (m = running max
+singleton) — ``eps`` is the lattice granularity and the guarantee's epsilon
+(tests/test_sieve.py asserts the bound vs greedy, property-tested over
+stream orderings).
 
-Static-shape note: the original algorithm instantiates thresholds lazily from
-the running max singleton m_t and *discards* sieves with v_j < m_t (a memory
-optimization, not a quality one).  We keep a fixed log-spaced grid — sieves
-that the original would not yet have instantiated are simply inactive until
-m_t reaches them (same behaviour: earlier elements are never retroactively
-added), and we do not discard low sieves (only improves quality, costs
-k·T = the paper's quoted "50k" memory).
+The promoted geometric form implements the paper's *lazy instantiation*
+with static shapes: a sieve is keyed to an **absolute** guess
+v_j = (1+eps)^j that stays fixed for its whole lifetime (the analysis needs
+this).  As m grows, guesses below m leave the window [m, 2·k·m] and their
+slots are recycled — reset empty and re-keyed to the new guesses entering
+at the top.  T = ceil(log(2k)/log(1+eps)) + 1 slots exactly cover the
+window, so memory is static while the guess lattice slides with the stream.
+The legacy form (``eps=None``) keeps the earlier fixed log-spaced ratio
+grid anchored to m, unchanged surface.
+
+Vectorized: sieve states are stacked (T, ...) and updated with one fused op
+per stream element — no per-sieve Python loops.  The module exposes three
+layers:
+
+- :func:`sieve_streaming` — the one-shot API (a ``lax.scan`` over a fixed
+  stream), unchanged surface from the earlier single-grid version;
+- the **incremental** API — :func:`sieve_init` / :func:`sieve_update` /
+  :func:`sieve_extend` / :func:`sieve_best` — the same arithmetic exposed
+  per element, so long-lived callers (the streaming session engine,
+  repro.serve.sessions) can persist a :class:`SieveState` between updates;
+  ``sieve_extend(sieve_init(...), stream)`` is *bit-identical* to the
+  one-shot run;
+- the **row-streaming** sieve — :func:`stream_sieve_init` /
+  :func:`stream_sieve_update` — for feature-coverage objectives over
+  *unbounded* streams, where an element is its (F,) feature row and no
+  ground set exists.  State per sieve is the coverage vector, so memory is
+  O(T·(F + k)) regardless of stream length (the constant-memory property
+  the paper's streaming baseline is quoted for).
 """
 
 from __future__ import annotations
 
+import math
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.functions import SubmodularFunction
+from repro.core.functions import SubmodularFunction, _phi
 
 Array = jax.Array
 
@@ -38,60 +63,314 @@ class SieveResult(NamedTuple):
     thresholds: Array  # (T,) the OPT guesses used
 
 
-@partial(jax.jit, static_argnames=("k", "num_thresholds"))
+class SieveState(NamedTuple):
+    """Persistent state of an incremental sieve run (a pytree).
+
+    Geometric mode (``jidx`` is an array): sieve j's OPT guess is the
+    *absolute* value (1+eps)^jidx[j] (``lg`` = log(1+eps)), fixed while the
+    slot lives in the window [m, 2·k·m] and recycled when m outgrows it.
+    Legacy mode (``jidx`` is None): guesses are ``ratios * m`` — the
+    fixed relative grid.  ``sel`` stores the stream values accepted by each
+    sieve (pad = -1); ``t`` counts elements consumed."""
+
+    ratios: Array   # (T,) legacy relative grid (initial guesses otherwise)
+    states: Any     # (T, ...) per-sieve objective state
+    vals: Array     # (T,) f(S_j)
+    counts: Array   # (T,) int32 |S_j|
+    sel: Array      # (T, k) int32 accepted elements (pad = -1)
+    m: Array        # () f32 running max singleton gain
+    t: Array        # () int32 elements consumed
+    jidx: Any = None   # (T,) int32 absolute guess exponents (geometric mode)
+    lg: Any = None     # () f32 log(1+eps) (geometric mode)
+
+
+def threshold_grid(
+    k: int, eps: float | None = None, num_thresholds: int | None = None
+) -> Array:
+    """The initial OPT-guess grid.
+
+    With ``eps`` (the promoted geometric form): the lattice (1+eps)^j for
+    j = 0..T-1 with T = ceil(log(2k)/log(1+eps)) + 1 — exactly enough slots
+    to cover the active window [m, 2·k·m], since OPT ∈ [m, k·m] some guess
+    lands within a (1+eps) factor below OPT and its sieve achieves
+    (1/2 − eps)·OPT [Badanidiyuru et al., Thm. 4.1].  Without ``eps``: the
+    legacy fixed-T log-spaced grid over [m/2, 2·k·m] relative to the
+    running max (``num_thresholds`` defaults to the paper's "50 trials")."""
+    if eps is not None:
+        if eps <= 0:
+            raise ValueError(f"eps must be positive; got {eps}")
+        T = max(1, math.ceil(math.log(2.0 * k) / math.log1p(eps)) + 1)
+        return (1.0 + eps) ** jnp.arange(T, dtype=jnp.float32)
+    T = 50 if num_thresholds is None else num_thresholds
+    return jnp.logspace(
+        jnp.log10(0.5), jnp.log10(2.0 * k), T, dtype=jnp.float32
+    )
+
+
+def _slide_window(jidx: Array, lg: Array, m_prev: Array, m: Array):
+    """Slide the absolute-guess window up to the new running max ``m``.
+
+    Returns ``(jidx', thresholds, reset)``: slots whose guess fell below m
+    are re-keyed T notches up (entering guesses at the top of [m, 2·k·m])
+    and flagged for reset; on the very first element (m_prev == 0) the
+    whole window anchors at m.  Slot identity is j mod T, so distinct
+    exponents stay distinct through any number of recycles."""
+    T = jidx.shape[0]
+    jmin = jnp.where(
+        m > 0,
+        jnp.ceil(jnp.log(jnp.maximum(m, 1e-30)) / lg).astype(jnp.int32),
+        jnp.int32(0),
+    )
+    first = m_prev <= 0
+    base = jnp.where(first, jmin + jnp.arange(T, dtype=jnp.int32), jidx)
+    expired = base < jmin
+    wraps = (jmin - base + T - 1) // T
+    new_jidx = jnp.where(expired, base + wraps * T, base)
+    thr = jnp.exp(new_jidx.astype(jnp.float32) * lg)
+    return new_jidx, thr, first | expired
+
+
+def sieve_init(
+    fn: SubmodularFunction,
+    k: int,
+    eps: float | None = None,
+    num_thresholds: int | None = None,
+) -> SieveState:
+    """Fresh incremental sieve state for ``fn`` under budget ``k``."""
+    ratios = threshold_grid(k, eps, num_thresholds)
+    T = ratios.shape[0]
+    empty = fn.empty_state()
+    states0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (T,) + x.shape).copy(), empty
+    )
+    geometric = eps is not None
+    return SieveState(
+        ratios=ratios,
+        states=states0,
+        vals=jnp.zeros((T,), jnp.float32),
+        counts=jnp.zeros((T,), jnp.int32),
+        sel=jnp.full((T, k), -1, jnp.int32),
+        m=jnp.float32(0.0),
+        t=jnp.int32(0),
+        jidx=jnp.arange(T, dtype=jnp.int32) if geometric else None,
+        lg=jnp.float32(math.log1p(eps)) if geometric else None,
+    )
+
+
+def _sieve_step(fn: SubmodularFunction, state: SieveState, v: Array):
+    """One element through every sieve — the shared scan body."""
+    T = state.vals.shape[0]
+    k = state.sel.shape[1]
+    empty = fn.empty_state()
+
+    def gain_one(s, u):
+        return fn.value(fn.add(s, u)) - fn.value(s)
+
+    g1 = gain_one(empty, v)                            # singleton gain of v
+    m = jnp.maximum(state.m, g1)
+    if state.jidx is None:                             # legacy relative grid
+        jidx = None
+        thr = state.ratios * m
+        states_b, vals_b = state.states, state.vals
+        counts_b, sel_b = state.counts, state.sel
+    else:                                              # absolute guesses
+        jidx, thr, reset = _slide_window(state.jidx, state.lg, state.m, m)
+        states_b = jax.tree.map(
+            lambda s, e: jnp.where(
+                reset.reshape((T,) + (1,) * (s.ndim - 1)),
+                jnp.broadcast_to(e, s.shape),
+                s,
+            ),
+            state.states,
+            empty,
+        )
+        vals_b = jnp.where(reset, 0.0, state.vals)
+        counts_b = jnp.where(reset, 0, state.counts)
+        sel_b = jnp.where(reset[:, None], -1, state.sel)
+    g = jax.vmap(gain_one, in_axes=(0, None))(states_b, v)       # (T,)
+    need = (thr / 2.0 - vals_b) / jnp.maximum(k - counts_b, 1)
+    take = (counts_b < k) & (g >= need)
+    new_states = jax.vmap(fn.add, in_axes=(0, None))(states_b, v)
+    states = jax.tree.map(
+        lambda ns, s: jnp.where(
+            take.reshape((T,) + (1,) * (s.ndim - 1)), ns, s
+        ),
+        new_states,
+        states_b,
+    )
+    sel = jnp.where(
+        take[:, None] & (jnp.arange(k)[None, :] == counts_b[:, None]),
+        v.astype(jnp.int32),
+        sel_b,
+    )
+    return SieveState(
+        ratios=state.ratios,
+        states=states,
+        vals=jnp.where(take, vals_b + g, vals_b),
+        counts=counts_b + take.astype(jnp.int32),
+        sel=sel,
+        m=m,
+        t=state.t + 1,
+        jidx=jidx,
+        lg=state.lg,
+    )
+
+
+@jax.jit
+def sieve_update(
+    fn: SubmodularFunction, state: SieveState, v: Array
+) -> SieveState:
+    """Consume one stream element (an index into ``fn``'s ground set).
+    ``sieve_extend`` over a stream is bit-identical to calling this per
+    element, which is bit-identical to the one-shot :func:`sieve_streaming`."""
+    return _sieve_step(fn, state, jnp.asarray(v))
+
+
+@jax.jit
+def sieve_extend(
+    fn: SubmodularFunction, state: SieveState, stream: Array
+) -> SieveState:
+    """Consume a stream of elements (one fused ``lax.scan``)."""
+    def step(carry, v):
+        return _sieve_step(fn, carry, v), None
+
+    out, _ = jax.lax.scan(step, state, jnp.asarray(stream))
+    return out
+
+
+def sieve_best(state: SieveState) -> SieveResult:
+    """The winning sieve's selections — the algorithm's output set."""
+    best = jnp.argmax(state.vals)
+    if state.jidx is None:
+        thr = state.ratios * state.m
+    else:
+        thr = jnp.exp(state.jidx.astype(jnp.float32) * state.lg)
+    return SieveResult(state.sel[best], state.vals[best], best, thr)
+
+
+@partial(jax.jit, static_argnames=("k", "num_thresholds", "eps"))
 def sieve_streaming(
     fn: SubmodularFunction,
     k: int,
     stream: Array | None = None,
     num_thresholds: int = 50,
-    eps_grid: float | None = None,
+    eps: float | None = None,
 ) -> SieveResult:
-    """Run sieve-streaming over ``stream`` (defaults to 0..n-1 order)."""
-    n = fn.n
-    stream = jnp.arange(n) if stream is None else stream
-    T = num_thresholds
+    """Run sieve-streaming over ``stream`` (defaults to 0..n-1 order).
 
-    # OPT in [m, k*m] with m = max singleton gain; guesses cover [m/2, 2*k*m].
-    # The grid is laid out in *relative* log-space and anchored to the running
-    # max m_t at scan time, which keeps the one-pass property.
-    if eps_grid is None:
-        ratios = jnp.logspace(jnp.log10(0.5), jnp.log10(2.0 * k), T)
-    else:
-        ratios = (1.0 + eps_grid) ** jnp.arange(T)
+    ``eps`` selects the geometric threshold set with the (1/2 − eps)
+    guarantee (``num_thresholds`` is then ignored — T is derived from the
+    window coverage); without it the legacy fixed-count log-spaced grid is
+    used (the paper's 50-trial memory quote)."""
+    stream = jnp.arange(fn.n) if stream is None else stream
+    state = sieve_init(
+        fn, k, eps=eps, num_thresholds=None if eps is not None else num_thresholds
+    )
+    return sieve_best(sieve_extend(fn, state, stream))
 
-    empty = fn.empty_state()
-    states0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (T,) + x.shape).copy(), empty)
-    sel0 = jnp.full((T, k), -1, jnp.int32)
 
-    def gain_one(state, v):
-        return fn.value(fn.add(state, v)) - fn.value(state)
+# ------------------------------------------------- row-streaming sieve ----
+#
+# The unbounded-stream form: elements are (F,) nonnegative feature rows of a
+# concave-over-modular coverage objective f(S) = sum_f phi(c_f(S)) — no
+# ground set, no n.  Per-sieve state is the coverage vector, so one update
+# touches O(T·F) memory however long the stream runs.  This is the per-user
+# primitive of the streaming ingestion tier (repro.serve.sessions).
 
-    def step(carry, v):
-        states, vals, counts, sel, m = carry
-        g1 = gain_one(empty, v)                    # singleton gain of v
-        m = jnp.maximum(m, g1)
-        thr = ratios * m                           # (T,) OPT guesses, anchored
-        g = jax.vmap(gain_one, in_axes=(0, None))(states, v)   # (T,)
-        need = (thr / 2.0 - vals) / jnp.maximum(k - counts, 1)
-        take = (counts < k) & (g >= need)
-        new_states = jax.vmap(fn.add, in_axes=(0, None))(states, v)
-        states = jax.tree.map(
-            lambda ns, s: jnp.where(
-                take.reshape((T,) + (1,) * (s.ndim - 1)), ns, s
-            ),
-            new_states,
-            states,
+#: phi transforms valid for the row-streaming sieve: phi(0) = 0 and no
+#: ground-set-dependent saturation cap ("satcov" needs column sums over a
+#: ground set that an unbounded stream does not have).
+STREAM_PHIS = ("sqrt", "log1p", "setcover", "linear")
+
+
+class StreamSieveState(NamedTuple):
+    """Persistent per-stream sieve state (a pytree; all leaves are arrays so
+    it snapshots to disk exactly — repro.serve.sessions).  Always geometric:
+    sieve j's guess is the absolute (1+eps)^jidx[j], recycled as the window
+    [m, 2·k·m] slides up with the running max."""
+
+    jidx: Array     # (T,) int32 absolute guess exponents
+    lg: Array       # () f32 log(1+eps)
+    cov: Array      # (T, F) per-sieve coverage vectors
+    vals: Array     # (T,) f(S_j)
+    counts: Array   # (T,) int32 |S_j|
+    sel: Array      # (T, k) int32 accepted stream positions (pad = -1)
+    m: Array        # () f32 running max singleton gain
+    t: Array        # () int32 elements consumed (the stream position)
+
+
+def stream_sieve_init(
+    k: int,
+    n_features: int,
+    eps: float = 0.2,
+    dtype=jnp.float32,
+) -> StreamSieveState:
+    """Fresh row-streaming sieve state (geometric lattice from ``eps``)."""
+    T = threshold_grid(k, eps).shape[0]
+    return StreamSieveState(
+        jidx=jnp.arange(T, dtype=jnp.int32),
+        lg=jnp.float32(math.log1p(eps)),
+        cov=jnp.zeros((T, n_features), dtype),
+        vals=jnp.zeros((T,), jnp.float32),
+        counts=jnp.zeros((T,), jnp.int32),
+        sel=jnp.full((T, k), -1, jnp.int32),
+        m=jnp.float32(0.0),
+        t=jnp.int32(0),
+    )
+
+
+@partial(jax.jit, static_argnames=("phi",))
+def stream_sieve_update(
+    state: StreamSieveState, w: Array, phi: str = "sqrt"
+) -> tuple[StreamSieveState, Array]:
+    """Consume one stream element — its (F,) nonnegative feature row.
+
+    Returns ``(new_state, accepted)`` where ``accepted`` is True iff any
+    sieve took the element — the retention signal the session engine uses
+    to decide whether the raw row enters the retained buffer (rejected
+    elements are discarded forever: constant memory per update)."""
+    if phi not in STREAM_PHIS:
+        raise ValueError(
+            f"stream sieve supports phi in {STREAM_PHIS}; got {phi!r}"
         )
-        sel = jnp.where(
-            take[:, None] & (jnp.arange(k)[None, :] == counts[:, None]),
-            v,
-            sel,
-        )
-        vals = jnp.where(take, vals + g, vals)
-        counts = counts + take.astype(jnp.int32)
-        return (states, vals, counts, sel, m), None
+    k = state.sel.shape[1]
+    w = jnp.asarray(w)
+    g1 = jnp.sum(_phi(phi, w, None))                  # singleton gain (phi(0)=0)
+    m = jnp.maximum(state.m, g1)
+    jidx, thr, reset = _slide_window(state.jidx, state.lg, state.m, m)
+    cov_b = jnp.where(reset[:, None], 0.0, state.cov)
+    vals_b = jnp.where(reset, 0.0, state.vals)
+    counts_b = jnp.where(reset, 0, state.counts)
+    sel_b = jnp.where(reset[:, None], -1, state.sel)
+    g = jnp.sum(
+        _phi(phi, cov_b + w[None, :], None) - _phi(phi, cov_b, None),
+        axis=-1,
+    )                                                  # (T,)
+    need = (thr / 2.0 - vals_b) / jnp.maximum(k - counts_b, 1)
+    take = (counts_b < k) & (g >= need)
+    cov = jnp.where(take[:, None], cov_b + w[None, :], cov_b)
+    sel = jnp.where(
+        take[:, None] & (jnp.arange(k)[None, :] == counts_b[:, None]),
+        state.t,
+        sel_b,
+    )
+    new = StreamSieveState(
+        jidx=jidx,
+        lg=state.lg,
+        cov=cov,
+        vals=jnp.where(take, vals_b + g, vals_b),
+        counts=counts_b + take.astype(jnp.int32),
+        sel=sel,
+        m=m,
+        t=state.t + 1,
+    )
+    return new, jnp.any(take)
 
-    init = (states0, jnp.zeros((T,)), jnp.zeros((T,), jnp.int32), sel0, jnp.float32(0.0))
-    (states, vals, counts, sel, m), _ = jax.lax.scan(step, init, stream)
-    best = jnp.argmax(vals)
-    return SieveResult(sel[best], vals[best], best, ratios * m)
+
+def stream_sieve_best(state: StreamSieveState) -> SieveResult:
+    """The winning sieve's accepted stream positions and value."""
+    best = jnp.argmax(state.vals)
+    return SieveResult(
+        state.sel[best], state.vals[best], best,
+        jnp.exp(state.jidx.astype(jnp.float32) * state.lg),
+    )

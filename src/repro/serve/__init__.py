@@ -16,6 +16,12 @@ from repro.serve.kv_select import (
     select_positions,
     select_positions_batched,
 )
+from repro.serve.sessions import (
+    SessionConfig,
+    SessionEngine,
+    SessionState,
+    SessionSummary,
+)
 from repro.serve.summarize_service import (
     LADDER_STEPS,
     ChunkTimeout,
@@ -24,6 +30,7 @@ from repro.serve.summarize_service import (
     RunConfig,
     ServiceConfig,
     ServiceOverloaded,
+    ServiceRestarted,
     SummarizeRequest,
     SummarizeResponse,
     SummarizeService,
@@ -31,4 +38,11 @@ from repro.serve.summarize_service import (
     TicketPending,
     batch_buckets,
     summarize_batch,
+)
+from repro.serve.wal import (
+    WALCorrupt,
+    WALTruncated,
+    WalRecord,
+    WalWriter,
+    scan_wal,
 )

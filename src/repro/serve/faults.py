@@ -12,7 +12,17 @@ attempts (a global, service-wide attempt counter) to faults:
   injected sleep is what the abandoned worker burns (a wedged kernel);
 - ``malformed``    — the attempt executes but its results are corrupted to
   NaN before the executor's result validation, which must catch them
-  (:class:`repro.serve.summarize_service.MalformedResult`) and retry.
+  (:class:`repro.serve.summarize_service.MalformedResult`) and retry;
+- ``crash``        — the process dies mid-stream: the engine drawing the
+  fault kills itself (in-memory state discarded, every in-flight ticket
+  settled with :class:`~repro.serve.summarize_service.ServiceRestarted`,
+  all further calls rejected) — recovery means constructing a fresh engine,
+  which for the durable session tier (repro.serve.sessions) replays
+  snapshot + WAL back to the exact pre-crash state;
+- ``restart``      — a crash immediately followed by an in-place recovery:
+  in-memory state is discarded and reloaded from durable storage (sessions
+  engine), or in-flight tickets are settled with ``ServiceRestarted`` while
+  the service itself keeps serving new submissions (summarize service).
 
 The plan is threaded into :class:`~repro.serve.summarize_service.
 SummarizeService` via the ``faults=`` constructor hook; production services
@@ -46,10 +56,10 @@ class Fault:
     """One scheduled fault: ``kind`` plus the sleep it injects (``delay_s``
     is only meaningful for ``latency`` / ``hang``)."""
 
-    kind: str                   # exec_error | latency | hang | malformed
+    kind: str        # exec_error | latency | hang | malformed | crash | restart
     delay_s: float = 0.0
 
-    KINDS = ("exec_error", "latency", "hang", "malformed")
+    KINDS = ("exec_error", "latency", "hang", "malformed", "crash", "restart")
 
     def __post_init__(self):
         if self.kind not in self.KINDS:
@@ -100,6 +110,8 @@ class FaultPlan:
         p_latency: float = 0.0,
         p_hang: float = 0.0,
         p_malformed: float = 0.0,
+        p_crash: float = 0.0,
+        p_restart: float = 0.0,
         latency_s: float = 0.05,
         hang_s: float = 5.0,
     ) -> "FaultPlan":
@@ -111,6 +123,8 @@ class FaultPlan:
             "latency": p_latency,
             "hang": p_hang,
             "malformed": p_malformed,
+            "crash": p_crash,
+            "restart": p_restart,
         }
         if sum(probs.values()) > 1.0:
             raise ValueError(f"fault probabilities sum past 1: {probs}")

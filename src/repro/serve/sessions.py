@@ -1,0 +1,910 @@
+"""Durable multi-session streaming: crash-safe sieve×SS ingestion tier.
+
+The millions-of-users north star needs a *live summary per user* over an
+unbounded element stream.  This module is that tier:
+
+- Each session owns a full Badanidiyuru multi-threshold sieve
+  (:class:`repro.core.sieve.StreamSieveState` — the promoted threshold-set
+  algorithm, constant memory per update) deciding *online* which elements
+  matter at all.
+- Accepted elements' raw feature rows land in a bounded retained buffer;
+  when the buffer accumulates ``resparsify_every`` inserts (or fills), SS
+  (:func:`repro.core.sparsify.ss_sparsify_batched`) prunes it back down —
+  the paper's pruning applied as periodic compaction of a stream's memory.
+- :meth:`SessionEngine.summary` runs greedy over the (pruned) buffer for
+  the session's current k-element summary.
+
+Appends from many sessions execute as *waves* through the same bucketed
+micro-batch machinery as the summarize service: one pending element per
+session per wave, sessions stacked with ``jax.vmap`` and padded to a
+``batch_buckets`` size so every wave shares a compile signature.  The
+repo-wide batching contract (batched execution is row-for-row bit-identical
+to sequential execution) is what lets a crash recovery replay a single
+session at B=1 and still reproduce exactly what a B=8 live wave computed.
+
+Durability contract (docs/streaming.md):
+
+- **WAL first.**  Every ``append`` writes an APPEND record (seq, raw f32
+  row, crc32) to the session's write-ahead log via
+  :class:`repro.serve.wal.WalWriter` *before* acknowledging; session
+  creation writes an OPEN record carrying the PRNG key and the engine
+  config signature.
+- **Snapshots.**  After ``snapshot_every`` applied appends (policy), or on
+  demand / at close, the full :class:`SessionState` — threshold state,
+  retained buffer, PRNG key, element counter — checkpoints to an atomic
+  ``snap-<applied_seq>.npz`` (tmp + ``os.replace``).
+- **Recovery = snapshot + WAL tail.**  Rehydration loads the newest
+  loadable snapshot (a corrupt one falls back to the previous, loudly, via
+  an auditable event) and replays WAL records with ``seq > applied_seq``
+  through the *same* wave kernels.  A recovered session is **bit-identical**
+  — thresholds, retained set, PRNG key state, element counter, summary —
+  to one that never crashed, on either backend.
+- **Fail loudly.**  A checksum or framing violation mid-WAL raises
+  :class:`repro.serve.wal.WALCorrupt`; acknowledged records are never
+  silently dropped.  Only the torn tail a crash leaves mid-write (by
+  definition unacknowledged) may be skipped, and only by explicit opt-in
+  (``SessionConfig.tolerate_torn_tail``).
+
+Memory pressure reuses the PR-8 degradation-record convention: when more
+than ``max_live_sessions`` sessions are hydrated, the least-recently-used
+idle session is evicted — snapshot, then release device state — and lazily
+rehydrated on its next append/summary.  Every rung emits an auditable
+event (``engine.events``): ``{"step": "evict", ...}`` down,
+``{"step": "rehydrate", ...}`` back up.
+
+Chaos hook: the PR-8 :class:`repro.serve.faults.FaultPlan` threads in via
+``faults=``.  Beyond the existing kinds (``exec_error`` aborts the wave
+with pending intact — nothing is lost, the next flush retries;
+``latency``/``hang`` stall it), two new kinds exercise the durability
+story: ``crash`` kills the engine (all in-memory state gone, every further
+call raises :class:`ServiceRestarted`; recovery = construct a new engine
+on the same root) and ``restart`` simulates kill + immediate reopen (the
+engine drops its in-memory state and lazily rehydrates from disk — no
+acknowledged element is lost).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import re
+import time
+from collections import deque
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    STREAM_PHIS,
+    FeatureCoverage,
+    greedy,
+    resolve_backend,
+    ss_sparsify_batched,
+    stream_sieve_init,
+    stream_sieve_update,
+)
+from repro.serve import wal as _wal
+from repro.serve.faults import FaultInjected, FaultPlan
+from repro.serve.summarize_service import ServiceRestarted, batch_buckets
+
+Array = jax.Array
+
+#: Snapshot / WAL-OPEN payload schema version.
+SCHEMA_VERSION = 1
+
+_SID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]{0,63}$")
+
+#: SessionConfig fields that determine the state *trajectory* — two engines
+#: agreeing on these replay a WAL to bit-identical states.  (``backend`` is
+#: deliberately excluded: it is an execution strategy, pinned identical
+#: across oracle/pallas by the kernel parity tests.)
+_SIG_FIELDS = (
+    "k", "eps", "n_features", "phi", "buffer_cap",
+    "resparsify_every", "ss_r", "ss_c",
+)
+
+
+# ------------------------------------------------------------- config -------
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    """Engine-wide configuration (one config governs every session).
+
+    ``k``/``eps`` parameterize the per-session sieve (geometric threshold
+    grid); ``buffer_cap``/``resparsify_every``/``ss_r``/``ss_c`` govern the
+    retained buffer and its periodic SS compaction; ``max_batch``/
+    ``batch_c`` shape the wave buckets (same convention as ``RunConfig``);
+    ``snapshot_every``/``wal_fsync``/``tolerate_torn_tail`` set the
+    durability policy and ``max_live_sessions`` arms the eviction ladder
+    (both need a durable ``root``)."""
+
+    k: int = 8
+    eps: float = 0.2
+    n_features: int = 64
+    phi: str = "sqrt"
+    buffer_cap: int = 128
+    resparsify_every: int = 32
+    ss_r: int = 4
+    ss_c: float = 8.0
+    backend: Any = None
+    max_batch: int = 8
+    batch_c: float = 4.0
+    flush_every: int | None = None      # pending appends per auto-flush
+    snapshot_every: int | None = 64     # applied appends per snapshot
+    wal_fsync: bool = False
+    tolerate_torn_tail: bool = False
+    max_live_sessions: int | None = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1; got {self.k}")
+        if self.eps <= 0:
+            raise ValueError(f"eps must be positive; got {self.eps}")
+        if self.n_features < 1:
+            raise ValueError(f"n_features must be >= 1; got {self.n_features}")
+        if self.phi not in STREAM_PHIS:
+            raise ValueError(
+                f"session phi must be one of {STREAM_PHIS}; got {self.phi!r}"
+            )
+        if self.buffer_cap < self.k:
+            raise ValueError(
+                f"buffer_cap must be >= k; got {self.buffer_cap} < {self.k}"
+            )
+        for name in ("resparsify_every", "ss_r", "max_batch"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1")
+        for name in ("flush_every", "snapshot_every", "max_live_sessions"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be None or >= 1")
+
+    def signature(self) -> str:
+        """The trajectory-determining config, canonically serialized —
+        stamped into every OPEN record and snapshot, checked at recovery
+        (replaying under a different config would *silently* produce a
+        different, equally-plausible state)."""
+        return json.dumps(
+            {f: getattr(self, f) for f in _SIG_FIELDS}, sort_keys=True
+        )
+
+
+# ------------------------------------------------------------- state --------
+
+class SessionState(NamedTuple):
+    """Everything one session is, as a pytree of arrays — exactly what a
+    snapshot persists and what recovery must reproduce bit-for-bit."""
+
+    sieve: Any      # StreamSieveState (thresholds, coverage, counters)
+    buf: Array      # (cap, F) retained raw feature rows
+    buf_ids: Array  # (cap,) int32 element ids (stream positions); -1 = empty
+    buf_len: Array  # () int32 occupied slots
+    inserts: Array  # () int32 buffer inserts since the last SS compaction
+    n_ss: Array     # () int32 SS compactions so far (the PRNG fold counter)
+    drops: Array    # () int32 sieve-accepted elements lost to a full buffer
+    key: Array      # (2,) uint32 base PRNG key (fold_in(key, n_ss) per SS)
+
+
+def _fresh_state(cfg: SessionConfig, key: Array) -> SessionState:
+    return SessionState(
+        sieve=stream_sieve_init(cfg.k, cfg.n_features, cfg.eps),
+        buf=jnp.zeros((cfg.buffer_cap, cfg.n_features), jnp.float32),
+        buf_ids=jnp.full((cfg.buffer_cap,), -1, jnp.int32),
+        buf_len=jnp.int32(0),
+        inserts=jnp.int32(0),
+        n_ss=jnp.int32(0),
+        drops=jnp.int32(0),
+        key=jnp.asarray(key, jnp.uint32),
+    )
+
+
+_STATE_KEYS = (
+    "sieve_jidx", "sieve_lg", "sieve_cov", "sieve_vals", "sieve_counts",
+    "sieve_sel", "sieve_m", "sieve_t",
+    "buf", "buf_ids", "buf_len", "inserts", "n_ss", "drops", "key",
+)
+
+
+def _state_arrays(state: SessionState) -> dict[str, np.ndarray]:
+    sv = state.sieve
+    vals = (
+        sv.jidx, sv.lg, sv.cov, sv.vals, sv.counts, sv.sel, sv.m, sv.t,
+        state.buf, state.buf_ids, state.buf_len, state.inserts,
+        state.n_ss, state.drops, state.key,
+    )
+    return {k: np.asarray(v) for k, v in zip(_STATE_KEYS, vals)}
+
+
+def _arrays_state(z) -> SessionState:
+    a = {k: jnp.asarray(z[k]) for k in _STATE_KEYS}
+    from repro.core.sieve import StreamSieveState
+    sieve = StreamSieveState(
+        jidx=a["sieve_jidx"], lg=a["sieve_lg"], cov=a["sieve_cov"],
+        vals=a["sieve_vals"], counts=a["sieve_counts"], sel=a["sieve_sel"],
+        m=a["sieve_m"], t=a["sieve_t"],
+    )
+    return SessionState(
+        sieve=sieve, buf=a["buf"], buf_ids=a["buf_ids"],
+        buf_len=a["buf_len"], inserts=a["inserts"], n_ss=a["n_ss"],
+        drops=a["drops"], key=a["key"],
+    )
+
+
+# ------------------------------------------------------------- kernels ------
+
+@partial(jax.jit, static_argnames=("phi",))
+def _wave_kernel(states, rows, valid, phi):
+    """One wave: each stacked session consumes one element (vmapped).
+
+    ``valid`` masks bucket-padding slots — a padded slot's sieve/buffer
+    state passes through untouched, so padding never perturbs the
+    trajectory (the replay-exactness linchpin: live B>1 waves and B=1
+    recovery replay compute identical per-session states)."""
+    def one(st, row, ok):
+        cap = st.buf.shape[0]
+        eid = st.sieve.t                       # this element's stream id
+        new_sieve, accepted = stream_sieve_update(st.sieve, row, phi)
+        take = accepted & ok
+        has_room = st.buf_len < cap
+        ins = take & has_room
+        pos = jnp.minimum(st.buf_len, cap - 1)
+        buf = st.buf.at[pos].set(jnp.where(ins, row, st.buf[pos]))
+        ids = st.buf_ids.at[pos].set(jnp.where(ins, eid, st.buf_ids[pos]))
+        sieve = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), new_sieve, st.sieve
+        )
+        return SessionState(
+            sieve=sieve, buf=buf, buf_ids=ids,
+            buf_len=st.buf_len + ins.astype(jnp.int32),
+            inserts=st.inserts + ins.astype(jnp.int32),
+            n_ss=st.n_ss,
+            drops=st.drops + (take & ~has_room).astype(jnp.int32),
+            key=st.key,
+        ), take, ins
+
+    return jax.vmap(one)(states, rows, valid)
+
+
+@jax.jit
+def _compact_kernel(states, keep):
+    """Compact each stacked buffer down to its SS-surviving rows (vmapped);
+    resets the insert counter and bumps the PRNG fold counter."""
+    def one(st, kp):
+        cap = st.buf.shape[0]
+        idx = jnp.where(kp, size=cap, fill_value=cap)[0]
+        cnt = jnp.sum(kp).astype(jnp.int32)
+        occ = jnp.arange(cap) < cnt
+        buf = jnp.take(st.buf, idx, axis=0, mode="fill", fill_value=0.0)
+        buf = jnp.where(occ[:, None], buf, 0.0)
+        ids = jnp.take(st.buf_ids, idx, mode="fill", fill_value=-1)
+        ids = jnp.where(occ, ids, -1)
+        return st._replace(
+            buf=buf, buf_ids=ids, buf_len=cnt,
+            inserts=jnp.int32(0), n_ss=st.n_ss + 1,
+        )
+
+    return jax.vmap(one)(states, keep)
+
+
+_fold_keys = jax.jit(jax.vmap(jax.random.fold_in))
+
+
+# ------------------------------------------------------------- summary ------
+
+@dataclasses.dataclass(frozen=True)
+class SessionSummary:
+    """One session's current summary: greedy over the SS-pruned buffer."""
+
+    sid: str
+    selected: np.ndarray    # (<=k,) int32 element ids (stream positions)
+    gains: np.ndarray       # (<=k,) float32 greedy marginal gains
+    value: float            # f(summary) over the retained buffer
+    sieve_value: float      # best online sieve value (the (1/2-eps) bound)
+    retained: int           # buffer occupancy after pruning
+    seen: int               # elements consumed since open
+    drops: int              # accepted elements lost to a full buffer
+    resparsifies: int       # SS compactions so far
+
+
+# ------------------------------------------------------------- engine -------
+
+class SessionEngine:
+    """Durable multi-session streaming engine (sieve × SS × WAL).
+
+    ``root=None`` runs volatile (no WAL, no snapshots — state dies with the
+    process); pass a directory to get the full durability contract.  One
+    subdirectory per session holds ``wal.log`` plus ``snap-*.npz``
+    checkpoints.  Construct a new engine on the same root to recover after
+    a crash — sessions rehydrate lazily on first touch.
+
+    The engine is a context manager; exit flushes, snapshots every live
+    session, and closes the WAL writers."""
+
+    def __init__(
+        self,
+        config: SessionConfig | None = None,
+        root: str | None = None,
+        *,
+        faults: FaultPlan | None = None,
+    ):
+        self.config = config or SessionConfig()
+        if not isinstance(self.config, SessionConfig):
+            raise TypeError(
+                f"SessionEngine takes a SessionConfig; got {type(config)!r}"
+            )
+        if root is None and self.config.max_live_sessions is not None:
+            raise ValueError(
+                "max_live_sessions (eviction ladder) requires a durable "
+                "root: eviction releases state that must be rehydratable"
+            )
+        self.root = root
+        self._sig = self.config.signature()
+        self._faults = faults
+        self._buckets = batch_buckets(
+            self.config.max_batch, self.config.batch_c
+        )
+        self._live: dict[str, SessionState] = {}
+        self._pending: dict[str, deque] = {}    # sid -> deque[(seq, row)]
+        self._writers: dict[str, _wal.WalWriter] = {}
+        self._next_seq: dict[str, int] = {}
+        self._applied_seq: dict[str, int] = {}
+        self._since_snap: dict[str, int] = {}
+        self._order: dict[str, int] = {}        # LRU clock per session
+        self._clock = 0
+        self._n_opened = 0
+        self._dead: str | None = None
+        self._closed = False
+        self.events: list[dict] = []
+        self._stats = {
+            "appends": 0, "waves": 0, "wave_slots": 0, "padded_slots": 0,
+            "resparsifies": 0, "snapshots": 0, "snapshot_fallbacks": 0,
+            "rehydrations": 0, "evictions": 0, "restarts": 0, "crashes": 0,
+        }
+        self._known: set[str] = set()
+        if root is not None:
+            os.makedirs(root, exist_ok=True)
+            for d in sorted(os.listdir(root)):
+                if os.path.isfile(os.path.join(root, d, "wal.log")):
+                    self._known.add(d)
+
+    # -- lifecycle ---------------------------------------------------------
+    def __enter__(self) -> "SessionEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._dead is None and not self._closed:
+            self.close()
+
+    def close(self) -> None:
+        """Flush, snapshot every hydrated session, release WAL writers."""
+        self._check_alive()
+        self._apply_waves(None, faults=False)
+        if self.root is not None:
+            for sid in sorted(self._live):
+                self._snapshot(sid)
+        for w in self._writers.values():
+            w.close()
+        self._writers.clear()
+        self._closed = True
+
+    def _check_alive(self) -> None:
+        if self._dead is not None:
+            raise ServiceRestarted(self._dead)
+        if self._closed:
+            raise RuntimeError("the session engine is closed")
+
+    def _touch(self, sid: str) -> None:
+        self._clock += 1
+        self._order[sid] = self._clock
+
+    # -- session lifecycle -------------------------------------------------
+    def open_session(self, sid: str | None = None, *, key: int = 0) -> str:
+        """Create a session; returns its id.  Durable engines write the
+        OPEN record (schema, PRNG key, config signature) before returning —
+        the session exists once this acks, even across a crash."""
+        self._check_alive()
+        if sid is None:
+            while True:
+                sid = f"s{self._n_opened:06d}"
+                self._n_opened += 1
+                if sid not in self._known and sid not in self._live:
+                    break
+        if not _SID_RE.match(sid):
+            raise ValueError(
+                f"session id must match {_SID_RE.pattern}; got {sid!r}"
+            )
+        if sid in self._known or sid in self._live:
+            raise ValueError(f"session {sid!r} already exists")
+        state = _fresh_state(self.config, jax.random.PRNGKey(key))
+        if self.root is not None:
+            os.makedirs(os.path.join(self.root, sid), exist_ok=True)
+            meta = {
+                "schema": SCHEMA_VERSION,
+                "sig": self._sig,
+                "key": np.asarray(state.key).tolist(),
+            }
+            self._writer(sid).append(
+                _wal.OPEN, 0, json.dumps(meta).encode()
+            )
+        self._known.add(sid)
+        self._live[sid] = state
+        self._pending[sid] = deque()
+        self._next_seq[sid] = 1
+        self._applied_seq[sid] = 0
+        self._since_snap[sid] = 0
+        self._touch(sid)
+        self._enforce_memory()
+        return sid
+
+    def sessions(self) -> list[str]:
+        """Every known session id (hydrated or on disk)."""
+        return sorted(self._known)
+
+    # -- ingestion ---------------------------------------------------------
+    def append(self, sid: str, row) -> int:
+        """Ingest one element into ``sid``; returns its WAL sequence number.
+
+        Durable engines acknowledge only after the APPEND record is in the
+        OS page cache (``wal_fsync=True`` for the device) — from that point
+        the element survives any crash.  Application to the sieve is
+        deferred to the next wave (``flush``); appends auto-flush once
+        ``flush_every`` (default ``max_batch``) elements are pending."""
+        self._check_alive()
+        if sid not in self._known:
+            raise KeyError(f"unknown session {sid!r}")
+        row = np.asarray(row, np.float32)
+        if row.shape != (self.config.n_features,):
+            raise ValueError(
+                f"row must have shape ({self.config.n_features},); "
+                f"got {row.shape}"
+            )
+        if not np.all(np.isfinite(row)) or np.any(row < 0):
+            raise ValueError(
+                "rows must be finite and nonnegative (coverage objectives); "
+                "rejected at admission"
+            )
+        self._hydrate(sid)
+        seq = self._next_seq[sid]
+        if self.root is not None:
+            self._writer(sid).append(_wal.APPEND, seq, row.tobytes())
+        self._pending[sid].append((seq, row))
+        self._next_seq[sid] = seq + 1
+        self._stats["appends"] += 1
+        self._touch(sid)
+        threshold = self.config.flush_every or self.config.max_batch
+        if sum(len(q) for q in self._pending.values()) >= threshold:
+            self.flush()
+        return seq
+
+    def flush(self) -> None:
+        """Apply every pending element (waves), run due SS compactions,
+        take due snapshots, then enforce the memory ladder."""
+        self._check_alive()
+        self._apply_waves(None, faults=True)
+        cfg = self.config
+        if self.root is not None and cfg.snapshot_every is not None:
+            for sid in sorted(self._live):
+                if self._since_snap.get(sid, 0) >= cfg.snapshot_every:
+                    self._snapshot(sid)
+        self._enforce_memory()
+
+    # -- wave execution ----------------------------------------------------
+    def _apply_waves(self, only, *, faults: bool) -> None:
+        """Drain pending elements: one element per session per wave,
+        sessions chunked to ``max_batch`` and padded to a bucket.
+
+        Invariant: a session that is *due* for SS compaction is compacted
+        before its next element applies (checked before and after every
+        wave).  That pins the compaction points to the state trajectory
+        itself — a wave aborted by an injected fault and retried later
+        still compacts at the same element count, which is what makes WAL
+        replay (``faults=False``) land bit-identical."""
+        cfg = self.config
+        while True:
+            sids = [
+                s for s in sorted(self._pending)
+                if self._pending[s] and (only is None or s in only)
+            ]
+            if not sids:
+                return
+            restarted = False
+            for i in range(0, len(sids), cfg.max_batch):
+                chunk = sids[i:i + cfg.max_batch]
+                for s in chunk:
+                    self._hydrate(s)
+                if (
+                    self._maybe_resparsify(chunk, faults) == "restarted"
+                    or self._exec_wave(chunk, faults) == "restarted"
+                    or self._maybe_resparsify(chunk, faults) == "restarted"
+                ):
+                    restarted = True
+                    break
+            if restarted:
+                continue
+
+    def _draw_fault(self, chunk: list[str], stage: str, faults: bool):
+        """Draw (and handle the terminal kinds of) one scheduled fault.
+        Returns "restarted" when a restart consumed this attempt, the
+        fault for the caller to apply, or None for a clean attempt."""
+        if not faults or self._faults is None:
+            return None
+        be = resolve_backend(self.config.backend)
+        fault = self._faults.draw(
+            tickets=(), lane=("sessions", tuple(chunk)),
+            backend=be.name, stage=stage,
+        )
+        if fault is None:
+            return None
+        if fault.kind in ("latency", "hang"):
+            time.sleep(fault.delay_s)
+            return None
+        if fault.kind == "crash":
+            self._die()                      # raises ServiceRestarted
+        if fault.kind == "restart":
+            self._restart()
+            return "restarted"
+        raise FaultInjected(
+            f"injected {fault.kind} on session {stage} {tuple(chunk)}"
+        )
+
+    def _exec_wave(self, chunk: list[str], faults: bool):
+        if self._draw_fault(chunk, "wave", faults) == "restarted":
+            return "restarted"
+        cfg = self.config
+        states = [self._live[s] for s in chunk]
+        rows = [self._pending[s][0][1] for s in chunk]
+        B = len(chunk)
+        bucket = min(b for b in self._buckets if b >= B)
+        pad = bucket - B
+        states = states + [states[0]] * pad
+        rows = rows + [np.zeros(cfg.n_features, np.float32)] * pad
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+        valid = jnp.array([True] * B + [False] * pad)
+        new_states, _, _ = _wave_kernel(
+            stacked, jnp.asarray(np.stack(rows)), valid, phi=cfg.phi
+        )
+        for j, s in enumerate(chunk):
+            self._live[s] = jax.tree_util.tree_map(
+                lambda x, j=j: x[j], new_states
+            )
+            seq, _ = self._pending[s].popleft()
+            self._applied_seq[s] = seq
+            self._since_snap[s] = self._since_snap.get(s, 0) + 1
+        self._stats["waves"] += 1
+        self._stats["wave_slots"] += bucket
+        self._stats["padded_slots"] += pad
+        return None
+
+    def _maybe_resparsify(self, chunk: list[str], faults: bool):
+        cfg = self.config
+        due = []
+        for s in chunk:
+            st = self._live[s]
+            if int(st.buf_len) > 0 and (
+                int(st.inserts) >= cfg.resparsify_every
+                or int(st.buf_len) >= cfg.buffer_cap
+            ):
+                due.append(s)
+        if not due:
+            return None
+        be = resolve_backend(cfg.backend)
+        for i in range(0, len(due), cfg.max_batch):
+            grp = due[i:i + cfg.max_batch]
+            if self._draw_fault(grp, "resparsify", faults) == "restarted":
+                return "restarted"
+            states = [self._live[s] for s in grp]
+            B = len(grp)
+            bucket = min(b for b in self._buckets if b >= B)
+            states = states + [states[0]] * (bucket - B)
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *states
+            )
+            alive = (
+                jnp.arange(cfg.buffer_cap)[None, :]
+                < stacked.buf_len[:, None]
+            )
+            fnb = FeatureCoverage(W=stacked.buf, phi=cfg.phi)
+            keys = _fold_keys(stacked.key, stacked.n_ss)
+            ss = ss_sparsify_batched(
+                fnb, keys, r=cfg.ss_r, c=cfg.ss_c, alive=alive, backend=be
+            )
+            keep = jnp.logical_and(ss.vprime, alive)
+            new_states = _compact_kernel(stacked, keep)
+            for j, s in enumerate(grp):
+                self._live[s] = jax.tree_util.tree_map(
+                    lambda x, j=j: x[j], new_states
+                )
+            self._stats["resparsifies"] += len(grp)
+        return None
+
+    # -- faults ------------------------------------------------------------
+    def _die(self) -> None:
+        msg = (
+            "the session engine crashed (injected crash fault); all "
+            "in-memory state is gone — construct a new SessionEngine on "
+            "the same root to recover from snapshot + WAL"
+        )
+        for w in self._writers.values():
+            w.close()
+        self._writers.clear()
+        self._live.clear()
+        self._pending.clear()
+        self._next_seq.clear()
+        self._applied_seq.clear()
+        self._since_snap.clear()
+        self._stats["crashes"] += 1
+        self.events.append({"step": "crash", "reason": "fault"})
+        self._dead = msg
+        raise ServiceRestarted(msg)
+
+    def _restart(self) -> None:
+        """Kill + reopen in place: in-memory state dropped, sessions
+        rehydrate lazily from snapshot + WAL on next touch.  Pending
+        elements were WAL-acknowledged, so none are lost — they simply
+        replay during rehydration."""
+        for w in self._writers.values():
+            w.close()
+        self._writers.clear()
+        self._live.clear()
+        self._pending.clear()
+        self._next_seq.clear()
+        self._applied_seq.clear()
+        self._since_snap.clear()
+        self._stats["restarts"] += 1
+        self.events.append({
+            "step": "restart", "reason": "fault",
+            "sessions": sorted(self._known),
+        })
+
+    # -- durability --------------------------------------------------------
+    def _writer(self, sid: str) -> _wal.WalWriter:
+        w = self._writers.get(sid)
+        if w is None:
+            w = _wal.WalWriter(
+                os.path.join(self.root, sid, "wal.log"),
+                fsync=self.config.wal_fsync,
+            )
+            self._writers[sid] = w
+        return w
+
+    def _snapshot(self, sid: str) -> str:
+        """Atomically checkpoint ``sid``'s full state (applied elements
+        only — call after waves drained).  Keeps the two newest snapshots
+        so a corrupt latest still recovers from its predecessor."""
+        sdir = os.path.join(self.root, sid)
+        seq = self._applied_seq[sid]
+        meta = {
+            "schema": SCHEMA_VERSION, "sig": self._sig, "applied_seq": seq,
+        }
+        final = os.path.join(sdir, f"snap-{seq:012d}.npz")
+        tmp = final + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(
+                f,
+                _meta=np.frombuffer(json.dumps(meta).encode(), np.uint8),
+                **_state_arrays(self._live[sid]),
+            )
+        os.replace(tmp, final)
+        self._since_snap[sid] = 0
+        self._stats["snapshots"] += 1
+        for name in sorted(self._snapshot_names(sid), reverse=True)[2:]:
+            os.unlink(os.path.join(sdir, name))
+        return final
+
+    def snapshot(self, sid: str) -> str:
+        """Flush ``sid`` and checkpoint it now; returns the snapshot path."""
+        self._check_alive()
+        if self.root is None:
+            raise RuntimeError("snapshots require a durable root")
+        self._hydrate(sid)
+        self._apply_waves({sid}, faults=True)
+        return self._snapshot(sid)
+
+    def _snapshot_names(self, sid: str) -> list[str]:
+        sdir = os.path.join(self.root, sid)
+        return [
+            n for n in os.listdir(sdir)
+            if n.startswith("snap-") and n.endswith(".npz")
+        ]
+
+    def _load_snapshot(self, sid: str):
+        """Newest loadable snapshot, or (None, 0).  A snapshot that fails
+        to load (torn tmp-rename never produces one, but bit rot / a
+        truncated copy can) falls back to its predecessor — loudly, via a
+        ``snapshot_fallback`` event — at the price of a longer WAL replay.
+        A snapshot that loads but was written under a *different config*
+        raises: replaying on top of it would fabricate a plausible wrong
+        state."""
+        sdir = os.path.join(self.root, sid)
+        for name in sorted(self._snapshot_names(sid), reverse=True):
+            path = os.path.join(sdir, name)
+            try:
+                with np.load(path) as z:
+                    meta = json.loads(bytes(z["_meta"]).decode())
+                    state = _arrays_state(z)
+            except Exception as e:  # noqa: BLE001 - corrupt file: fall back
+                self._stats["snapshot_fallbacks"] += 1
+                self.events.append({
+                    "step": "snapshot_fallback", "sid": sid,
+                    "snapshot": name, "error": repr(e),
+                })
+                continue
+            if meta.get("schema") != SCHEMA_VERSION:
+                raise ValueError(
+                    f"{path}: snapshot schema {meta.get('schema')} != "
+                    f"{SCHEMA_VERSION}"
+                )
+            if meta.get("sig") != self._sig:
+                raise ValueError(
+                    f"{path}: snapshot was written under a different "
+                    "SessionConfig; refusing to replay on top of it"
+                )
+            return state, int(meta["applied_seq"])
+        return None, 0
+
+    def _hydrate(self, sid: str) -> SessionState:
+        """The lazy-rehydration rung of the memory ladder: return the live
+        state, recovering it from snapshot + WAL tail if it was evicted,
+        restarted away, or belongs to a previous process."""
+        self._touch(sid)
+        st = self._live.get(sid)
+        if st is not None:
+            return st
+        if sid not in self._known:
+            raise KeyError(f"unknown session {sid!r}")
+        if self.root is None:
+            raise RuntimeError(
+                f"session {sid!r} was lost (volatile engine restarted; "
+                "pass a durable root to survive restarts)"
+            )
+        replayed = self._recover(sid)
+        self._stats["rehydrations"] += 1
+        self.events.append({
+            "step": "rehydrate", "sid": sid, "reason": "access",
+            "replayed": replayed,
+        })
+        return self._live[sid]
+
+    def _recover(self, sid: str) -> int:
+        """Recovery = newest loadable snapshot + WAL-tail replay through
+        the same wave kernels (B=1, faults off).  Verifies the OPEN
+        record, the config signature, and strict seq contiguity — a gap
+        means acknowledged records vanished, which must never be papered
+        over."""
+        cfg = self.config
+        wal_path = os.path.join(self.root, sid, "wal.log")
+        records = _wal.scan_wal(
+            wal_path, tolerate_torn_tail=cfg.tolerate_torn_tail
+        )
+        if not records or records[0].rtype != _wal.OPEN:
+            raise _wal.WALCorrupt(
+                f"{wal_path}: missing OPEN record at sequence 0"
+            )
+        meta = json.loads(records[0].payload.decode())
+        if meta.get("schema") != SCHEMA_VERSION:
+            raise ValueError(
+                f"{wal_path}: WAL schema {meta.get('schema')} != "
+                f"{SCHEMA_VERSION}"
+            )
+        if meta.get("sig") != self._sig:
+            raise ValueError(
+                f"{wal_path}: session was written under a different "
+                "SessionConfig; replaying it here would silently produce "
+                "a different state"
+            )
+        for i, rec in enumerate(records):
+            if rec.seq != i or (i > 0 and rec.rtype != _wal.APPEND):
+                raise _wal.WALCorrupt(
+                    f"{wal_path}: sequence gap or bad record type at "
+                    f"position {i} (seq={rec.seq}, type={rec.rtype}) — "
+                    "acknowledged records are missing"
+                )
+        state, snap_seq = self._load_snapshot(sid)
+        if state is None:
+            state = _fresh_state(
+                cfg, jnp.asarray(np.asarray(meta["key"], np.uint32))
+            )
+            snap_seq = 0
+        self._live[sid] = state
+        self._applied_seq[sid] = snap_seq
+        self._next_seq[sid] = records[-1].seq + 1
+        pend = self._pending.setdefault(sid, deque())
+        pend.clear()
+        n_bytes = 4 * cfg.n_features
+        for rec in records[1:]:
+            if rec.seq <= snap_seq:
+                continue
+            if len(rec.payload) != n_bytes:
+                raise _wal.WALCorrupt(
+                    f"{wal_path}: APPEND seq={rec.seq} payload is "
+                    f"{len(rec.payload)} bytes, expected {n_bytes}"
+                )
+            pend.append((rec.seq, np.frombuffer(rec.payload, np.float32)))
+        replayed = len(pend)
+        self._apply_waves({sid}, faults=False)
+        self._since_snap[sid] = replayed
+        return replayed
+
+    # -- memory ladder -----------------------------------------------------
+    def _enforce_memory(self) -> None:
+        """Eviction rung: past ``max_live_sessions``, snapshot + release
+        the least-recently-used idle session (pending elements pin a
+        session live — they are applied first)."""
+        cap = self.config.max_live_sessions
+        if cap is None or self.root is None:
+            return
+        while len(self._live) > cap:
+            idle = [s for s in self._live if not self._pending.get(s)]
+            if not idle:
+                return
+            victim = min(idle, key=lambda s: self._order.get(s, 0))
+            self._snapshot(victim)
+            del self._live[victim]
+            w = self._writers.pop(victim, None)
+            if w is not None:
+                w.close()
+            self._stats["evictions"] += 1
+            self.events.append({
+                "step": "evict", "sid": victim, "reason": "pressure",
+                "live": len(self._live),
+            })
+
+    # -- read side ---------------------------------------------------------
+    def state(self, sid: str) -> SessionState:
+        """The session's applied state (flushes its pending first; no
+        fault draws — this is the introspection/assertion surface)."""
+        self._check_alive()
+        self._hydrate(sid)
+        self._apply_waves({sid}, faults=False)
+        return self._live[sid]
+
+    def summary(self, sid: str) -> SessionSummary:
+        """Current k-element summary: flush, then greedy over the
+        SS-pruned retained buffer (ids are stream positions)."""
+        self._check_alive()
+        self._hydrate(sid)
+        self._apply_waves({sid}, faults=True)
+        cfg = self.config
+        st = self._live[sid]
+        n_live = int(st.buf_len)
+        sieve_value = float(jnp.max(st.sieve.vals))
+        if n_live == 0:
+            return SessionSummary(
+                sid=sid, selected=np.zeros(0, np.int32),
+                gains=np.zeros(0, np.float32), value=0.0,
+                sieve_value=sieve_value, retained=0,
+                seen=int(st.sieve.t), drops=int(st.drops),
+                resparsifies=int(st.n_ss),
+            )
+        fn = FeatureCoverage(W=st.buf, phi=cfg.phi)
+        alive = jnp.arange(cfg.buffer_cap) < st.buf_len
+        res = greedy(
+            fn, cfg.k, alive=alive, backend=resolve_backend(cfg.backend)
+        )
+        n_sel = min(cfg.k, n_live)
+        slots = np.asarray(res.selected)[:n_sel]
+        return SessionSummary(
+            sid=sid,
+            selected=np.asarray(st.buf_ids)[slots].astype(np.int32),
+            gains=np.asarray(res.gains)[:n_sel].astype(np.float32),
+            value=float(res.value),
+            sieve_value=sieve_value,
+            retained=n_live,
+            seen=int(st.sieve.t),
+            drops=int(st.drops),
+            resparsifies=int(st.n_ss),
+        )
+
+    def stats(self) -> dict:
+        """Engine counters: appends acknowledged, waves/slots/padding, SS
+        compactions, snapshots (+ fallbacks), rehydrations, evictions,
+        restarts, crashes — plus live/known session counts."""
+        st = dict(self._stats)
+        st["live_sessions"] = len(self._live)
+        st["known_sessions"] = len(self._known)
+        st["pending"] = sum(len(q) for q in self._pending.values())
+        return st

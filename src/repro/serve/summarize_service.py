@@ -144,6 +144,16 @@ class TicketPending(TimeoutError):
     TimeoutError, so pre-PR-8 ``except TimeoutError`` callers still work."""
 
 
+class ServiceRestarted(RuntimeError):
+    """The engine died (``crash``) or restarted (``restart``) while work was
+    in flight.  Every in-flight ticket settles with this error — never hangs
+    in :class:`TicketPending` — and after a ``crash`` new submissions are
+    rejected with it too (the process is gone; build a new service).  The
+    durable session tier (``repro.serve.sessions``) raises the same type
+    when its engine crashes; there, recovery = reopen the engine and replay
+    snapshot + WAL."""
+
+
 # ------------------------------------------------------------- run config ----
 
 #: Valid degradation-ladder steps, in the order the docs discuss them.
@@ -630,6 +640,7 @@ class SummarizeService:
         self._ladder_cache: dict[tuple, list[dict]] = {}
         self._drain_requested = False
         self._stop = False
+        self._killed = False            # a drawn ``crash`` fault fired
         self._thread: threading.Thread | None = None
         self._n_submitted = 0
         self._stats = {
@@ -649,6 +660,7 @@ class SummarizeService:
             "isolated_queries": 0,
             "chunk_timeouts": 0,
             "degraded": 0,
+            "restarts": 0,
         }
         if config.scheduler == "async":
             self.start()
@@ -697,6 +709,12 @@ class SummarizeService:
         ticket = Ticket(self._n_submitted, now, deadline_t)
         self._n_submitted += 1
         try:
+            if self._killed:
+                raise ServiceRestarted(
+                    "the service crashed (injected crash fault); in-flight "
+                    "tickets were settled with ServiceRestarted and new "
+                    "submissions are rejected — construct a new service"
+                )
             lane = self._lane(request)
             if request.k < 1:
                 raise ValueError(f"k must be >= 1; got k={request.k}")
@@ -950,6 +968,11 @@ class SummarizeService:
                     with self._cond:
                         self._stats["chunk_timeouts"] += 1
                     break  # hung signature: don't re-run it in this stage
+                except ServiceRestarted:
+                    # The engine died mid-attempt: every ticket is already
+                    # settled with the error; retry/failover/isolation would
+                    # be theater on a dead process.
+                    raise
                 except Exception as e:  # noqa: BLE001 - recovery continues
                     last_err = e
                     failures += 1
@@ -1121,6 +1144,8 @@ class SummarizeService:
                 tickets=tuple(it.ticket.index for it in items),
                 lane=lane, backend=be.name, stage=stage,
             )
+        if fault is not None and fault.kind in ("crash", "restart"):
+            raise self._simulate_restart(kill=fault.kind == "crash")
         if fault is not None and fault.kind == "exec_error":
             raise FaultInjected(
                 f"injected exec error on tickets "
@@ -1243,6 +1268,34 @@ class SummarizeService:
             self._outstanding -= len(settled)
             self._cond.notify_all()
 
+    def _simulate_restart(self, *, kill: bool) -> ServiceRestarted:
+        """A drawn ``crash``/``restart`` fault: the in-memory engine dies.
+
+        Every queued item is drained and — like the in-flight chunk, whose
+        items settle when the caller raises the returned error — settled
+        with :class:`ServiceRestarted`, so no ticket ever hangs in
+        ``TicketPending`` across a restart.  ``kill=True`` (crash) also
+        poisons admission: subsequent :meth:`submit` calls fail their
+        tickets with the same error.  ``kill=False`` (restart) keeps the
+        service serving new submissions — the restarted process comes back
+        with empty queues."""
+        what = "crashed" if kill else "restarted"
+        err = ServiceRestarted(
+            f"the service {what} while this request was in flight; "
+            "in-memory state (queues, in-flight chunks) was lost"
+        )
+        with self._cond:
+            drained: list[_QueueItem] = []
+            for lane_items in self._lanes.values():
+                drained.extend(lane_items)
+            self._lanes.clear()
+            self._pending = 0
+            self._stats["restarts"] += 1
+            if kill:
+                self._killed = True
+        self._resolve_err(drained, err)
+        return err
+
     def _resolve_err(
         self, items: list[_QueueItem], error: BaseException
     ) -> None:
@@ -1285,4 +1338,5 @@ class SummarizeService:
             "isolated_queries": st["isolated_queries"],
             "chunk_timeouts": st["chunk_timeouts"],
             "degraded": st["degraded"],
+            "restarts": st["restarts"],
         }

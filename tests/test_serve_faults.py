@@ -36,6 +36,7 @@ from repro.serve import (
     ChunkTimeout,
     MalformedResult,
     RunConfig,
+    ServiceRestarted,
     SummarizeRequest,
     SummarizeService,
     TicketPending,
@@ -460,3 +461,60 @@ def test_ladder_beats_full_quality_on_deadline_trace():
         assert r.degradation is not None
         assert r.degradation["reason"] == "deadline"
         assert r.degradation["steps"][0] == "bump_c"
+
+
+# ------------------------------------------------------------- crash/restart -
+
+def test_crash_settles_every_ticket_and_poisons_admission():
+    """A crash fault mid-chunk: every in-flight ticket settles with
+    ServiceRestarted — no ticket is ever left hanging in TicketPending —
+    and the dead service rejects new submissions with the same error."""
+    svc = SummarizeService(
+        RunConfig(max_batch=4), faults=FaultPlan({0: Fault("crash")})
+    )
+    tickets = [svc.submit(req(i)) for i in range(4)]
+    svc.flush()
+    for t in tickets:
+        assert t.done()
+        assert isinstance(t.exception(timeout=0), ServiceRestarted)
+        with pytest.raises(ServiceRestarted):
+            t.result(timeout=0)
+    st = svc.stats()
+    assert st["restarts"] == 1 and st["failed"] == 4
+    late = svc.submit(req(9))            # admission is poisoned, not hung
+    assert isinstance(late.exception(timeout=0), ServiceRestarted)
+
+
+def test_crash_async_tickets_never_hang():
+    """Same pin on the async scheduler: the flusher absorbs the crash,
+    drain() returns (nothing stays outstanding), and queued chunk-mates in
+    *other* lanes settle with ServiceRestarted too."""
+    plan = FaultPlan({0: Fault("crash")})
+    cfg = RunConfig(scheduler="async", max_batch=2, max_wait_s=0.01)
+    with SummarizeService(cfg, faults=plan) as svc:
+        tickets = [svc.submit(req(i)) for i in range(2)]
+        tickets += [svc.submit(req(10 + i, n=32)) for i in range(2)]  # 2nd lane
+        svc.drain(timeout=120)
+        for t in tickets:
+            assert t.done()
+            assert isinstance(t.exception(timeout=0), ServiceRestarted)
+
+
+def test_restart_settles_in_flight_but_keeps_serving():
+    """A restart fault: the in-flight chunk settles with ServiceRestarted
+    (its queue state is gone), but the service comes back — subsequent
+    submissions execute normally, bit-identical to a fault-free service."""
+    svc = SummarizeService(
+        RunConfig(max_batch=2), faults=FaultPlan({0: Fault("restart")})
+    )
+    first = [svc.submit(req(i)) for i in range(2)]
+    svc.flush()
+    for t in first:
+        assert isinstance(t.exception(timeout=0), ServiceRestarted)
+    out = svc.run([req(10 + i) for i in range(2)])     # serving resumed
+    want = SummarizeService(RunConfig(max_batch=2)).run(
+        [req(10 + i) for i in range(2)]
+    )
+    for a, b in zip(out, want):
+        assert_same_results(a, b)
+    assert svc.stats()["restarts"] == 1

@@ -1,0 +1,440 @@
+"""Durable streaming sessions (PR 9): WAL framing, snapshot+replay
+recovery, the seeded crash-point matrix, and the memory-pressure ladder.
+
+The headline pin (ISSUE 9 acceptance): **for every crash point in the
+seeded chaos matrix, the recovered session is bit-identical — thresholds,
+retained buffer, PRNG key state, element counter, summary — to one that
+never crashed**, on both backends, with zero lost sessions.  Supporting
+invariants:
+
+- WAL reads fail loudly: a checksum/framing violation raises
+  :class:`WALCorrupt` and never silently drops acknowledged suffix
+  records; only the never-acknowledged torn tail is skippable, by explicit
+  opt-in.
+- Batched waves are invisible: a multi-session engine computes per-session
+  states bit-identical to per-session B=1 engines (the property recovery
+  replay leans on).
+- The eviction ladder (evict → snapshot+release → lazy rehydrate) changes
+  *where* state lives, never *what* it is, and every rung leaves an
+  auditable event.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+import jax.tree_util as jtu
+
+import repro.api as api
+from repro.serve import wal
+from repro.serve.sessions import SessionConfig, SessionEngine
+from repro.serve.faults import Fault, FaultInjected, FaultPlan
+from repro.serve.summarize_service import ServiceRestarted
+
+BACKENDS = ["oracle", "pallas"]
+
+
+def cfg_small(**kw):
+    base = dict(
+        k=3, eps=0.5, n_features=12, buffer_cap=12, resparsify_every=5,
+        ss_r=2, ss_c=6.0, max_batch=4, snapshot_every=12,
+    )
+    base.update(kw)
+    return SessionConfig(**base)
+
+
+def rows_for(seed, n=36, F=12, drift=6.0):
+    """A drifting stream: magnitudes grow so the sieve window keeps
+    sliding, elements keep being accepted, and SS compaction fires."""
+    r = np.random.default_rng(seed)
+    scale = 1.0 + drift * np.arange(n, dtype=np.float32) / n
+    return r.random((n, F)).astype(np.float32) * scale[:, None]
+
+
+def assert_states_equal(a, b, what=""):
+    la = jtu.tree_leaves_with_path(a)
+    lb = jtu.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (pa, x), (_, y) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{what} state leaf {jtu.keystr(pa)} differs",
+        )
+
+
+def assert_summaries_equal(a, b):
+    np.testing.assert_array_equal(a.selected, b.selected)
+    np.testing.assert_array_equal(a.gains, b.gains)
+    assert a.value == b.value and a.sieve_value == b.sieve_value
+    assert (a.retained, a.seen, a.drops, a.resparsifies) == (
+        b.retained, b.seen, b.drops, b.resparsifies)
+
+
+def run_reference(cfg, root, streams):
+    """The uninterrupted run: every stream fully ingested and flushed."""
+    eng = SessionEngine(cfg, root)
+    for sid in streams:
+        eng.open_session(sid=sid, key=int(sid[1:]))
+    n = max(len(v) for v in streams.values())
+    for t in range(n):
+        for sid, R in streams.items():
+            if t < len(R):
+                eng.append(sid, R[t])
+    eng.flush()
+    return eng
+
+
+# ------------------------------------------------------------- WAL layer ----
+
+def test_wal_roundtrip(tmp_path):
+    p = str(tmp_path / "wal.log")
+    w = wal.WalWriter(p)
+    payloads = [b"open-meta", b"row-one", b"", b"x" * 1000]
+    for i, pl in enumerate(payloads):
+        w.append(wal.OPEN if i == 0 else wal.APPEND, i, pl)
+    size = w.tell()
+    w.close()
+    assert os.path.getsize(p) == size
+    recs = wal.scan_wal(p)
+    assert [r.seq for r in recs] == [0, 1, 2, 3]
+    assert [r.payload for r in recs] == payloads
+    assert recs[0].rtype == wal.OPEN
+    assert all(r.rtype == wal.APPEND for r in recs[1:])
+
+
+def test_wal_checksum_corruption_fails_loudly(tmp_path):
+    """A flipped bit mid-log raises WALCorrupt — the suffix records after
+    it are acknowledged data and must never be silently dropped."""
+    p = str(tmp_path / "wal.log")
+    w = wal.WalWriter(p)
+    for i in range(5):
+        w.append(wal.APPEND, i, bytes([i]) * 32)
+    w.close()
+    data = bytearray(open(p, "rb").read())
+    # flip a payload byte of the middle record (records end with payload,
+    # so 10 bytes before a record boundary is always inside a payload)
+    rec_size = len(data) // 5
+    data[3 * rec_size - 10] ^= 0xFF
+    open(p, "wb").write(bytes(data))
+    with pytest.raises(wal.WALCorrupt):
+        wal.scan_wal(p)
+    # even opting into torn-tail tolerance must not skip mid-file damage
+    with pytest.raises(wal.WALCorrupt) as ei:
+        wal.scan_wal(p, tolerate_torn_tail=True)
+    assert not isinstance(ei.value, wal.WALTruncated)
+
+
+def test_wal_torn_tail(tmp_path):
+    """EOF mid-final-record is the crash-mid-write signature: raises
+    WALTruncated by default; tolerate_torn_tail returns the complete
+    prefix (the partial record was never acknowledged)."""
+    p = str(tmp_path / "wal.log")
+    w = wal.WalWriter(p)
+    for i in range(4):
+        w.append(wal.APPEND, i, bytes(64))
+    w.close()
+    full = open(p, "rb").read()
+    for cut in (70, 30):  # mid-header and mid-payload of the last record
+        open(p, "wb").write(full[: len(full) - cut])
+        with pytest.raises(wal.WALTruncated):
+            wal.scan_wal(p)
+        recs = wal.scan_wal(p, tolerate_torn_tail=True)
+        assert [r.seq for r in recs] == [0, 1, 2]
+
+
+# ------------------------------------------------------------- engine -------
+
+def test_volatile_round_trip_and_validation():
+    eng = SessionEngine(cfg_small())
+    sid = eng.open_session(key=1)
+    R = rows_for(1)
+    for t in range(len(R)):
+        eng.append(sid, R[t])
+    s = eng.summary(sid)
+    assert s.seen == len(R)
+    assert 0 < s.retained <= eng.config.buffer_cap
+    assert s.value > 0 and s.sieve_value > 0
+    assert len(s.selected) <= eng.config.k
+    assert (s.selected >= 0).all() and (s.selected < s.seen).all()
+    assert s.resparsifies > 0        # the SS tier actually engaged
+    with pytest.raises(KeyError):
+        eng.append("nope", R[0])
+    with pytest.raises(ValueError, match="shape"):
+        eng.append(sid, np.zeros(5, np.float32))
+    with pytest.raises(ValueError, match="finite"):
+        eng.append(sid, np.full(12, np.nan, np.float32))
+    with pytest.raises(ValueError, match="already exists"):
+        eng.open_session(sid=sid)
+    with pytest.raises(ValueError, match="session id"):
+        eng.open_session(sid="../escape")
+    with pytest.raises(ValueError, match="root"):
+        SessionEngine(cfg_small(max_live_sessions=1))
+
+
+def test_batched_waves_match_single_session_engines():
+    """A 3-session engine (waves pad/stack sessions) must produce states
+    bit-identical to three isolated B=1 engines — the vmap-row-identity
+    contract that also underwrites B=1 recovery replay."""
+    cfg = cfg_small()
+    multi = SessionEngine(cfg)
+    sids = [multi.open_session(sid=f"s{i}", key=i) for i in range(3)]
+    streams = {s: rows_for(i, n=30 + 2 * i) for i, s in enumerate(sids)}
+    for t in range(34):
+        for s in sids:
+            if t < len(streams[s]):
+                multi.append(s, streams[s][t])
+    for i, s in enumerate(sids):
+        solo = SessionEngine(cfg)
+        alone = solo.open_session(sid=s, key=i)
+        for t in range(len(streams[s])):
+            solo.append(alone, streams[s][t])
+        assert_states_equal(
+            multi.state(s), solo.state(alone), f"session {s}"
+        )
+        assert_summaries_equal(multi.summary(s), solo.summary(alone))
+
+
+@pytest.mark.parametrize("snapshot_every", [6, None])
+def test_durable_recovery_bit_identical(tmp_path, snapshot_every):
+    """Reopening a root recovers every session bit-identically — via
+    snapshot + WAL tail, or (snapshot_every=None) by full WAL replay."""
+    cfg = cfg_small(snapshot_every=snapshot_every)
+    root = str(tmp_path / "eng")
+    streams = {f"u{i}": rows_for(i) for i in range(2)}
+    ref = run_reference(cfg, root, streams)
+    states = {s: ref.state(s) for s in streams}
+    summaries = {s: ref.summary(s) for s in streams}
+
+    rec = SessionEngine(cfg, root)
+    assert rec.sessions() == sorted(streams)       # zero lost sessions
+    for s in streams:
+        assert_states_equal(states[s], rec.state(s), f"recovered {s}")
+        assert_summaries_equal(summaries[s], rec.summary(s))
+    ev = [e for e in rec.events if e["step"] == "rehydrate"]
+    assert len(ev) == len(streams)
+    if snapshot_every is None:
+        assert all(e["replayed"] == len(rows_for(0)) for e in ev)
+
+
+def test_recovery_can_continue_ingesting(tmp_path):
+    """A recovered session is not read-only: appends continue with the
+    same sequence numbering and reach the same state as a process that
+    never died."""
+    cfg = cfg_small()
+    root = str(tmp_path / "eng")
+    R = rows_for(4, n=40)
+    ref = run_reference(cfg, str(tmp_path / "ref"), {"u4": R})
+    half = SessionEngine(cfg, root)
+    half.open_session(sid="u4", key=4)
+    for t in range(20):
+        half.append("u4", R[t])
+    half.flush()
+    del half
+    rec = SessionEngine(cfg, root)
+    for t in range(20, 40):
+        rec.append("u4", R[t])
+    assert_states_equal(ref.state("u4"), rec.state("u4"), "continued")
+    assert_summaries_equal(ref.summary("u4"), rec.summary("u4"))
+
+
+def test_snapshot_fallback_on_corrupt_latest(tmp_path):
+    """A corrupt newest snapshot falls back to its predecessor (longer WAL
+    replay, same bits) and leaves an auditable snapshot_fallback event."""
+    cfg = cfg_small(snapshot_every=6)
+    root = str(tmp_path / "eng")
+    ref = run_reference(cfg, root, {"u0": rows_for(0)})
+    want_state, want_sum = ref.state("u0"), ref.summary("u0")
+    sdir = os.path.join(root, "u0")
+    snaps = sorted(n for n in os.listdir(sdir) if n.startswith("snap-"))
+    assert len(snaps) == 2                      # engine keeps the newest two
+    with open(os.path.join(sdir, snaps[-1]), "r+b") as f:
+        f.seek(100)
+        f.write(b"\xff" * 50)
+    rec = SessionEngine(cfg, root)
+    assert_states_equal(want_state, rec.state("u0"), "fallback")
+    assert_summaries_equal(want_sum, rec.summary("u0"))
+    assert rec.stats()["snapshot_fallbacks"] == 1
+    (ev,) = [e for e in rec.events if e["step"] == "snapshot_fallback"]
+    assert ev["snapshot"] == snaps[-1]
+
+
+def test_corrupt_wal_tail_handling(tmp_path):
+    """Recovery surfaces WAL damage instead of replaying an edited
+    history: mid-file corruption always raises; a torn tail raises unless
+    the config explicitly tolerates losing the unacknowledged record."""
+    cfg = cfg_small(snapshot_every=None)
+    root = str(tmp_path / "eng")
+    ref = run_reference(cfg, root, {"u0": rows_for(0, n=20)})
+    del ref
+    p = os.path.join(root, "u0", "wal.log")
+    full = open(p, "rb").read()
+    # torn tail: drop the last 7 bytes of the final record
+    open(p, "wb").write(full[:-7])
+    with pytest.raises(wal.WALTruncated):
+        SessionEngine(cfg, root).state("u0")
+    tol = SessionEngine(
+        dataclasses.replace(cfg, tolerate_torn_tail=True), root
+    )
+    st = tol.state("u0")
+    assert int(st.sieve.t) == 19               # only the torn record lost
+    # mid-file corruption: never skippable, tolerant or not.  The last
+    # APPEND record occupies the final 69 bytes (21 header + 48 payload);
+    # 10 bytes before its start is a payload byte of the record before it.
+    data = bytearray(full)
+    data[len(data) - 69 - 10] ^= 0xFF
+    open(p, "wb").write(bytes(data))
+    for cfg_try in (cfg, dataclasses.replace(cfg, tolerate_torn_tail=True)):
+        with pytest.raises(wal.WALCorrupt):
+            SessionEngine(cfg_try, root).state("u0")
+
+
+def test_config_signature_mismatch_refuses_replay(tmp_path):
+    """Replaying a WAL under a different trajectory config would silently
+    fabricate a different state — recovery must refuse instead."""
+    cfg = cfg_small()
+    root = str(tmp_path / "eng")
+    run_reference(cfg, root, {"u0": rows_for(0, n=10)})
+    other = SessionEngine(dataclasses.replace(cfg, k=4), root)
+    with pytest.raises(ValueError, match="different"):
+        other.state("u0")
+
+
+# ------------------------------------------------- crash-point chaos matrix -
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_crash_point_matrix_replay_exactness(tmp_path, backend, seed):
+    """THE acceptance pin: crash the engine at every fault-attempt index
+    that fires mid-stream; after recovery + finishing the stream, state
+    and summary are bit-identical to the uninterrupted run, with zero
+    lost sessions — on both backends."""
+    cfg = cfg_small(backend=backend, snapshot_every=8)
+    streams = {f"u{i}": rows_for(100 * seed + i, n=28) for i in range(2)}
+    ref = run_reference(cfg, str(tmp_path / f"ref{seed}"), streams)
+    want = {s: ref.state(s) for s in streams}
+    want_sum = {s: ref.summary(s) for s in streams}
+
+    crash_points = (0, 2, 5, 9)
+    for cp in crash_points:
+        root = str(tmp_path / f"c{seed}-{cp}")
+        eng = SessionEngine(cfg, root, faults=FaultPlan({cp: Fault("crash")}))
+        crashed = False
+        try:
+            for s in streams:
+                eng.open_session(sid=s, key=int(s[1:]))
+            for t in range(28):
+                for s in streams:
+                    eng.append(s, streams[s][t])
+            eng.flush()
+        except ServiceRestarted:
+            crashed = True
+        assert crashed, f"crash point {cp} was never reached"
+        # recovery: a fresh engine on the same root.  Everything acked —
+        # including the append whose auto-flush crashed — is in the WAL;
+        # the durable element count is the replayed sieve counter.
+        rec = SessionEngine(cfg, root)
+        assert rec.sessions() == sorted(streams)   # zero lost sessions
+        for s in streams:
+            done = int(rec.state(s).sieve.t)
+            for t in range(done, 28):
+                rec.append(s, streams[s][t])
+        rec.flush()
+        for s in streams:
+            assert_states_equal(want[s], rec.state(s),
+                                f"crash@{cp} session {s}")
+            assert_summaries_equal(want_sum[s], rec.summary(s))
+
+
+def test_restart_fault_is_transparent(tmp_path):
+    """A restart fault (kill + in-place reopen) mid-stream: acknowledged
+    elements replay from disk on next touch, and the final state matches
+    the fault-free run exactly."""
+    cfg = cfg_small(snapshot_every=8)
+    R = rows_for(9, n=32)
+    ref = run_reference(cfg, str(tmp_path / "ref"), {"u9": R})
+    plan = FaultPlan({2: Fault("restart"), 6: Fault("restart")})
+    eng = SessionEngine(cfg, str(tmp_path / "eng"), faults=plan)
+    eng.open_session(sid="u9", key=9)
+    for t in range(32):
+        eng.append("u9", R[t])
+    eng.flush()
+    assert eng.stats()["restarts"] == 2
+    assert [e["step"] for e in eng.events].count("restart") == 2
+    assert_states_equal(ref.state("u9"), eng.state("u9"), "restart")
+    assert_summaries_equal(ref.summary("u9"), eng.summary("u9"))
+
+
+def test_exec_error_wave_loses_nothing(tmp_path):
+    """An injected wave execution error aborts the flush with pending
+    elements intact; the retried flush lands the identical state."""
+    cfg = cfg_small()
+    R = rows_for(3, n=10)
+    ref = run_reference(cfg, str(tmp_path / "ref"), {"u3": R})
+    eng = SessionEngine(
+        cfg, str(tmp_path / "eng"),
+        faults=FaultPlan({0: Fault("exec_error")}),
+    )
+    eng.open_session(sid="u3", key=3)
+    with pytest.raises(FaultInjected):
+        for t in range(10):
+            eng.append("u3", R[t])
+    done = int(eng.state("u3").sieve.t)
+    for t in range(done, 10):      # state() flushed the survivors already
+        eng.append("u3", R[t])
+    assert_states_equal(ref.state("u3"), eng.state("u3"), "exec_error")
+
+
+# ------------------------------------------------------- memory ladder ------
+
+def test_eviction_ladder_preserves_state(tmp_path):
+    """With max_live_sessions=2 and 4 active streams the engine must evict
+    (snapshot+release) and rehydrate constantly — and still finish with
+    states bit-identical to an unconstrained engine."""
+    cfg = cfg_small(max_live_sessions=2, snapshot_every=8)
+    free = dataclasses.replace(cfg, max_live_sessions=None)
+    streams = {f"e{i}": rows_for(i, n=20) for i in range(4)}
+    ref = run_reference(free, str(tmp_path / "ref"), streams)
+    eng = run_reference(cfg, str(tmp_path / "eng"), streams)
+    st = eng.stats()
+    assert st["live_sessions"] <= 2
+    assert st["evictions"] > 0 and st["rehydrations"] > 0
+    steps = [e["step"] for e in eng.events]
+    assert "evict" in steps and "rehydrate" in steps
+    ev = next(e for e in eng.events if e["step"] == "evict")
+    assert ev["reason"] == "pressure" and "sid" in ev and "live" in ev
+    for s in streams:
+        assert_states_equal(ref.state(s), eng.state(s), f"ladder {s}")
+
+
+def test_close_snapshots_for_fast_reopen(tmp_path):
+    cfg = cfg_small(snapshot_every=1000)   # interval policy never fires
+    root = str(tmp_path / "eng")
+    with SessionEngine(cfg, root) as eng:
+        eng.open_session(sid="u0", key=0)
+        for r in rows_for(0, n=9):
+            eng.append("u0", r)
+        want = eng.state("u0")
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.summary("u0")
+    rec = SessionEngine(cfg, root)
+    assert_states_equal(want, rec.state("u0"), "reopen")
+    (ev,) = [e for e in rec.events if e["step"] == "rehydrate"]
+    assert ev["replayed"] == 0             # close() snapshotted everything
+
+
+# ------------------------------------------------------------- api facade ---
+
+def test_api_sessions_facade(tmp_path):
+    root = str(tmp_path / "api")
+    eng = api.sessions(SessionConfig(k=3, eps=0.5, n_features=12,
+                                     buffer_cap=12), root)
+    sid = api.open_session(key=1, engine=eng)
+    R = rows_for(1, n=15)
+    seqs = [api.append(sid, R[t], engine=eng) for t in range(15)]
+    assert seqs == list(range(1, 16))      # contiguous durable acks
+    s = api.summary(sid, engine=eng)
+    assert s.sid == sid and s.seen == 15 and s.value > 0
+    # the recovered view through a fresh facade engine is identical
+    eng2 = api.sessions(eng.config, root)
+    assert_summaries_equal(s, api.summary(sid, engine=eng2))

@@ -12,10 +12,19 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    STREAM_PHIS,
     FacilityLocation,
     FeatureCoverage,
     greedy,
+    sieve_best,
+    sieve_extend,
+    sieve_init,
     sieve_streaming,
+    sieve_update,
+    stream_sieve_best,
+    stream_sieve_init,
+    stream_sieve_update,
+    threshold_grid,
 )
 from repro.data import news_day
 
@@ -97,3 +106,122 @@ def test_sieve_small_k_and_small_stream():
     sv2 = sieve_streaming(fn, 5, stream=jnp.arange(10))
     sel = np.asarray(sv2.selected)
     assert (sel[sel >= 0] < 10).all()          # only streamed elements
+
+
+# ------------------------------------- promoted geometric threshold set ----
+
+def test_threshold_grid_geometric_covers_window():
+    """T = ceil(log(2k)/log(1+eps)) + 1 guesses at ratio (1+eps) span a
+    factor >= 2k — the window [m, 2*k*m] the guarantee needs."""
+    for k, eps in [(1, 0.2), (8, 0.2), (8, 0.5), (32, 0.1)]:
+        g = np.asarray(threshold_grid(k, eps))
+        assert g[0] == 1.0
+        np.testing.assert_allclose(g[1:] / g[:-1], 1.0 + eps, rtol=1e-5)
+        assert g[-1] >= 2.0 * k / (1.0 + eps)  # top guess reaches the window
+    with pytest.raises(ValueError, match="eps"):
+        threshold_grid(4, eps=-0.1)
+
+
+@pytest.mark.parametrize("eps", [0.2, 0.5])
+@pytest.mark.parametrize("mk", [make_fc, make_fl])
+def test_sieve_geometric_guarantee_over_orderings(mk, eps):
+    """The promoted (1/2 - eps) guarantee, property-tested over stream
+    orderings: every permutation of the stream must clear the bound vs
+    greedy (OPT >= greedy, so (1/2 - eps)*greedy is a valid floor)."""
+    fn = mk()
+    k = 8
+    g = float(greedy(fn, k).value)
+    for seed in range(5):
+        perm = jax.random.permutation(jax.random.PRNGKey(seed), fn.n)
+        sv = sieve_streaming(fn, k, stream=perm, eps=eps)
+        ratio = float(sv.value) / g
+        assert ratio >= 0.5 - eps, (seed, ratio)
+
+
+def test_sieve_incremental_bit_identical_to_one_shot():
+    """sieve_update per element == sieve_extend == one-shot, bitwise, in
+    both grid modes — the property the durable session tier leans on."""
+    fn = make_fc(seed=11, n=120, F=32)
+    k = 6
+    for eps in (None, 0.2):
+        one = sieve_streaming(fn, k, eps=eps)
+        st = sieve_init(fn, k, eps=eps)
+        for v in range(fn.n):
+            st = sieve_update(fn, st, v)
+        inc = sieve_best(st)
+        np.testing.assert_array_equal(np.asarray(one.selected),
+                                      np.asarray(inc.selected))
+        assert float(one.value) == float(inc.value)
+        ext = sieve_best(
+            sieve_extend(fn, sieve_init(fn, k, eps=eps), jnp.arange(fn.n))
+        )
+        assert float(ext.value) == float(inc.value)
+
+
+def test_sieve_geometric_window_slides_and_recycles():
+    """Feeding elements with growing singleton value slides the absolute
+    guess window up: exponents are strictly increasing over time, stay
+    distinct, and the recycled sieves restart empty (counts drop)."""
+    fn = make_fc(seed=13, n=100, F=32)
+    k = 5
+    st = sieve_init(fn, k, eps=0.3)
+    # order elements by singleton gain so m keeps growing
+    order = np.argsort(np.asarray(fn.singleton_gains()))
+    j_prev = None
+    for v in order:
+        st = sieve_update(fn, st, int(v))
+        j = np.asarray(st.jidx)
+        assert len(set(j.tolist())) == len(j)      # guesses stay distinct
+        if j_prev is not None:
+            assert (j >= j_prev.min()).all()
+            assert j.min() >= j_prev.min()         # window never slides down
+        j_prev = j
+    assert j_prev.min() > 0                        # it actually slid
+
+
+# --------------------------------------------------- row-streaming sieve ----
+
+def _stream_rows(seed, n=80, F=24, drift=8.0):
+    r = np.random.default_rng(seed)
+    scale = 1.0 + drift * np.arange(n, dtype=np.float32) / n
+    return (r.random((n, F)).astype(np.float32) * scale[:, None])
+
+
+@pytest.mark.parametrize("phi", STREAM_PHIS)
+def test_stream_sieve_matches_index_sieve(phi):
+    """The row-streaming sieve is the same algorithm with coverage-vector
+    state: identical accepted positions, values equal to reduction
+    numerics, on every supported phi."""
+    W = _stream_rows(3)
+    fn = FeatureCoverage(W=jnp.asarray(W), phi=phi)
+    k, eps = 5, 0.3
+    st_i = sieve_init(fn, k, eps=eps)
+    st_r = stream_sieve_init(k, W.shape[1], eps=eps)
+    for t in range(W.shape[0]):
+        st_i = sieve_update(fn, st_i, t)
+        st_r, _ = stream_sieve_update(st_r, jnp.asarray(W[t]), phi=phi)
+    a, b = sieve_best(st_i), stream_sieve_best(st_r)
+    np.testing.assert_array_equal(np.asarray(a.selected),
+                                  np.asarray(b.selected))
+    np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-5)
+    with pytest.raises(ValueError, match="phi"):
+        stream_sieve_update(st_r, jnp.asarray(W[0]), phi="satcov")
+
+
+def test_stream_sieve_guarantee_and_constant_memory():
+    """Row-streaming guarantee vs greedy over the materialized stream, and
+    the state never grows with the stream (same shapes throughout)."""
+    W = _stream_rows(5, n=120)
+    k, eps = 6, 0.5
+    st = stream_sieve_init(k, W.shape[1], eps=eps)
+    shapes0 = [x.shape for x in jax.tree.leaves(st)]
+    accepted = 0
+    for t in range(W.shape[0]):
+        st, took = stream_sieve_update(st, jnp.asarray(W[t]))
+        accepted += int(took)
+    assert [x.shape for x in jax.tree.leaves(st)] == shapes0
+    assert 0 < accepted < W.shape[0]       # selective, not degenerate
+    fn = FeatureCoverage(W=jnp.asarray(W), phi="sqrt")
+    g = float(greedy(fn, k).value)
+    assert float(stream_sieve_best(st).value) >= (0.5 - eps) * g
+    assert int(st.t) == W.shape[0]
