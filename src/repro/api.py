@@ -183,8 +183,11 @@ def default_engine(
 ) -> SessionEngine:
     """The process-wide engine the session verbs target — created on first
     use (volatile unless ``root`` is given then).  A crashed or closed
-    default is replaced on the next call; passing a different config while
-    one is live is an error — use :func:`sessions` instead."""
+    default is replaced on the next call; passing a different config *or a
+    different root* while one is live is an error — use :func:`sessions`
+    instead.  (Silently returning the live engine on a root mismatch would
+    let a caller who asked for durability believe volatile acks survive a
+    crash.)"""
     global _default_engine
     with _default_lock:
         eng = _default_engine
@@ -194,6 +197,13 @@ def default_engine(
             raise ValueError(
                 "the default session engine is already configured; use "
                 "repro.api.sessions(config) for a differently-configured one"
+            )
+        elif root is not None and root != eng.root:
+            raise ValueError(
+                "the default session engine is already rooted at "
+                f"{eng.root!r} (None = volatile, appends are NOT durable); "
+                "use repro.api.sessions(root=...) for a differently-rooted "
+                "engine"
             )
         return _default_engine
 

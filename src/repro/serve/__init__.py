@@ -43,6 +43,7 @@ from repro.serve.wal import (
     WALCorrupt,
     WALTruncated,
     WalRecord,
+    WalScan,
     WalWriter,
     scan_wal,
 )

@@ -43,7 +43,10 @@ Durability contract (docs/streaming.md):
   :class:`repro.serve.wal.WALCorrupt`; acknowledged records are never
   silently dropped.  Only the torn tail a crash leaves mid-write (by
   definition unacknowledged) may be skipped, and only by explicit opt-in
-  (``SessionConfig.tolerate_torn_tail``).
+  (``SessionConfig.tolerate_torn_tail``); recovery then *truncates* the
+  partial bytes off the file (auditable ``wal_truncate`` event) so later
+  appends land on a clean record boundary — otherwise the next append
+  would follow garbage and misframe every subsequent scan.
 
 Memory pressure reuses the PR-8 degradation-record convention: when more
 than ``max_live_sessions`` sessions are hydrated, the least-recently-used
@@ -60,7 +63,10 @@ story: ``crash`` kills the engine (all in-memory state gone, every further
 call raises :class:`ServiceRestarted`; recovery = construct a new engine
 on the same root) and ``restart`` simulates kill + immediate reopen (the
 engine drops its in-memory state and lazily rehydrates from disk — no
-acknowledged element is lost).
+acknowledged element is lost).  Because those two kinds presume durable
+storage to recover from, a plan that schedules them is rejected at
+construction on a volatile engine (``root=None``) — there, acknowledged
+appends would be silently lost.
 """
 
 from __future__ import annotations
@@ -341,6 +347,19 @@ class SessionEngine:
                 "max_live_sessions (eviction ladder) requires a durable "
                 "root: eviction releases state that must be rehydratable"
             )
+        if root is None and faults is not None:
+            durable_kinds = sorted(
+                {f.kind for f in faults.schedule.values()}
+                & {"crash", "restart"}
+            )
+            if durable_kinds:
+                raise ValueError(
+                    f"FaultPlan schedules {durable_kinds} faults but the "
+                    "engine is volatile (root=None): there is no WAL to "
+                    "recover from, so acknowledged appends would be "
+                    "silently lost — pass a durable root to inject "
+                    "crash/restart"
+                )
         self.root = root
         self._sig = self.config.signature()
         self._faults = faults
@@ -363,6 +382,7 @@ class SessionEngine:
             "appends": 0, "waves": 0, "wave_slots": 0, "padded_slots": 0,
             "resparsifies": 0, "snapshots": 0, "snapshot_fallbacks": 0,
             "rehydrations": 0, "evictions": 0, "restarts": 0, "crashes": 0,
+            "wal_truncations": 0,
         }
         self._known: set[str] = set()
         if root is not None:
@@ -645,7 +665,9 @@ class SessionEngine:
         """Kill + reopen in place: in-memory state dropped, sessions
         rehydrate lazily from snapshot + WAL on next touch.  Pending
         elements were WAL-acknowledged, so none are lost — they simply
-        replay during rehydration."""
+        replay during rehydration.  (Only reachable on durable engines:
+        a volatile engine rejects crash/restart plans at construction,
+        precisely because there its acks would not survive this.)"""
         for w in self._writers.values():
             w.close()
         self._writers.clear()
@@ -777,9 +799,27 @@ class SessionEngine:
         over."""
         cfg = self.config
         wal_path = os.path.join(self.root, sid, "wal.log")
-        records = _wal.scan_wal(
+        scan = _wal.scan_wal(
             wal_path, tolerate_torn_tail=cfg.tolerate_torn_tail
         )
+        records = scan.records
+        if scan.torn_bytes:
+            # Physically remove the tolerated torn tail.  The writer opens
+            # in append mode, so leaving the partial bytes would put the
+            # next acknowledged record after garbage and every later scan
+            # would misframe at this offset — acknowledged data written
+            # post-recovery would become unrecoverable.
+            w = self._writers.pop(sid, None)
+            if w is not None:
+                w.close()
+            with open(wal_path, "r+b") as f:
+                f.truncate(scan.valid_end)
+            self._stats["wal_truncations"] += 1
+            self.events.append({
+                "step": "wal_truncate", "sid": sid,
+                "valid_end": scan.valid_end,
+                "dropped_bytes": scan.torn_bytes,
+            })
         if not records or records[0].rtype != _wal.OPEN:
             raise _wal.WALCorrupt(
                 f"{wal_path}: missing OPEN record at sequence 0"
@@ -860,7 +900,11 @@ class SessionEngine:
         self._check_alive()
         self._hydrate(sid)
         self._apply_waves({sid}, faults=False)
-        return self._live[sid]
+        st = self._live[sid]
+        # Reads hydrate too — a read-heavy sweep over many sessions must
+        # not grow past the cap between flushes.
+        self._enforce_memory()
+        return st
 
     def summary(self, sid: str) -> SessionSummary:
         """Current k-element summary: flush, then greedy over the
@@ -873,13 +917,15 @@ class SessionEngine:
         n_live = int(st.buf_len)
         sieve_value = float(jnp.max(st.sieve.vals))
         if n_live == 0:
-            return SessionSummary(
+            out = SessionSummary(
                 sid=sid, selected=np.zeros(0, np.int32),
                 gains=np.zeros(0, np.float32), value=0.0,
                 sieve_value=sieve_value, retained=0,
                 seen=int(st.sieve.t), drops=int(st.drops),
                 resparsifies=int(st.n_ss),
             )
+            self._enforce_memory()
+            return out
         fn = FeatureCoverage(W=st.buf, phi=cfg.phi)
         alive = jnp.arange(cfg.buffer_cap) < st.buf_len
         res = greedy(
@@ -887,7 +933,7 @@ class SessionEngine:
         )
         n_sel = min(cfg.k, n_live)
         slots = np.asarray(res.selected)[:n_sel]
-        return SessionSummary(
+        out = SessionSummary(
             sid=sid,
             selected=np.asarray(st.buf_ids)[slots].astype(np.int32),
             gains=np.asarray(res.gains)[:n_sel].astype(np.float32),
@@ -898,6 +944,8 @@ class SessionEngine:
             drops=int(st.drops),
             resparsifies=int(st.n_ss),
         )
+        self._enforce_memory()
+        return out
 
     def stats(self) -> dict:
         """Engine counters: appends acknowledged, waves/slots/padding, SS

@@ -26,6 +26,11 @@ Durability contract (docs/streaming.md):
   the :class:`WALTruncated` subclass, and :func:`scan_wal` can be told to
   accept it (``tolerate_torn_tail=True``): the partial trailing record was
   by definition never acknowledged, so dropping *it alone* loses nothing.
+- A caller that tolerates a torn tail **must truncate the file to**
+  :attr:`WalScan.valid_end` **before appending again**: :class:`WalWriter`
+  opens in append mode, so a record written after leftover partial bytes
+  would misframe every later read at the torn offset
+  (``repro.serve.sessions`` does this during recovery).
 """
 
 from __future__ import annotations
@@ -64,6 +69,19 @@ class WalRecord:
     payload: bytes
 
 
+@dataclasses.dataclass(frozen=True)
+class WalScan:
+    """The result of :func:`scan_wal`: every verified record plus where the
+    verified prefix ends on disk.  ``torn_bytes > 0`` means a torn tail was
+    tolerated — the file still holds that many partial-record bytes past
+    ``valid_end``, and the caller must truncate to ``valid_end`` before any
+    further append."""
+
+    records: list[WalRecord]
+    valid_end: int      # byte offset of the end of the verified prefix
+    torn_bytes: int     # partial-record bytes dropped past valid_end
+
+
 def _crc(rtype: int, seq: int, payload: bytes) -> int:
     head = struct.pack("<BQ", rtype, seq)
     return zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
@@ -95,13 +113,16 @@ class WalWriter:
         self._f.close()
 
 
-def scan_wal(path: str, tolerate_torn_tail: bool = False) -> list[WalRecord]:
+def scan_wal(path: str, tolerate_torn_tail: bool = False) -> WalScan:
     """Read and verify every record of a WAL file.
 
     Raises :class:`WALCorrupt` on any checksum/framing violation with data
     after it, and :class:`WALTruncated` on a torn final record — unless
     ``tolerate_torn_tail`` accepts the (never-acknowledged) partial tail,
-    in which case the complete prefix is returned."""
+    in which case the complete prefix is returned with
+    :attr:`WalScan.torn_bytes` counting the dropped partial bytes (the
+    caller must truncate the file to :attr:`WalScan.valid_end` before it
+    appends again)."""
     records: list[WalRecord] = []
     with open(path, "rb") as f:
         data = f.read()
@@ -110,7 +131,7 @@ def scan_wal(path: str, tolerate_torn_tail: bool = False) -> list[WalRecord]:
     while off < size:
         if size - off < _HEADER.size:
             if tolerate_torn_tail:
-                return records
+                return WalScan(records, valid_end=off, torn_bytes=size - off)
             raise WALTruncated(
                 f"{path}: torn tail — {size - off} trailing bytes are a "
                 f"partial record header at offset {off} (crash mid-write); "
@@ -127,7 +148,7 @@ def scan_wal(path: str, tolerate_torn_tail: bool = False) -> list[WalRecord]:
         body_off = off + _HEADER.size
         if body_off + plen > size:
             if tolerate_torn_tail:
-                return records
+                return WalScan(records, valid_end=off, torn_bytes=size - off)
             raise WALTruncated(
                 f"{path}: torn tail — record seq={seq} at offset {off} "
                 f"declares {plen} payload bytes but only "
@@ -144,4 +165,4 @@ def scan_wal(path: str, tolerate_torn_tail: bool = False) -> list[WalRecord]:
             )
         records.append(WalRecord(rtype=rtype, seq=seq, payload=payload))
         off = body_off + plen
-    return records
+    return WalScan(records, valid_end=off, torn_bytes=0)

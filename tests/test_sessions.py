@@ -96,7 +96,9 @@ def test_wal_roundtrip(tmp_path):
     size = w.tell()
     w.close()
     assert os.path.getsize(p) == size
-    recs = wal.scan_wal(p)
+    scan = wal.scan_wal(p)
+    recs = scan.records
+    assert scan.valid_end == size and scan.torn_bytes == 0
     assert [r.seq for r in recs] == [0, 1, 2, 3]
     assert [r.payload for r in recs] == payloads
     assert recs[0].rtype == wal.OPEN
@@ -135,12 +137,16 @@ def test_wal_torn_tail(tmp_path):
         w.append(wal.APPEND, i, bytes(64))
     w.close()
     full = open(p, "rb").read()
+    rec_size = len(full) // 4
     for cut in (70, 30):  # mid-header and mid-payload of the last record
         open(p, "wb").write(full[: len(full) - cut])
         with pytest.raises(wal.WALTruncated):
             wal.scan_wal(p)
-        recs = wal.scan_wal(p, tolerate_torn_tail=True)
-        assert [r.seq for r in recs] == [0, 1, 2]
+        scan = wal.scan_wal(p, tolerate_torn_tail=True)
+        assert [r.seq for r in scan.records] == [0, 1, 2]
+        # valid_end frames the complete prefix; torn_bytes the partial rest
+        assert scan.valid_end == 3 * rec_size
+        assert scan.torn_bytes == rec_size - cut
 
 
 # ------------------------------------------------------------- engine -------
@@ -289,6 +295,57 @@ def test_corrupt_wal_tail_handling(tmp_path):
             SessionEngine(cfg_try, root).state("u0")
 
 
+def test_torn_tail_recovery_truncates_wal_and_appends_survive(tmp_path):
+    """Tolerated torn tails must be physically truncated at recovery: the
+    WAL writer appends, so a record written after leftover partial bytes
+    would misframe every later scan at the torn offset — acknowledged
+    post-recovery appends would be permanently unrecoverable."""
+    cfg = cfg_small(snapshot_every=None, tolerate_torn_tail=True)
+    root = str(tmp_path / "eng")
+    R = rows_for(7, n=30)
+    ref = run_reference(cfg, str(tmp_path / "ref"), {"u7": R})
+    half = SessionEngine(cfg, root)
+    half.open_session(sid="u7", key=7)
+    for t in range(20):
+        half.append("u7", R[t])
+    half.flush()
+    del half
+    p = os.path.join(root, "u7", "wal.log")
+    os.truncate(p, os.path.getsize(p) - 7)      # crash mid-write of seq 20
+    rec = SessionEngine(cfg, root)
+    assert int(rec.state("u7").sieve.t) == 19   # only the torn record lost
+    assert rec.stats()["wal_truncations"] == 1
+    (ev,) = [e for e in rec.events if e["step"] == "wal_truncate"]
+    assert ev["sid"] == "u7" and ev["dropped_bytes"] == 69 - 7
+    assert os.path.getsize(p) == ev["valid_end"]    # partial bytes are gone
+    # acknowledged appends made AFTER the recovery must survive the next
+    # one: re-ingest the lost element and finish the stream, then reopen
+    # with a STRICT config — pre-fix, the new records sat after the torn
+    # garbage and this scan raised WALCorrupt, losing all of them.
+    for t in range(19, 30):
+        rec.append("u7", R[t])
+    rec.flush()
+    del rec
+    strict = SessionEngine(
+        dataclasses.replace(cfg, tolerate_torn_tail=False), root
+    )
+    assert_states_equal(ref.state("u7"), strict.state("u7"), "post-torn")
+    assert_summaries_equal(ref.summary("u7"), strict.summary("u7"))
+
+
+def test_volatile_engine_rejects_crash_restart_faults():
+    """crash/restart faults presume durable storage to recover from; on a
+    volatile engine acknowledged appends would be silently lost, so the
+    plan is rejected at construction (kinds that lose nothing stay fine)."""
+    for kind in ("crash", "restart"):
+        with pytest.raises(ValueError, match="volatile"):
+            SessionEngine(cfg_small(), faults=FaultPlan({0: Fault(kind)}))
+    SessionEngine(cfg_small(), faults=FaultPlan({0: Fault("exec_error")}))
+    SessionEngine(
+        cfg_small(), None, faults=FaultPlan({1: Fault("latency")})
+    )
+
+
 def test_config_signature_mismatch_refuses_replay(tmp_path):
     """Replaying a WAL under a different trajectory config would silently
     fabricate a different state — recovery must refuse instead."""
@@ -407,6 +464,22 @@ def test_eviction_ladder_preserves_state(tmp_path):
         assert_states_equal(ref.state(s), eng.state(s), f"ladder {s}")
 
 
+def test_read_path_enforces_memory_cap(tmp_path):
+    """summary()/state() hydrate sessions too — a read-heavy sweep over
+    many sessions must hold max_live_sessions between flushes, not just
+    on the write path."""
+    cfg = cfg_small(max_live_sessions=2, snapshot_every=8)
+    streams = {f"r{i}": rows_for(i, n=12) for i in range(5)}
+    eng = run_reference(cfg, str(tmp_path / "eng"), streams)
+    assert eng.stats()["live_sessions"] <= 2
+    for s in streams:           # hydrate every session through reads only
+        eng.summary(s)
+        assert eng.stats()["live_sessions"] <= 2
+    for s in streams:
+        eng.state(s)
+        assert eng.stats()["live_sessions"] <= 2
+
+
 def test_close_snapshots_for_fast_reopen(tmp_path):
     cfg = cfg_small(snapshot_every=1000)   # interval policy never fires
     root = str(tmp_path / "eng")
@@ -438,3 +511,27 @@ def test_api_sessions_facade(tmp_path):
     # the recovered view through a fresh facade engine is identical
     eng2 = api.sessions(eng.config, root)
     assert_summaries_equal(s, api.summary(sid, engine=eng2))
+
+
+def test_api_default_engine_rejects_mismatched_root(tmp_path):
+    """default_engine() must not hand the live volatile engine to a caller
+    who asked for a durable root — that caller would believe their acks
+    survive a crash when they do not (and vice versa: a differently-rooted
+    request never silently lands on the wrong store)."""
+    saved = api._default_engine
+    api._default_engine = None
+    try:
+        eng = api.default_engine()              # volatile first use
+        assert api.default_engine() is eng      # no root asked: fine
+        with pytest.raises(ValueError, match="rooted"):
+            api.default_engine(root=str(tmp_path / "durable"))
+        with pytest.raises(ValueError, match="configured"):
+            api.default_engine(SessionConfig(k=5))
+        # a durable default likewise refuses a *different* root
+        api._default_engine = None
+        rooted = api.default_engine(root=str(tmp_path / "a"))
+        assert api.default_engine(root=str(tmp_path / "a")) is rooted
+        with pytest.raises(ValueError, match="rooted"):
+            api.default_engine(root=str(tmp_path / "b"))
+    finally:
+        api._default_engine = saved
