@@ -85,6 +85,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save
+from repro import obs
 from repro.core import FeatureCoverage, greedy, ss_sparsify
 from repro.data import news_day
 from repro.serve import (
@@ -129,7 +130,12 @@ def _pctl(lat: list[float], q: float) -> float:
 
 
 def run_sequential(queries, backend: str) -> dict:
-    """The pre-service loop: one ss_sparsify + greedy call per query."""
+    """The pre-service loop: one ss_sparsify + greedy call per query.
+
+    With tracing enabled (``REPRO_TRACE=1`` / ``--obs-overhead``) the
+    per-query latencies are read back off the ``bench.query`` trace spans
+    instead of a bespoke ``perf_counter`` list — the bench consumes the
+    same timing surface it is benchmarking (docs/observability.md)."""
     def one(q):
         fn = FeatureCoverage(W=q.features, phi="sqrt")
         ss = ss_sparsify(fn, q.prng_key(), backend=backend)
@@ -137,13 +143,26 @@ def run_sequential(queries, backend: str) -> dict:
         return jax.block_until_ready(res.value)
 
     one(queries[0])                       # warm the jit caches
+    tr = obs.get_tracer()
     lat = []
     t0 = time.perf_counter()
-    for q in queries:
-        t = time.perf_counter()
-        one(q)
-        lat.append(time.perf_counter() - t)
-    wall = time.perf_counter() - t0
+    if tr.enabled:
+        for i, q in enumerate(queries):
+            with tr.span("bench.query", query=i, backend=backend,
+                         mode="sequential"):
+                one(q)
+        wall = time.perf_counter() - t0
+        lat = [
+            s.wall_s for s in tr.spans(name="bench.query")
+            if s.attrs.get("backend") == backend
+            and s.attrs.get("mode") == "sequential"
+        ][-len(queries):]
+    else:
+        for q in queries:
+            t = time.perf_counter()
+            one(q)
+            lat.append(time.perf_counter() - t)
+        wall = time.perf_counter() - t0
     return {
         "wall_s": wall / len(queries),
         "qps": len(queries) / wall,
@@ -154,7 +173,10 @@ def run_sequential(queries, backend: str) -> dict:
 
 def run_batched(queries, backend: str, max_batch: int) -> dict:
     """The service path: submit everything, flush, read per-query latency
-    (queue delay + micro-batch execution) off the responses."""
+    (queue delay + micro-batch execution) off the responses — or, when
+    tracing is on, off each request's ``queue.wait`` + ``chunk.exec``
+    spans (the service emits them anyway; the bench just stops keeping a
+    parallel set of books)."""
     def serve():
         svc = SummarizeService(
             RunConfig(backend=backend, max_batch=max_batch)
@@ -165,8 +187,21 @@ def run_batched(queries, backend: str, max_batch: int) -> dict:
         return svc, responses, wall
 
     serve()                               # warm the jit caches
+    tr = obs.get_tracer()
+    if tr.enabled:
+        # Ticket indices restart at 0 per service, so drop the warm run's
+        # spans before the measured one — req-i must resolve uniquely.
+        tr.clear()
     svc, responses, wall = serve()
-    lat = [r.queue_delay_s + r.exec_s for r in responses]
+    if tr.enabled:
+        lat = []
+        for i in range(len(queries)):
+            spans = tr.spans_for_request(i)
+            wait = sum(s.wall_s for s in spans if s.name == "queue.wait")
+            execs = sum(s.wall_s for s in spans if s.name == "chunk.exec")
+            lat.append(wait + execs)
+    else:
+        lat = [r.queue_delay_s + r.exec_s for r in responses]
     st = svc.stats()
     return {
         "wall_s": wall / len(queries),
@@ -443,6 +478,72 @@ def run(num: int = 16, n: int = 1024, n_features: int = 512, k: int = K,
     return {"rows": rows}
 
 
+OBS_OVERHEAD_MAX = 1.1
+
+
+def run_obs_overhead(num: int, n: int, n_features: int, k: int,
+                     max_batch: int, backends) -> dict:
+    """The observability overhead gate: the same seq+batched grid, traced
+    vs untraced, in one process.  A first untraced pass warms every jit
+    signature so both measured passes see identical cache state; the gate
+    is ``wall(traced) <= OBS_OVERHEAD_MAX x wall(untraced)``
+    (docs/observability.md "Overhead contract")."""
+    was_enabled = obs.trace_enabled()
+    obs.configure(trace=False)
+    run(num=num, n=n, n_features=n_features, k=k,
+        max_batch=max_batch, backends=backends)          # warm everything
+    try:
+        obs.configure(trace=True)
+        obs.get_tracer().clear()
+        t0 = time.perf_counter()
+        run(num=num, n=n, n_features=n_features, k=k,
+            max_batch=max_batch, backends=backends)
+        wall_on = time.perf_counter() - t0
+        n_spans = len(obs.get_tracer().export())
+        obs.configure(trace=False)
+        t0 = time.perf_counter()
+        run(num=num, n=n, n_features=n_features, k=k,
+            max_batch=max_batch, backends=backends)
+        wall_off = time.perf_counter() - t0
+    finally:
+        obs.configure(trace=was_enabled)
+    ratio = wall_on / wall_off
+    row = {
+        "mode": "obs_overhead", "n": n, "k": k, "B": max_batch,
+        "num_queries": num, "backends": list(backends),
+        "bench_key": f"serve/obs-overhead-n{n}-B{max_batch}-k{k}",
+        "wall_on_s": wall_on, "wall_off_s": wall_off,
+        "overhead_ratio": ratio, "spans_recorded": n_spans,
+        "max_ratio": OBS_OVERHEAD_MAX,
+    }
+    print(
+        f"serve obs-overhead: traced {wall_on:.2f}s vs untraced "
+        f"{wall_off:.2f}s -> x{ratio:.3f} "
+        f"(gate {OBS_OVERHEAD_MAX}x, {n_spans} spans)", flush=True)
+    save("serve_bench_obs", [row])
+    return {"rows": [row]}
+
+
+def write_trace_artifact(path: str) -> None:
+    """Dump the process-wide observability state (spans + bus events +
+    metrics) as one JSON artifact — the trace upload the CI obs job
+    attaches to each run."""
+    tr = obs.get_tracer()
+    bus = obs.get_bus()
+    artifact = {
+        "spans": tr.export(),
+        "spans_dropped": tr.dropped,
+        "events": bus.export(),
+        "events_dropped": bus.dropped,
+        "metrics": obs.get_registry().to_json(),
+    }
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1)
+    print(
+        f"wrote trace artifact to {path} ({len(artifact['spans'])} spans, "
+        f"{len(artifact['events'])} events)", flush=True)
+
+
 def main() -> int:
     from benchmarks.kernel_bench import check_regression
 
@@ -467,6 +568,13 @@ def main() -> int:
                     "(completion rate hard-gated at 1.0)")
     ap.add_argument("--loads", nargs="+", type=float, default=[0.5, 0.8],
                     help="offered-load fractions of measured saturation")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="also run the tracing-overhead gate: the same grid "
+                    "traced vs untraced (warm caches shared); fails if the "
+                    f"traced wall exceeds {OBS_OVERHEAD_MAX}x untraced")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the observability state (spans + bus events "
+                    "+ metrics JSON) as one artifact after the run")
     ap.add_argument("--json", default=None, metavar="PATH")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="committed baseline JSON (BENCH_serve.json) to gate "
@@ -529,6 +637,24 @@ def main() -> int:
                     f"{r['completion_rate']:.2f}, {r['failed']} failed",
                     file=sys.stderr)
             return 1
+    obs_failed = False
+    if args.obs_overhead:
+        orows = run_obs_overhead(
+            num=args.num, n=args.n, n_features=args.features, k=args.k,
+            max_batch=args.batch, backends=tuple(args.backends),
+        )["rows"]
+        rows += orows
+        for r in orows:
+            if r["overhead_ratio"] > OBS_OVERHEAD_MAX:
+                print(
+                    "obs-overhead-gate: tracing-enabled wall is "
+                    f"x{r['overhead_ratio']:.3f} the disabled wall "
+                    f"(gate {OBS_OVERHEAD_MAX}x)", file=sys.stderr)
+                obs_failed = True
+    if args.trace_out:
+        write_trace_artifact(args.trace_out)
+    if obs_failed:
+        return 1
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows}, f, indent=1)

@@ -43,6 +43,7 @@ import time
 import numpy as np
 
 from benchmarks.kernel_bench import check_regression
+from repro import obs
 from repro.serve.sessions import SessionConfig, SessionEngine
 
 
@@ -119,10 +120,20 @@ def run_backend(
         "backend": backend,
     }]
 
+    # With tracing on, the per-snapshot / per-recovery walls are read back
+    # off the engine's own sessions.snapshot / sessions.recover spans
+    # instead of a second set of perf_counter books around the calls.
+    tr = obs.get_tracer()
+    snap_mark = len(tr.spans(name="sessions.snapshot"))
     t0 = time.perf_counter()
     for sid in streams:
         eng.snapshot(sid)
-    snap_wall = (time.perf_counter() - t0) / sessions
+    if tr.enabled:
+        snap_wall = float(np.mean([
+            s.wall_s for s in tr.spans(name="sessions.snapshot")[snap_mark:]
+        ]))
+    else:
+        snap_wall = (time.perf_counter() - t0) / sessions
     snap_bytes = int(np.mean(
         [_dir_bytes(root, sid, "snap-") for sid in streams]
     ))
@@ -145,11 +156,17 @@ def run_backend(
 
     # the crash: the engine object is dropped cold, a fresh one recovers
     del eng
+    rec_mark = len(tr.spans(name="sessions.recover"))
     t0 = time.perf_counter()
     rec = SessionEngine(cfg, root)
     for sid in streams:
         rec.state(sid)              # forces snapshot load + WAL-tail replay
-    rec_wall = (time.perf_counter() - t0) / sessions
+    if tr.enabled:
+        rec_wall = float(np.mean([
+            s.wall_s for s in tr.spans(name="sessions.recover")[rec_mark:]
+        ]))
+    else:
+        rec_wall = (time.perf_counter() - t0) / sessions
     replayed = [e["replayed"] for e in rec.events if e["step"] == "rehydrate"]
     rows.append({
         "bench_key": f"stream/recover-{shape}",
@@ -181,6 +198,9 @@ def main() -> int:
                     help="elements per session")
     ap.add_argument("--features", type=int, default=32)
     ap.add_argument("--backends", nargs="+", default=["oracle", "pallas"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the observability state (spans + bus events "
+                    "+ metrics JSON) as one artifact after the run")
     ap.add_argument("--json", default=None, metavar="PATH")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="committed BENCH_stream.json to gate against")
@@ -221,6 +241,21 @@ def main() -> int:
     print("recovery-gate: every recovered session bit-identical to the "
           "live engine", flush=True)
 
+    if args.trace_out:
+        tr = obs.get_tracer()
+        bus = obs.get_bus()
+        artifact = {
+            "spans": tr.export(),
+            "spans_dropped": tr.dropped,
+            "events": bus.export(),
+            "events_dropped": bus.dropped,
+            "metrics": obs.get_registry().to_json(),
+        }
+        with open(args.trace_out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote trace artifact to {args.trace_out} "
+              f"({len(artifact['spans'])} spans, "
+              f"{len(artifact['events'])} events)", flush=True)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows}, f, indent=1)

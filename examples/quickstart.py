@@ -22,7 +22,7 @@ from repro.core import (
     selection_bucket,
     sieve_streaming,
 )
-from repro import api
+from repro import api, obs
 from repro.core.sparsify import ss_sparsify, summarize
 from repro.data import clustered_embeddings, news_day
 
@@ -76,11 +76,17 @@ print(f"summarize(+§3.4):   f(S) = {float(res.value):.4f}")
 # retry + backend failover (RunConfig.max_retries / failover_backend), the
 # chunk watchdog, the deadline-pressure degradation ladder
 # (RunConfig.ladder), and the FaultPlan chaos-testing hook.
+# Tracing on for this one request (docs/observability.md): the service
+# emits request.admit / queue.wait / chunk.exec spans and the core emits
+# ss.sparsify / greedy spans under them — results stay bit-identical
+# (telemetry only observes outputs; tests/test_obs.py pins this).
+obs.configure(trace=True)
 resp = api.summarize(
     W, k=K, key=0,
     config=api.RunConfig(backend=BACKEND if BACKEND != "sharded"
                          else "oracle"),
 )
+obs.configure(trace=False)
 if BACKEND == "oracle":                  # same key + arithmetic -> same picks
     assert (resp.selected == reduced.selected).all()
 else:
@@ -90,6 +96,7 @@ else:
 print(f"api.summarize:      f(S) = {resp.value:.4f}  "
       f"(|V'| = {resp.vprime_size}, batch {resp.batch_size}/"
       f"{resp.batch_bucket}, queue {resp.queue_delay_s * 1e3:.1f} ms)")
+print(obs.trace_summary())               # the request's span tree
 
 # --- durable streaming sessions ----------------------------------------------
 # A live summary per session over an unbounded element stream: each session

@@ -25,6 +25,16 @@ summary per session over unbounded element streams:
   directory for the WAL + snapshot durability contract);
 - :func:`open_session` / :func:`append` / :func:`summary` — the per-session
   verbs, routed to a process-wide default engine when none is given.
+
+The *observability* surface (docs/observability.md):
+
+- :func:`stats` — one consistent snapshot of a service's serving counters
+  (defaults to the process-wide service, if one exists);
+- :func:`metrics` — the process-wide metrics registry rendered as
+  Prometheus text (default) or a JSON-serializable dict; pair with
+  :func:`repro.obs.start_metrics_server` for a pull endpoint and
+  ``repro.obs.configure(trace=True)`` / ``REPRO_TRACE=1`` for request
+  span trees (:func:`repro.obs.trace_summary`).
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 
+from repro import obs
 from repro.serve.faults import FaultPlan
 from repro.serve.sessions import (
     SessionConfig,
@@ -76,9 +87,11 @@ __all__ = [
     "append",
     "default_engine",
     "default_service",
+    "metrics",
     "open_session",
     "serve",
     "sessions",
+    "stats",
     "submit",
     "summarize",
     "summary",
@@ -228,3 +241,37 @@ def summary(sid: str, engine: SessionEngine | None = None) -> SessionSummary:
     """The session's current k-element summary (flushes pending appends,
     then greedy over the SS-pruned retained buffer)."""
     return (engine or default_engine()).summary(sid)
+
+
+# --------------------------------------------------------- observability ----
+
+def stats(service: SummarizeService | None = None) -> dict:
+    """One consistent snapshot of ``service``'s serving counters
+    (:meth:`SummarizeService.stats` — taken entirely under the service's
+    settle lock, so no count can tear against the aggregate derived from
+    it).  Defaults to the process-wide :func:`default_service` when one
+    already exists; raises when there is neither an argument nor a default
+    service (an empty implicit one would silently report zeros)."""
+    if service is None:
+        with _default_lock:
+            service = _default_service
+        if service is None:
+            raise RuntimeError(
+                "no default service exists yet; pass the service whose "
+                "stats you want (or submit something first)"
+            )
+    return service.stats()
+
+
+def metrics(fmt: str = "prometheus"):
+    """The process-wide metrics registry — every subsystem's counters,
+    gauges and histograms (scheduler, recovery, degradation, sessions,
+    WAL; docs/observability.md has the metric table).  ``fmt="prometheus"``
+    returns the text exposition format; ``fmt="json"`` a JSON-serializable
+    dict."""
+    reg = obs.get_registry()
+    if fmt == "prometheus":
+        return reg.to_prometheus()
+    if fmt == "json":
+        return reg.to_json()
+    raise ValueError(f"fmt must be 'prometheus' or 'json'; got {fmt!r}")

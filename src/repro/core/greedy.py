@@ -26,6 +26,7 @@ from __future__ import annotations
 import heapq
 import logging
 import math
+import time
 from functools import partial
 from typing import NamedTuple
 
@@ -33,12 +34,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.backend import Backend, resolve_backend
 from repro.core.functions import NEG, SubmodularFunction
 
 Array = jax.Array
 
 logger = logging.getLogger("repro.core.greedy")
+
+
+def _traceable(*objs) -> bool:
+    """Telemetry eligibility: tracing is on AND every input is concrete.
+    Under jit/vmap (tracer inputs — e.g. greedy called from the compiled
+    KV-pruning loop) the hooks must vanish: host reads are impossible there,
+    and the compiled-code-safety contract (docs/observability.md) forbids
+    injecting a sync into a traced region."""
+    if not obs.trace_enabled():
+        return False
+    return not any(
+        isinstance(leaf, jax.core.Tracer)
+        for leaf in jax.tree_util.tree_leaves(objs)
+    )
+
+
+def _record_greedy(sp, res: "GreedyResult", k: int, backend: str,
+                   wall_s: float, *, selector: str, batched: bool) -> None:
+    """Fill a selection span + metrics from a finished (host-read) result.
+    The per-step gain trajectory is read from ``GreedyResult.gains`` *after*
+    the compiled loop returns — pure observation, never an in-loop sync."""
+    gains = np.asarray(res.gains)
+    value = np.asarray(res.value)
+    if batched:
+        sp.set(
+            B=int(gains.shape[0]),
+            value=[float(v) for v in value],
+            gains=[[float(g) for g in row] for row in gains],
+        )
+    else:
+        sp.set(value=float(value), gains=[float(g) for g in gains])
+    sp.set(k=k, backend=backend, selector=selector)
+    obs.get_registry().histogram(
+        "repro_greedy_wall_seconds", "greedy selection wall time per call",
+        labels=("backend", "selector"),
+    ).observe(wall_s, backend=backend, selector=selector)
 
 
 class GreedyResult(NamedTuple):
@@ -193,7 +231,16 @@ def greedy(
     the dense path) when the objective implements the shard selection hooks.
     """
     be = resolve_backend(backend)
-    return be.greedy(fn, k, alive=alive, state=state, compact=compact)
+    if not _traceable(fn, alive, state):
+        return be.greedy(fn, k, alive=alive, state=state, compact=compact)
+    with obs.span("greedy.select") as sp:
+        t0 = time.perf_counter()
+        res = be.greedy(fn, k, alive=alive, state=state, compact=compact)
+        jax.block_until_ready(res.selected)
+        wall = time.perf_counter() - t0
+        _record_greedy(sp, res, k, be.name, wall,
+                       selector="greedy", batched=False)
+    return res
 
 
 def _greedy_dense(
@@ -319,9 +366,22 @@ def greedy_batched(
                          f"got shape {alive.shape}")
     n = jax.tree.map(lambda x: x[0], fn).n
     size, _ = _batched_compact_plan(n, alive, compact)
-    if on_step is None:
-        return _greedy_batched(fn, k, size, alive, state, be)
-    return _greedy_batched_stepped(fn, k, size, alive, state, be, on_step)
+
+    def _run():
+        if on_step is None:
+            return _greedy_batched(fn, k, size, alive, state, be)
+        return _greedy_batched_stepped(fn, k, size, alive, state, be, on_step)
+
+    if not _traceable(fn, alive, state):
+        return _run()
+    with obs.span("greedy.select_batched", n=n, bucket=size) as sp:
+        t0 = time.perf_counter()
+        res = _run()
+        jax.block_until_ready(res.selected)
+        wall = time.perf_counter() - t0
+        _record_greedy(sp, res, k, be.name, wall,
+                       selector="greedy", batched=True)
+    return res
 
 
 # ``on_step(step_index, selected (B,), gains (B,), ok (B,))`` — arrays are
@@ -524,13 +584,25 @@ def stochastic_greedy_batched(
     step_keys = jnp.swapaxes(
         jax.vmap(lambda kk: jax.random.split(kk, k))(keys), 0, 1,
     )
-    if on_step is None:
-        return _stochastic_greedy_batched(
-            fn, k, step_keys, s, size, alive, state, be
+    def _run():
+        if on_step is None:
+            return _stochastic_greedy_batched(
+                fn, k, step_keys, s, size, alive, state, be
+            )
+        return _stochastic_greedy_batched_stepped(
+            fn, k, step_keys, s, size, alive, state, be, on_step
         )
-    return _stochastic_greedy_batched_stepped(
-        fn, k, step_keys, s, size, alive, state, be, on_step
-    )
+
+    if not _traceable(fn, keys, alive, state):
+        return _run()
+    with obs.span("greedy.stochastic_batched", n=n, bucket=size, s=s) as sp:
+        t0 = time.perf_counter()
+        res = _run()
+        jax.block_until_ready(res.selected)
+        wall = time.perf_counter() - t0
+        _record_greedy(sp, res, k, be.name, wall,
+                       selector="stochastic", batched=True)
+    return res
 
 
 def _batched_compact_plan(

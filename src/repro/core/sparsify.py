@@ -27,19 +27,89 @@ f(greedy on V') >= (1 - 1/e)(f(S*) - k * eps_hat).
 from __future__ import annotations
 
 import math
+import time
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import obs
 from repro.core import graph
 from repro.core.backend import Backend, resolve_backend
 from repro.core.functions import NEG, SubmodularFunction
-from repro.core.greedy import bidirectional_greedy, greedy
+from repro.core.greedy import _traceable, bidirectional_greedy, greedy
 
 Array = jax.Array
 INF = -NEG  # +1e30
+
+
+def _round_detail(
+    trace: np.ndarray, n: int, r: int, c: float, live0: int, wall_s: float,
+) -> list[dict]:
+    """Per-round records derived *post-hoc* from ``SSResult.alive_trace`` —
+    live count after the round, the compact bucket the round dispatched
+    over, and a model-apportioned share of the measured total wall time
+    (``wall_est_s``; the fused ``while_loop`` cannot be host-timed per
+    round without a sync inside the traced scan, so per-round wall is an
+    estimate weighted by probe-rows x bucket-slots work)."""
+    m = min(probe_count(n, r), n)
+    buckets = bucket_schedule(n, c)
+    lives = [int(v) for v in trace if v >= 0]
+    detail, weights, live_before = [], [], live0
+    for live_after in lives:
+        bucket = min((b for b in buckets if b >= live_before), default=n)
+        weights.append(float(m * bucket))
+        detail.append({"live": live_after, "bucket": bucket})
+        live_before = live_after
+    total_w = sum(weights) or 1.0
+    for j, d in enumerate(detail):
+        d["round"] = j
+        d["wall_est_s"] = wall_s * weights[j] / total_w
+    return detail
+
+
+def _record_ss(
+    sp, ss: "SSResult", n: int, r: int, c: float, backend: str,
+    wall_s: float, live0, *, batched: bool,
+) -> None:
+    """Fill an SS span + metrics from a finished (host-read) result."""
+    reg = obs.get_registry()
+    trace = np.asarray(ss.alive_trace)
+    rounds = np.asarray(ss.rounds)
+    eps_hat = np.asarray(ss.eps_hat)
+    vp = np.asarray(jnp.sum(ss.vprime, axis=-1))
+    if batched:
+        sp.set(
+            B=int(trace.shape[0]),
+            rounds=[int(x) for x in rounds],
+            eps_hat=[float(x) for x in eps_hat],
+            vprime_size=[int(x) for x in vp],
+            rounds_detail=[
+                _round_detail(row, n, r, c, int(l0), wall_s)
+                for row, l0 in zip(trace, live0)
+            ],
+        )
+        total_rounds = int(rounds.sum())
+    else:
+        sp.set(
+            rounds=int(rounds), eps_hat=float(eps_hat),
+            vprime_size=int(vp),
+            rounds_detail=_round_detail(trace, n, r, c, int(live0), wall_s),
+        )
+        total_rounds = int(rounds)
+    # wall_s is the measured compute wall (t0 -> block_until_ready), the
+    # quantity the per-round estimates apportion; the span's own t0..t1
+    # additionally covers this host-side readout.
+    sp.set(n=n, r=r, c=c, backend=backend, wall_s=wall_s)
+    reg.histogram(
+        "repro_ss_wall_seconds", "ss_sparsify wall time per call",
+        labels=("backend",),
+    ).observe(wall_s, backend=backend)
+    reg.counter(
+        "repro_ss_rounds_total", "SS rounds executed", labels=("backend",),
+    ).inc(total_rounds, backend=backend)
 
 
 class SSResult(NamedTuple):
@@ -179,10 +249,22 @@ def ss_sparsify(
         produce identical ``vprime`` under the same key).
     """
     be = resolve_backend(backend)
-    return be.sparsify(
-        fn, key, r=r, c=c, alive=alive, state=state, importance=importance,
-        compact=compact,
-    )
+    if not _traceable(fn, key, alive, state):
+        return be.sparsify(
+            fn, key, r=r, c=c, alive=alive, state=state,
+            importance=importance, compact=compact,
+        )
+    with obs.span("ss.sparsify") as sp:
+        t0 = time.perf_counter()
+        ss = be.sparsify(
+            fn, key, r=r, c=c, alive=alive, state=state,
+            importance=importance, compact=compact,
+        )
+        jax.block_until_ready(ss.vprime)
+        wall = time.perf_counter() - t0
+        live0 = fn.n if alive is None else int(jnp.sum(alive))
+        _record_ss(sp, ss, fn.n, r, c, be.name, wall, live0, batched=False)
+    return ss
 
 
 @partial(jax.jit, static_argnames=("r", "c", "importance", "backend", "compact"))
@@ -342,10 +424,27 @@ def ss_sparsify_batched(
     single-query run — never read them at non-live indices.
     """
     be = resolve_backend(backend)
-    return be.sparsify_batched(
-        fn, keys, r=r, c=c, alive=alive, state=state, importance=importance,
-        compact=compact,
-    )
+    if not _traceable(fn, keys, alive, state):
+        return be.sparsify_batched(
+            fn, keys, r=r, c=c, alive=alive, state=state,
+            importance=importance, compact=compact,
+        )
+    with obs.span("ss.sparsify_batched") as sp:
+        t0 = time.perf_counter()
+        ss = be.sparsify_batched(
+            fn, keys, r=r, c=c, alive=alive, state=state,
+            importance=importance, compact=compact,
+        )
+        jax.block_until_ready(ss.vprime)
+        wall = time.perf_counter() - t0
+        n = jax.tree.map(lambda x: x[0], fn).n
+        B = int(keys.shape[0])
+        if alive is None:
+            live0 = [n] * B
+        else:
+            live0 = [int(x) for x in np.asarray(jnp.sum(alive, axis=1))]
+        _record_ss(sp, ss, n, r, c, be.name, wall, live0, batched=True)
+    return ss
 
 
 @partial(jax.jit, static_argnames=("r", "c", "importance", "backend", "compact"))

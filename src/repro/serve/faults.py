@@ -45,6 +45,8 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from repro import obs
+
 
 class FaultInjected(RuntimeError):
     """An injected execution error (the harness's stand-in for a poisoned
@@ -96,7 +98,9 @@ class FaultPlan:
                 raise ValueError(f"attempt index must be >= 0; got {i}")
             if not isinstance(f, Fault):
                 raise TypeError(f"schedule values must be Fault; got {f!r}")
-        self.log: list[FaultEvent] = []
+        # Bounded: a long chaos run ages old draws out instead of growing
+        # without limit; ``log.dropped`` counts the evicted history.
+        self.log: obs.RingLog = obs.RingLog()
         self._attempts = 0
         self._lock = threading.Lock()
 
@@ -161,7 +165,17 @@ class FaultPlan:
                     attempt=i, fault=fault, tickets=tuple(tickets),
                     lane=lane, backend=backend, stage=stage,
                 ))
-            return fault
+        if fault is not None:
+            obs.get_bus().emit(
+                "fault", subsystem="faults", request_ids=tuple(tickets),
+                attempt=i, fault_kind=fault.kind, delay_s=fault.delay_s,
+                backend=backend, stage=stage,
+            )
+            obs.get_registry().counter(
+                "repro_faults_injected_total", "fault draws by kind",
+                labels=("kind",),
+            ).inc(kind=fault.kind)
+        return fault
 
     def events(self, kind: str | None = None) -> list[FaultEvent]:
         """The attribution log, optionally filtered to one fault kind."""

@@ -94,6 +94,7 @@ from repro.core import (
     stream_sieve_init,
     stream_sieve_update,
 )
+from repro import obs
 from repro.serve import wal as _wal
 from repro.serve.faults import FaultInjected, FaultPlan
 from repro.serve.summarize_service import ServiceRestarted, batch_buckets
@@ -377,7 +378,10 @@ class SessionEngine:
         self._n_opened = 0
         self._dead: str | None = None
         self._closed = False
-        self.events: list[dict] = []
+        # Bounded audit log (a long-lived multi-session stream previously
+        # grew this without limit); every entry is mirrored onto the
+        # unified event bus with its session id.
+        self.events: obs.RingLog = obs.RingLog()
         self._stats = {
             "appends": 0, "waves": 0, "wave_slots": 0, "padded_slots": 0,
             "resparsifies": 0, "snapshots": 0, "snapshot_fallbacks": 0,
@@ -420,6 +424,21 @@ class SessionEngine:
     def _touch(self, sid: str) -> None:
         self._clock += 1
         self._order[sid] = self._clock
+
+    def _event(self, step: str, *, sid: str | None = None, **data) -> None:
+        """Audit one lifecycle event: append to the bounded ``events`` log
+        (same dict shape readers always saw) and mirror it onto the unified
+        bus keyed by session id."""
+        ev = {"step": step}
+        if sid is not None:
+            ev["sid"] = sid
+        ev.update(data)
+        self.events.append(ev)
+        obs.get_bus().emit(step, subsystem="sessions", session_id=sid, **data)
+        obs.get_registry().counter(
+            "repro_sessions_events_total", "session audit events by step",
+            labels=("step",),
+        ).inc(step=step)
 
     # -- session lifecycle -------------------------------------------------
     def open_session(self, sid: str | None = None, *, key: int = 0) -> str:
@@ -584,9 +603,20 @@ class SessionEngine:
         rows = rows + [np.zeros(cfg.n_features, np.float32)] * pad
         stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
         valid = jnp.array([True] * B + [False] * pad)
+        t0 = time.perf_counter()
         new_states, _, _ = _wave_kernel(
             stacked, jnp.asarray(np.stack(rows)), valid, phi=cfg.phi
         )
+        tr = obs.get_tracer()
+        if tr.enabled:
+            # Host-side timing around the jitted wave only; the sync is
+            # opt-in with tracing (the default path stays fully async).
+            jax.block_until_ready(new_states)
+            t1 = time.perf_counter()
+            tr.record("sessions.wave", t0, t1, B=B, bucket=bucket, pad=pad)
+            obs.get_registry().histogram(
+                "repro_sessions_wave_seconds", "sieve wave execution wall",
+            ).observe(t1 - t0)
         for j, s in enumerate(chunk):
             self._live[s] = jax.tree_util.tree_map(
                 lambda x, j=j: x[j], new_states
@@ -616,6 +646,7 @@ class SessionEngine:
             grp = due[i:i + cfg.max_batch]
             if self._draw_fault(grp, "resparsify", faults) == "restarted":
                 return "restarted"
+            t0 = time.perf_counter()
             states = [self._live[s] for s in grp]
             B = len(grp)
             bucket = min(b for b in self._buckets if b >= B)
@@ -634,6 +665,13 @@ class SessionEngine:
             )
             keep = jnp.logical_and(ss.vprime, alive)
             new_states = _compact_kernel(stacked, keep)
+            tr = obs.get_tracer()
+            if tr.enabled:
+                jax.block_until_ready(new_states)
+                tr.record(
+                    "sessions.resparsify", t0, time.perf_counter(),
+                    B=B, bucket=bucket, sessions=tuple(grp),
+                )
             for j, s in enumerate(grp):
                 self._live[s] = jax.tree_util.tree_map(
                     lambda x, j=j: x[j], new_states
@@ -657,7 +695,7 @@ class SessionEngine:
         self._applied_seq.clear()
         self._since_snap.clear()
         self._stats["crashes"] += 1
-        self.events.append({"step": "crash", "reason": "fault"})
+        self._event("crash", reason="fault")
         self._dead = msg
         raise ServiceRestarted(msg)
 
@@ -677,10 +715,7 @@ class SessionEngine:
         self._applied_seq.clear()
         self._since_snap.clear()
         self._stats["restarts"] += 1
-        self.events.append({
-            "step": "restart", "reason": "fault",
-            "sessions": sorted(self._known),
-        })
+        self._event("restart", reason="fault", sessions=sorted(self._known))
 
     # -- durability --------------------------------------------------------
     def _writer(self, sid: str) -> _wal.WalWriter:
@@ -704,6 +739,7 @@ class SessionEngine:
         }
         final = os.path.join(sdir, f"snap-{seq:012d}.npz")
         tmp = final + ".tmp"
+        t0 = time.perf_counter()
         with open(tmp, "wb") as f:
             np.savez(
                 f,
@@ -711,6 +747,14 @@ class SessionEngine:
                 **_state_arrays(self._live[sid]),
             )
         os.replace(tmp, final)
+        t1 = time.perf_counter()
+        obs.get_registry().histogram(
+            "repro_sessions_snapshot_seconds",
+            "atomic state-checkpoint wall (write + rename)",
+        ).observe(t1 - t0)
+        tr = obs.get_tracer()
+        if tr.enabled:
+            tr.record("sessions.snapshot", t0, t1, session=sid, seq=seq)
         self._since_snap[sid] = 0
         self._stats["snapshots"] += 1
         for name in sorted(self._snapshot_names(sid), reverse=True)[2:]:
@@ -750,10 +794,10 @@ class SessionEngine:
                     state = _arrays_state(z)
             except Exception as e:  # noqa: BLE001 - corrupt file: fall back
                 self._stats["snapshot_fallbacks"] += 1
-                self.events.append({
-                    "step": "snapshot_fallback", "sid": sid,
-                    "snapshot": name, "error": repr(e),
-                })
+                self._event(
+                    "snapshot_fallback", sid=sid, snapshot=name,
+                    error=repr(e),
+                )
                 continue
             if meta.get("schema") != SCHEMA_VERSION:
                 raise ValueError(
@@ -785,10 +829,7 @@ class SessionEngine:
             )
         replayed = self._recover(sid)
         self._stats["rehydrations"] += 1
-        self.events.append({
-            "step": "rehydrate", "sid": sid, "reason": "access",
-            "replayed": replayed,
-        })
+        self._event("rehydrate", sid=sid, reason="access", replayed=replayed)
         return self._live[sid]
 
     def _recover(self, sid: str) -> int:
@@ -797,6 +838,17 @@ class SessionEngine:
         record, the config signature, and strict seq contiguity — a gap
         means acknowledged records vanished, which must never be papered
         over."""
+        t0 = time.perf_counter()
+        with obs.span("sessions.recover", session=sid) as sp:
+            replayed = self._recover_inner(sid)
+            sp.set(replayed=replayed)
+        obs.get_registry().histogram(
+            "repro_sessions_recover_seconds",
+            "snapshot-load + WAL-tail-replay wall per rehydration",
+        ).observe(time.perf_counter() - t0)
+        return replayed
+
+    def _recover_inner(self, sid: str) -> int:
         cfg = self.config
         wal_path = os.path.join(self.root, sid, "wal.log")
         scan = _wal.scan_wal(
@@ -815,11 +867,10 @@ class SessionEngine:
             with open(wal_path, "r+b") as f:
                 f.truncate(scan.valid_end)
             self._stats["wal_truncations"] += 1
-            self.events.append({
-                "step": "wal_truncate", "sid": sid,
-                "valid_end": scan.valid_end,
-                "dropped_bytes": scan.torn_bytes,
-            })
+            self._event(
+                "wal_truncate", sid=sid, valid_end=scan.valid_end,
+                dropped_bytes=scan.torn_bytes,
+            )
         if not records or records[0].rtype != _wal.OPEN:
             raise _wal.WALCorrupt(
                 f"{wal_path}: missing OPEN record at sequence 0"
@@ -888,10 +939,10 @@ class SessionEngine:
             if w is not None:
                 w.close()
             self._stats["evictions"] += 1
-            self.events.append({
-                "step": "evict", "sid": victim, "reason": "pressure",
-                "live": len(self._live),
-            })
+            self._event(
+                "evict", sid=victim, reason="pressure",
+                live=len(self._live),
+            )
 
     # -- read side ---------------------------------------------------------
     def state(self, sid: str) -> SessionState:
@@ -955,4 +1006,5 @@ class SessionEngine:
         st["live_sessions"] = len(self._live)
         st["known_sessions"] = len(self._known)
         st["pending"] = sum(len(q) for q in self._pending.values())
+        st["events_dropped"] = self.events.dropped
         return st

@@ -101,6 +101,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import (
     FacilityLocation,
     FeatureCoverage,
@@ -117,6 +118,20 @@ from repro.core import (
 from repro.serve.faults import FaultInjected, FaultPlan
 
 Array = jax.Array
+
+
+def ewma_update(prev: float | None, sample: float, alpha: float = 0.5) -> float:
+    """The service's execution-estimate EWMA: the first sample seeds the
+    estimate, after which ``alpha`` weights the newest sample.  Exposed at
+    module level so tests can pin the deadline flusher's convergence
+    independently of a live service."""
+    return sample if prev is None else (1.0 - alpha) * prev + alpha * sample
+
+
+def _lane_label(lane: tuple) -> str:
+    """A low-cardinality metrics label for a lane tuple: objective / ground
+    size / budget (the full tuple would explode label cardinality)."""
+    return f"{lane[0]}/n{lane[2][0]}/k{lane[3]}"
 
 
 class DeadlineExceeded(RuntimeError):
@@ -749,6 +764,28 @@ class SummarizeService:
             with self._cond:
                 self._stats["failed"] += 1
             ticket._settle(error=e)
+            obs.get_registry().counter(
+                "repro_service_requests_total", "admitted requests by outcome",
+                labels=("outcome",),
+            ).inc(outcome="rejected")
+            tr = obs.get_tracer()
+            if tr.enabled:
+                tr.record(
+                    "request.admit", now, time.perf_counter(),
+                    trace_id=f"req-{ticket.index}", status="error",
+                    error=type(e).__name__,
+                )
+            return ticket
+        obs.get_registry().counter(
+            "repro_service_requests_total", "admitted requests by outcome",
+            labels=("outcome",),
+        ).inc(outcome="admitted")
+        tr = obs.get_tracer()
+        if tr.enabled:
+            tr.record(
+                "request.admit", now, time.perf_counter(),
+                trace_id=f"req-{ticket.index}", lane=_lane_label(lane),
+            )
         return ticket
 
     def _lane(self, req: SummarizeRequest) -> tuple:
@@ -904,6 +941,20 @@ class SummarizeService:
             it.ticket._state = "executing"
         try:
             degradation = self._degradation_plan(lane, items)
+            if degradation is not None:
+                obs.get_bus().emit(
+                    "degradation", subsystem="service",
+                    request_ids=tuple(it.ticket.index for it in items),
+                    level=degradation["level"], reason=degradation["reason"],
+                    steps=degradation["steps"],
+                    selector=degradation["selector"],
+                )
+                obs.get_registry().counter(
+                    "repro_service_degraded_chunks_total",
+                    "chunks planned at a degraded ladder level",
+                    labels=("level", "reason"),
+                ).inc(level=degradation["level"],
+                      reason=degradation["reason"])
             self._execute_with_recovery(lane, items, trigger, degradation)
         except Exception as e:  # noqa: BLE001 - captured on the tickets
             self._resolve_err(items, e)
@@ -934,12 +985,24 @@ class SummarizeService:
         failures = 0
         tried: list[str] = []
         last_err: Exception | None = None
+        idxs = tuple(it.ticket.index for it in items)
+        reg = obs.get_registry()
+        bus = obs.get_bus()
         for stage, be in stages:
             if be.name not in tried:
                 tried.append(be.name)
             if stage == "failover":
                 with self._cond:
                     self._stats["failovers"] += 1
+                reg.counter(
+                    "repro_service_failovers_total",
+                    "chunks that reached the failover backend",
+                ).inc()
+                bus.emit(
+                    "recovery", subsystem="service", request_ids=idxs,
+                    step="failover", backend=be.name,
+                    error=type(last_err).__name__ if last_err else None,
+                )
             for attempt in range(cfg.max_retries + 1):
                 if attempt > 0:
                     time.sleep(cfg.retry_backoff_s * (2 ** (attempt - 1)))
@@ -947,6 +1010,16 @@ class SummarizeService:
                 if failures > 0:
                     with self._cond:
                         self._stats["retries"] += 1
+                    reg.counter(
+                        "repro_service_retries_total",
+                        "chunk attempts after a failure",
+                        labels=("stage",),
+                    ).inc(stage=stage)
+                    bus.emit(
+                        "recovery", subsystem="service", request_ids=idxs,
+                        step="retry", stage=stage, backend=be.name,
+                        attempt=attempt, failures=failures,
+                    )
                     recovery = {
                         "retries": failures,
                         "stage": stage,
@@ -967,6 +1040,14 @@ class SummarizeService:
                     failures += 1
                     with self._cond:
                         self._stats["chunk_timeouts"] += 1
+                    reg.counter(
+                        "repro_service_chunk_timeouts_total",
+                        "watchdog-abandoned chunk attempts",
+                    ).inc()
+                    bus.emit(
+                        "recovery", subsystem="service", request_ids=idxs,
+                        step="chunk_timeout", stage=stage, backend=be.name,
+                    )
                     break  # hung signature: don't re-run it in this stage
                 except ServiceRestarted:
                     # The engine died mid-attempt: every ticket is already
@@ -978,6 +1059,14 @@ class SummarizeService:
                     failures += 1
         if cfg.isolate_on_failure and len(items) > 1:
             stage_be = stages[-1][1]
+            reg.counter(
+                "repro_service_isolations_total",
+                "chunks re-run one query at a time",
+            ).inc()
+            bus.emit(
+                "recovery", subsystem="service", request_ids=idxs,
+                step="isolate", backend=stage_be.name, failures=failures,
+            )
             for it in items:
                 recovery = {
                     "retries": failures,
@@ -1174,30 +1263,49 @@ class SummarizeService:
 
         deg = degradation
         t_start = time.perf_counter()
-        fn, alive = build_batch_objective(padded, n_pad)
-        keys = jnp.stack([r.prng_key() for r in padded])
-        res, ss = summarize_batch(
-            fn, k, keys,
-            r=cfg.r if deg is None else deg["r"],
-            c=cfg.c if deg is None else deg["c"],
-            use_ss=use_ss, alive=alive,
-            backend=be, compact=cfg.compact, on_step=on_step,
-            selector="greedy" if deg is None else deg["selector"],
-            eps=cfg.eps,
-        )
-        jax.block_until_ready(res.value)
-        if fault is not None and fault.kind == "malformed":
-            res = res._replace(gains=jnp.full_like(res.gains, jnp.nan))
-        finite = bool(
-            jnp.all(jnp.isfinite(res.gains[:n_real]))
-            & jnp.all(jnp.isfinite(res.value[:n_real]))
-        )
-        if not finite:
-            raise MalformedResult(
-                f"non-finite gains/value in chunk results ({stage}/{be.name})"
+        tr = obs.get_tracer()
+        if tr.enabled:
+            # Queue residency is only known retroactively — record each
+            # item's wait span from its admission timestamp now that
+            # execution starts.
+            for it in items:
+                tr.record(
+                    "queue.wait", it.submit_t, t_start,
+                    trace_id=f"req-{it.ticket.index}",
+                    lane=_lane_label(lane), trigger=trigger,
+                )
+        with tr.span(
+            "chunk.exec", trace_id=f"req-{items[0].ticket.index}",
+            request_ids=tuple(it.ticket.index for it in items),
+            lane=_lane_label(lane), backend=be.name, stage=stage,
+            trigger=trigger, bucket=bucket, batch=n_real,
+            degraded=0 if deg is None else deg["level"],
+        ):
+            fn, alive = build_batch_objective(padded, n_pad)
+            keys = jnp.stack([r.prng_key() for r in padded])
+            res, ss = summarize_batch(
+                fn, k, keys,
+                r=cfg.r if deg is None else deg["r"],
+                c=cfg.c if deg is None else deg["c"],
+                use_ss=use_ss, alive=alive,
+                backend=be, compact=cfg.compact, on_step=on_step,
+                selector="greedy" if deg is None else deg["selector"],
+                eps=cfg.eps,
             )
-        t_end = time.perf_counter()
-        exec_s = t_end - t_start
+            jax.block_until_ready(res.value)
+            if fault is not None and fault.kind == "malformed":
+                res = res._replace(gains=jnp.full_like(res.gains, jnp.nan))
+            finite = bool(
+                jnp.all(jnp.isfinite(res.gains[:n_real]))
+                & jnp.all(jnp.isfinite(res.value[:n_real]))
+            )
+            if not finite:
+                raise MalformedResult(
+                    f"non-finite gains/value in chunk results "
+                    f"({stage}/{be.name})"
+                )
+            t_end = time.perf_counter()
+            exec_s = t_end - t_start
 
         vp_sizes = (
             None if ss is None else jnp.sum(ss.vprime, axis=1)
@@ -1261,12 +1369,54 @@ class SummarizeService:
             # deadline shorter than the first compile is simply served late
             # and flagged, never dropped).
             est_key = (lane, 0 if deg is None else deg["level"])
-            prev = self._exec_est.get(est_key)
-            self._exec_est[est_key] = (
-                exec_s if prev is None else 0.5 * prev + 0.5 * exec_s
+            self._exec_est[est_key] = ewma_update(
+                self._exec_est.get(est_key), exec_s
             )
             self._outstanding -= len(settled)
+            pending_now, outstanding_now = self._pending, self._outstanding
             self._cond.notify_all()
+        lane_lbl = _lane_label(lane)
+        reg = obs.get_registry()
+        reg.histogram(
+            "repro_service_exec_seconds", "chunk execution wall time",
+            labels=("lane", "backend", "stage"),
+        ).observe(exec_s, lane=lane_lbl, backend=be.name, stage=stage)
+        delay_h = reg.histogram(
+            "repro_service_queue_delay_seconds",
+            "per-query admission-to-execution delay", labels=("lane",),
+        )
+        for _, resp in settled:
+            delay_h.observe(resp.queue_delay_s, lane=lane_lbl)
+        reg.counter(
+            "repro_service_queries_total", "queries served",
+        ).inc(len(settled))
+        reg.counter(
+            "repro_service_batches_total", "chunks executed by trigger",
+            labels=("trigger",),
+        ).inc(trigger=trigger)
+        reg.counter(
+            "repro_service_slots_total", "executed batch slots",
+        ).inc(bucket)
+        reg.counter(
+            "repro_service_padded_slots_total",
+            "slots burned padding chunks up to their batch bucket",
+        ).inc(bucket - n_real)
+        if missed:
+            reg.counter(
+                "repro_service_deadlines_missed_total",
+                "settled queries past their deadline",
+            ).inc(missed)
+        reg.counter(
+            "repro_service_degradation_level_total",
+            "queries served per ladder level (level 0 = full quality)",
+            labels=("level",),
+        ).inc(len(settled), level=0 if deg is None else deg["level"])
+        reg.gauge(
+            "repro_service_pending", "requests queued, not yet executing",
+        ).set(pending_now)
+        reg.gauge(
+            "repro_service_outstanding", "requests queued or executing",
+        ).set(outstanding_now)
 
     def _simulate_restart(self, *, kill: bool) -> ServiceRestarted:
         """A drawn ``crash``/``restart`` fault: the in-memory engine dies.
@@ -1293,6 +1443,14 @@ class SummarizeService:
             self._stats["restarts"] += 1
             if kill:
                 self._killed = True
+        obs.get_bus().emit(
+            "restart", subsystem="service",
+            request_ids=tuple(it.ticket.index for it in drained),
+            kill=kill,
+        )
+        obs.get_registry().counter(
+            "repro_service_restarts_total", "simulated engine restarts",
+        ).inc()
         self._resolve_err(drained, err)
         return err
 
@@ -1318,25 +1476,31 @@ class SummarizeService:
         and the fault-tolerance counters — retried attempts, chunks that
         reached failover, queries served from per-query isolation, watchdog
         chunk timeouts, and queries served degraded."""
+        # The whole snapshot — including every derived value — is computed
+        # under the ticket-settle lock, so the returned dict is one
+        # consistent point in time: ``queries`` can never disagree with the
+        # ``queue_delay_s_sum`` it divides (the old read-then-derive path
+        # could tear between a settle and the division).
         with self._cond:
-            st = dict(self._stats)
-            st["triggers"] = dict(self._stats["triggers"])
-        q = max(st["queries"], 1)
-        return {
-            "queries": st["queries"],
-            "batches": st["batches"],
-            "padding_waste_frac": st["padded_slots"] / max(st["slots"], 1),
-            "queue_delay_s_mean": st["queue_delay_s_sum"] / q,
-            "queue_delay_s_max": st["queue_delay_s_max"],
-            "exec_s_total": st["exec_s_sum"],
-            "compiled_signatures": len(st["lanes"]),
-            "triggers": st["triggers"],
-            "deadlines_missed": st["deadlines_missed"],
-            "failed": st["failed"],
-            "retries": st["retries"],
-            "failovers": st["failovers"],
-            "isolated_queries": st["isolated_queries"],
-            "chunk_timeouts": st["chunk_timeouts"],
-            "degraded": st["degraded"],
-            "restarts": st["restarts"],
-        }
+            st = self._stats
+            q = max(st["queries"], 1)
+            return {
+                "queries": st["queries"],
+                "batches": st["batches"],
+                "padding_waste_frac": (
+                    st["padded_slots"] / max(st["slots"], 1)
+                ),
+                "queue_delay_s_mean": st["queue_delay_s_sum"] / q,
+                "queue_delay_s_max": st["queue_delay_s_max"],
+                "exec_s_total": st["exec_s_sum"],
+                "compiled_signatures": len(st["lanes"]),
+                "triggers": dict(st["triggers"]),
+                "deadlines_missed": st["deadlines_missed"],
+                "failed": st["failed"],
+                "retries": st["retries"],
+                "failovers": st["failovers"],
+                "isolated_queries": st["isolated_queries"],
+                "chunk_timeouts": st["chunk_timeouts"],
+                "degraded": st["degraded"],
+                "restarts": st["restarts"],
+            }

@@ -38,7 +38,10 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import time
 import zlib
+
+from repro import obs
 
 _MAGIC = 0x314C4157                    # "WAL1", little-endian
 _HEADER = struct.Struct("<IBQII")      # magic, type, seq, plen, crc32
@@ -100,11 +103,20 @@ class WalWriter:
         Returns only when the record is on its way to disk — the caller's
         acknowledgement point."""
         crc = _crc(rtype, seq, payload)
+        t0 = time.perf_counter()
         self._f.write(_HEADER.pack(_MAGIC, rtype, seq, len(payload), crc))
         self._f.write(payload)
         self._f.flush()
         if self.fsync:
+            t_sync = time.perf_counter()
             os.fsync(self._f.fileno())
+            obs.get_registry().histogram(
+                "repro_wal_fsync_seconds", "WAL fsync latency per append",
+            ).observe(time.perf_counter() - t_sync)
+        obs.get_registry().histogram(
+            "repro_wal_append_seconds",
+            "WAL append latency (write + flush + optional fsync)",
+        ).observe(time.perf_counter() - t0)
 
     def tell(self) -> int:
         return self._f.tell()
